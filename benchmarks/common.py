@@ -1,0 +1,39 @@
+"""Shared fixtures for the paper-figure benchmarks (CPU-scaled corpora)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.core.types import LDAConfig
+from repro.data import lda_corpus, train_test_split_counts
+
+
+@functools.lru_cache(maxsize=4)
+def corpus(seed=0, docs=240, W=400, K=16):
+    """ENRON-shaped (Zipf-ish marginals via the LDA generative model)."""
+    d, stats, phi = lda_corpus(seed, docs, W, K, doc_len_mean=80)
+    return d, stats, phi
+
+
+def split(docs, seed=0):
+    return train_test_split_counts(list(docs), seed)
+
+
+def base_cfg(**kw) -> LDAConfig:
+    d = dict(vocab_size=400, num_topics=16, lambda_w=0.1, lambda_k_abs=8,
+             inner_iters=12, residual_tol=0.02)
+    d.update(kw)
+    return LDAConfig(**d)
+
+
+def timed(fn, *args, repeats=1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    return out, (time.time() - t0) / repeats

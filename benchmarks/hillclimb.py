@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-probe a cell with the current code (and
+optional config overrides) and diff the roofline terms against the stored
+baseline record.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen2-72b \
+      --shape train_4k [--moe-combine scatter] [--tag iterA]
+"""
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import get_config                    # noqa: E402
+from repro.configs.base import SHAPES                   # noqa: E402
+from repro.launch import roofline as rl                 # noqa: E402
+from repro.launch.dryrun import (extrapolate_costs,     # noqa: E402
+                                 probe_plan, _compile_cell)
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+BASE = os.path.join(os.path.dirname(__file__), "results", "dryrun_baseline")
+OUT = os.path.join(os.path.dirname(__file__), "results", "hillclimb")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--moe-combine", default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.moe_combine and cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, combine=args.moe_combine))
+    if args.capacity_factor and cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=args.capacity_factor))
+    if args.attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=args.attn_chunk)
+    if args.remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=args.remat_policy)
+
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    costs = extrapolate_costs(cfg, shape, mesh)
+    terms = rl.roofline_terms(costs["flops"], costs["bytes"],
+                              costs["coll_total"])
+    dt = time.time() - t0
+
+    base_fp = os.path.join(BASE, f"{args.arch}__{args.shape}__single.json")
+    base = json.load(open(base_fp)) if os.path.exists(base_fp) else {}
+
+    def row(name, new, old):
+        delta = (f"{new / old:5.2f}x" if old else "  -  ")
+        print(f"  {name:14s} new={new:10.3e}  base={old or 0:10.3e}  {delta}")
+
+    print(f"[{args.tag}] {args.arch}/{args.shape}  (probe {dt:.0f}s)")
+    row("compute_s", terms.compute_s, base.get("compute_s"))
+    row("memory_s", terms.memory_s, base.get("memory_s"))
+    row("collective_s", terms.collective_s, base.get("collective_s"))
+    for b in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all"):
+        row(f"coll:{b}", costs.get(f"coll_{b}", 0.0),
+            (base.get("collective_bytes") or {}).get(b))
+    print(f"  dominant: {terms.dominant} "
+          f"(baseline: {base.get('dominant', '?')})")
+
+    os.makedirs(OUT, exist_ok=True)
+    rec = {"arch": args.arch, "shape": args.shape, "tag": args.tag,
+           "overrides": {k: v for k, v in vars(args).items()
+                         if v is not None and k not in ("arch", "shape",
+                                                        "tag")},
+           "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+           "collective_s": terms.collective_s, "dominant": terms.dominant,
+           "costs": {k: v for k, v in costs.items()
+                     if not k.startswith("probe")}}
+    with open(os.path.join(OUT, f"{args.arch}__{args.shape}__{args.tag}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

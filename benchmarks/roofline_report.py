@@ -1,0 +1,136 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    return f"{x:.2e}" if isinstance(x, (int, float)) else "-"
+
+
+def fmt_gb(x):
+    return f"{x / 1e9:.1f}" if isinstance(x, (int, float)) else "-"
+
+
+def load(dirname):
+    recs = []
+    for fp in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fp) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def sort_key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"])
+            if r["shape"] in SHAPE_ORDER else 9, r["mesh"])
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | compile s | live GB/chip | "
+            "args GB | temp GB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=sort_key):
+        mem = r.get("memory", {}) or {}
+        status = r.get("status", "?")
+        short = "ok" if status == "ok" else (
+            "skip" if status.startswith("skipped") else "FAIL")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {short} | "
+            f"{r.get('compile_s', '-')} | {fmt_gb(mem.get('live_bytes'))} | "
+            f"{fmt_gb(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_gb(mem.get('temp_size_in_bytes'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPs/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=sort_key):
+        if r.get("mesh") != "single":
+            continue
+        if r.get("status", "").startswith("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                        f"skipped (full attention) | - | - |")
+            continue
+        if "dominant" not in r:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs):
+    """worst roofline fraction, most collective-bound, most representative."""
+    ok = [r for r in recs if r.get("mesh") == "single" and "dominant" in r]
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["collective_s"] /
+               max(r["compute_s"] + r["memory_s"] + r["collective_s"], 1e-30))
+    return worst, coll
+
+
+def compare_table(base_recs, opt_recs):
+    base = {(r["arch"], r["shape"]): r for r in base_recs
+            if r.get("mesh") == "single" and "dominant" in r}
+    rows = ["| arch | shape | coll s (base→opt) | mem s (base→opt) | "
+            "dominant (opt) | speedup of dominant |",
+            "|---|---|---|---|---|---|"]
+    for r in sorted(opt_recs, key=sort_key):
+        if r.get("mesh") != "single" or "dominant" not in r:
+            continue
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        dom = r["dominant"]
+        key = {"compute": "compute_s", "memory": "memory_s",
+               "collective": "collective_s"}[b["dominant"]]
+        sp = b[key] / max(r[key], 1e-30)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_s(b['collective_s'])}→{fmt_s(r['collective_s'])} | "
+            f"{fmt_s(b['memory_s'])}→{fmt_s(r['memory_s'])} | {dom} | "
+            f"{sp:.1f}x |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__),
+                                                  "results", "dryrun"))
+    ap.add_argument("--baseline", default=None,
+                    help="second dir: render a baseline-vs-optimized diff")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.baseline:
+        print("## Perf: baseline vs optimized (single-pod)\n")
+        print(compare_table(load(args.baseline), recs))
+        print()
+    print("## Dry-run (memory fit, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, per device per step)\n")
+    print(roofline_table(recs))
+    if any("dominant" in r for r in recs):
+        worst, coll = pick_hillclimb(recs)
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.4f})")
+        print(f"most collective-bound:  {coll['arch']}/{coll['shape']} "
+              f"(coll {fmt_s(coll['collective_s'])} vs comp "
+              f"{fmt_s(coll['compute_s'])})")
+
+
+if __name__ == "__main__":
+    main()

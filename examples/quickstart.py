@@ -1,0 +1,44 @@
+"""Quickstart: train LDA with POBP on a synthetic corpus, compare the
+paper's power-selected sync against the dense MPA baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LDAConfig, perplexity, run_stream
+from repro.data import (docs_to_padded, lda_corpus, sharded_minibatch_stream,
+                        train_test_split_counts)
+
+
+def main():
+    # a small corpus with known LDA structure
+    docs, stats, _ = lda_corpus(seed=0, num_docs=300, vocab_size=400,
+                                num_topics=16, doc_len_mean=80)
+    print(f"corpus: {stats}")
+    train, test = train_test_split_counts(docs, seed=0)
+    tr_b, te_b = docs_to_padded(train), docs_to_padded(test)
+    key = jax.random.PRNGKey(5)
+
+    cfg = LDAConfig(vocab_size=400, num_topics=16, lambda_w=0.1,
+                    lambda_k_abs=8, inner_iters=40, residual_tol=0.03)
+
+    for mode in ("power", "dense"):
+        phi, hist, meter = run_stream(
+            sharded_minibatch_stream(train, 100, num_shards=4), cfg,
+            num_shards=4, sync_mode=mode, seed=1)
+        ppl = perplexity.evaluate(key, phi, tr_b, te_b, cfg)
+        loop_phase = "power" if mode == "power" else "dense_loop"
+        print(f"[{mode:5s}] perplexity={ppl:7.2f}  "
+              f"loop sync bytes/iter={meter.phase_bytes(loop_phase):,}  "
+              f"mini-batches={len(hist)}")
+
+    rand = perplexity.evaluate(key, jnp.zeros((400, 16)), tr_b, te_b, cfg)
+    print(f"[random] perplexity={rand:7.2f}  (untrained baseline)")
+    print("power sync sends ~= lambda_w * lambda_k of the dense payload "
+          "per iteration (paper Eq. 6 vs Eq. 5) at comparable perplexity.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""granite-3-2b [dense]: 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155 — GQA [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b",
+    family="dense",
+    vocab_size=49155,
+    d_model=2048,
+    n_layers=40,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    head_dim=64,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    attn_type="gqa",
+    norm="rms",
+    act="silu",
+)

@@ -1,0 +1,12 @@
+"""repro.core — the paper's contribution: OBP / POBP with the
+communication-efficient power-selection MPA, plus reference baselines."""
+
+from repro.core.types import LDAConfig, LDAState, MiniBatch  # noqa: F401
+from repro.core.pobp import (  # noqa: F401
+    dense_sweep,
+    selective_sweep,
+    pobp_minibatch,
+    make_sim_minibatch_fn,
+    run_stream,
+)
+from repro.core import ref, power, residuals, sync, perplexity  # noqa: F401

@@ -1,0 +1,119 @@
+"""Collapsed Gibbs sampling for LDA — the paper's GS-family comparator
+(PGS [15] / PFGS [6] / PSGS [21] / YLDA [14] are all GS-based).
+
+Token-level sequential sampler under ``lax.scan`` (the textbook Griffiths &
+Steyvers chain).  The *parallel* variant follows the AD-LDA approximation of
+Newman et al. [15]: shards sample independently against a stale global
+word-topic count and all-reduce count deltas at the end of each sweep —
+which is exactly why PGS "can yield only an approximate result" (§2) while
+BP-based sync is exact.  Used by accuracy/speed benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import LDAConfig, MiniBatch
+
+
+def tokens_from_batch(batch: MiniBatch) -> Tuple[np.ndarray, np.ndarray]:
+    """Expand padded-CSR counts into flat (doc_id, word_id) token arrays."""
+    wid = np.asarray(batch.word_ids)
+    cnt = np.asarray(batch.counts).astype(np.int64)
+    docs, words = [], []
+    for d in range(wid.shape[0]):
+        for l in range(wid.shape[1]):
+            c = int(cnt[d, l])
+            if c > 0:
+                docs.extend([d] * c)
+                words.extend([int(wid[d, l])] * c)
+    return np.asarray(docs, np.int32), np.asarray(words, np.int32)
+
+
+def gibbs_init(key: jax.Array, doc_ids, word_ids, D: int, cfg: LDAConfig):
+    """Random topic assignment + count matrices (n_dk, n_wk, n_k)."""
+    T = doc_ids.shape[0]
+    z = jax.random.randint(key, (T,), 0, cfg.num_topics)
+    n_dk = jnp.zeros((D, cfg.num_topics), jnp.float32).at[doc_ids, z].add(1.0)
+    n_wk = jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32).at[word_ids, z].add(1.0)
+    n_k = jnp.sum(n_wk, axis=0)
+    return z, n_dk, n_wk, n_k
+
+
+def gibbs_sweep(key: jax.Array, z, n_dk, n_wk, n_k, doc_ids, word_ids, cfg: LDAConfig):
+    """One full sequential sweep over all tokens."""
+    W = cfg.vocab_size
+
+    def step(carry, inp):
+        z_t, d, w, k_old_key = inp
+        key_t = k_old_key
+        n_dk, n_wk, n_k = carry
+        # remove current assignment
+        n_dk = n_dk.at[d, z_t].add(-1.0)
+        n_wk = n_wk.at[w, z_t].add(-1.0)
+        n_k = n_k.at[z_t].add(-1.0)
+        logits = (jnp.log(n_dk[d] + cfg.alpha)
+                  + jnp.log(n_wk[w] + cfg.beta)
+                  - jnp.log(n_k + W * cfg.beta))
+        z_new = jax.random.categorical(key_t, logits)
+        n_dk = n_dk.at[d, z_new].add(1.0)
+        n_wk = n_wk.at[w, z_new].add(1.0)
+        n_k = n_k.at[z_new].add(1.0)
+        return (n_dk, n_wk, n_k), z_new
+
+    keys = jax.random.split(key, z.shape[0])
+    (n_dk, n_wk, n_k), z_new = jax.lax.scan(
+        step, (n_dk, n_wk, n_k), (z, doc_ids, word_ids, keys))
+    return z_new, n_dk, n_wk, n_k
+
+
+def run_gibbs(key: jax.Array, batch: MiniBatch, cfg: LDAConfig, sweeps: int):
+    """Batch collapsed GS.  Returns (phi_hat[W, K], theta_hat[D, K])."""
+    doc_ids, word_ids = tokens_from_batch(batch)
+    doc_ids, word_ids = jnp.asarray(doc_ids), jnp.asarray(word_ids)
+    key, sub = jax.random.split(key)
+    z, n_dk, n_wk, n_k = gibbs_init(sub, doc_ids, word_ids, batch.num_docs, cfg)
+    sweep = jax.jit(lambda k, z, a, b, c: gibbs_sweep(k, z, a, b, c,
+                                                      doc_ids, word_ids, cfg))
+    for _ in range(sweeps):
+        key, sub = jax.random.split(key)
+        z, n_dk, n_wk, n_k = sweep(sub, z, n_dk, n_wk, n_k)
+    return n_wk, n_dk
+
+
+def run_parallel_gibbs(key: jax.Array, batches, cfg: LDAConfig, sweeps: int):
+    """AD-LDA (PGS): shards sweep independently, sync n_wk deltas per sweep.
+
+    `batches`: list of per-shard MiniBatch.  Returns (phi_hat, comm_bytes).
+    """
+    shards = []
+    for i, b in enumerate(batches):
+        d, w = tokens_from_batch(b)
+        shards.append((jnp.asarray(d), jnp.asarray(w), b.num_docs))
+    key, *subs = jax.random.split(key, len(shards) + 1)
+    states = []
+    n_wk_glob = jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32)
+    for (d, w, nd), sk in zip(shards, subs):
+        z, n_dk, n_wk, n_k = gibbs_init(sk, d, w, nd, cfg)
+        states.append([z, n_dk])
+        n_wk_glob = n_wk_glob + n_wk
+    comm_bytes = 0
+    for s in range(sweeps):
+        n_k_glob = jnp.sum(n_wk_glob, axis=0)
+        deltas = jnp.zeros_like(n_wk_glob)
+        for i, ((d, w, nd), st) in enumerate(zip(shards, states)):
+            key, sub = jax.random.split(key)
+            z, n_dk = st
+            z2, n_dk2, n_wk2, _ = gibbs_sweep(sub, z, n_dk, n_wk_glob, n_k_glob,
+                                              d, w, cfg)
+            local_before = jnp.zeros_like(n_wk_glob).at[w, z].add(1.0)
+            local_after = jnp.zeros_like(n_wk_glob).at[w, z2].add(1.0)
+            deltas = deltas + (local_after - local_before)
+            states[i] = [z2, n_dk2]
+        n_wk_glob = n_wk_glob + deltas            # Eq. (4) style dense sync
+        comm_bytes += int(n_wk_glob.size) * 4 * len(shards)
+    return n_wk_glob, comm_bytes

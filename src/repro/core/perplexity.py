@@ -1,0 +1,59 @@
+"""Predictive perplexity (paper Eq. 20, §4 protocol).
+
+Protocol: per document, tokens are split 80/20.  With phi fixed, theta is
+estimated on the 80% split by BP fold-in from a fixed random init; perplexity
+is evaluated on the held-out 20% split.  Lower is better.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LDAConfig, MiniBatch
+
+
+def normalize_phi(phi_acc_wk: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """phi[w, k] = (phi_hat + beta) / sum_w (phi_hat + beta)  — per-topic normalize."""
+    sm = phi_acc_wk + beta
+    return sm / jnp.sum(sm, axis=0, keepdims=True)
+
+
+def fold_in_theta(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
+                  cfg: LDAConfig, iters: int = 30) -> jnp.ndarray:
+    """Estimate theta[D, K] on the training split with phi fixed (BP fold-in)."""
+    D, L = batch.word_ids.shape
+    K = phi_norm_wk.shape[1]
+    u = jax.random.uniform(key, (D, L, K), minval=0.01, maxval=1.0)
+    mu = u / jnp.sum(u, -1, keepdims=True)
+    phi_tok = jnp.take(phi_norm_wk, batch.word_ids, axis=0)      # [D, L, K]
+    c = batch.counts[..., None]
+
+    def body(mu, _):
+        theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
+        th = theta[:, None, :] - c * mu + cfg.alpha
+        unnorm = th * phi_tok
+        mu = unnorm / jnp.maximum(jnp.sum(unnorm, -1, keepdims=True), 1e-30)
+        return mu, None
+
+    mu, _ = jax.lax.scan(body, mu, None, length=iters)
+    theta = jnp.einsum("dl,dlk->dk", batch.counts, mu) + cfg.alpha
+    return theta / jnp.sum(theta, -1, keepdims=True)
+
+
+def predictive_perplexity(theta: jnp.ndarray, phi_norm_wk: jnp.ndarray,
+                          test: MiniBatch) -> jnp.ndarray:
+    """Eq. (20) on the held-out split."""
+    phi_tok = jnp.take(phi_norm_wk, test.word_ids, axis=0)       # [D, L, K]
+    p = jnp.einsum("dk,dlk->dl", theta, phi_tok)
+    logp = jnp.where(test.counts > 0, jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+    n = jnp.maximum(jnp.sum(test.counts), 1.0)
+    return jnp.exp(-jnp.sum(test.counts * logp) / n)
+
+
+def evaluate(key: jax.Array, phi_acc_wk: jnp.ndarray, train: MiniBatch,
+             test: MiniBatch, cfg: LDAConfig, fold_iters: int = 30) -> float:
+    """End-to-end: normalize phi, fold in theta, score the 20% split."""
+    phi_norm = normalize_phi(phi_acc_wk, cfg.beta)
+    theta = fold_in_theta(key, train, phi_norm, cfg, iters=fold_iters)
+    return float(predictive_perplexity(theta, phi_norm, test))

@@ -1,0 +1,330 @@
+"""POBP — parallel online belief propagation for LDA (the paper's Fig. 4).
+
+One code path serves every execution mode:
+
+  - **real mesh**: the per-shard functions below run under ``shard_map``
+    with documents sharded over the ``data`` (and ``pod``) mesh axes and,
+    optionally, topics sharded over the ``model`` axis
+    (``launch/mesh.py`` + ``launch/dryrun.py``);
+  - **simulation**: the same functions run under ``jax.vmap(axis_name=...)``
+    with a leading shard axis — bit-identical collectives on one CPU device
+    (tests, paper-figure benchmarks);
+  - **OBP** (N=1): a ``LocalReducer`` degenerates every psum to identity —
+    "If N = 1, POBP reduces to the OBP algorithm" (§3.2);
+  - **batch BP** (M=1): one mini-batch covering the corpus — "If M = 1,
+    POBP reduces to the parallel batch BP algorithm" (§3.2).
+
+Sync modes:
+  - ``power``  — the paper's communication-efficient MPA: dense sync at
+    t=1, packed [P, Pk] power-submatrix sync for t>=2 (Eq. 6);
+  - ``dense``  — the classic MPA baseline (Newman et al.; Eq. 4/5):
+    full phi matrix every iteration.  Implemented for the paper's
+    before/after comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import power as pw
+from repro.core.residuals import mean_residual, token_scatter_wk
+from repro.core.sync import CommMeter, LocalReducer, Reducer
+from repro.core.types import LDAConfig, MiniBatch
+
+
+# --------------------------------------------------------------------------
+# dense (full) sweep — Fig. 4 lines 3-8 and the `dense` sync mode
+# --------------------------------------------------------------------------
+
+def dense_sweep(
+    batch: MiniBatch,
+    mu: jnp.ndarray,
+    phi_eff_wk: jnp.ndarray,
+    phi_tot: jnp.ndarray,
+    cfg: LDAConfig,
+    model_reducer: Reducer,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One synchronous full update of all messages (Eq. 1).
+
+    phi_eff_wk [W, Kl] is the *effective* topic-word statistic (accumulated
+    prior + current-mini-batch contribution, already synchronized over data
+    shards).  Kl is the local topic-shard width.  Returns (mu_new, r_wk).
+    """
+    W = cfg.vocab_size
+    theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)           # Eq. (2), local topics
+    c = batch.counts[..., None]
+    self_c = c * mu
+    th = theta[:, None, :] - self_c + cfg.alpha
+    ph = jnp.take(phi_eff_wk, batch.word_ids, axis=0) - self_c + cfg.beta
+    pt = phi_tot[None, None, :] - self_c + W * cfg.beta
+    unnorm = th * ph / pt
+    norm = model_reducer.psum(jnp.sum(unnorm, axis=-1, keepdims=True),
+                              "model_norm", compress=False)
+    mu_new = unnorm / norm
+    r_wk = token_scatter_wk(batch.word_ids, c * jnp.abs(mu_new - mu), W)
+    return mu_new, r_wk
+
+
+# --------------------------------------------------------------------------
+# selective sweep — Fig. 4 lines 15-21 (power words x power topics only)
+# --------------------------------------------------------------------------
+
+def selective_sweep(
+    batch: MiniBatch,
+    mu: jnp.ndarray,
+    theta: jnp.ndarray,
+    phi_eff_wk: jnp.ndarray,
+    phi_tot: jnp.ndarray,
+    sel_w: jnp.ndarray,           # [P]      power word ids (identical on all shards)
+    sel_k: jnp.ndarray,           # [P, Pk]  power topic ids per power word (local shard)
+    cfg: LDAConfig,
+):
+    """Update messages only at (power word, power topic) coordinates.
+
+    Never materializes a [W, K] intermediate: token deltas scatter straight
+    into the packed [P, Pk] sync buffers (the TPU-native formulation of the
+    paper's sparse communication — DESIGN.md §2).
+
+    Returns (mu_new, theta_new, delta_phi_packed, r_packed).
+    """
+    D, L = batch.word_ids.shape
+    P, Pk = sel_k.shape
+    word_row = pw.word_to_row(sel_w, cfg.vocab_size)             # [W]
+    p_tok = jnp.take(word_row, batch.word_ids, axis=0)           # [D, L] row or -1
+    is_power = p_tok >= 0
+    p_safe = jnp.where(is_power, p_tok, 0)
+    k_tok = jnp.take(sel_k, p_safe, axis=0)                      # [D, L, Pk]
+
+    c = batch.counts[..., None]                                  # [D, L, 1]
+    mu_sel = jnp.take_along_axis(mu, k_tok, axis=-1)             # [D, L, Pk]
+    sel_mass = jnp.sum(mu_sel, axis=-1, keepdims=True)           # conserved per shard
+    self_c = c * mu_sel
+    theta_sel = jnp.take_along_axis(
+        jnp.broadcast_to(theta[:, None, :], (D, L, theta.shape[-1])), k_tok, axis=-1)
+    phi_pack = pw.pack_rows(phi_eff_wk, sel_w, sel_k)            # [P, Pk]
+    phi_sel = jnp.take(phi_pack, p_safe, axis=0)                 # [D, L, Pk]
+    pt_sel = jnp.take(phi_tot, k_tok)                            # [D, L, Pk]
+
+    th = theta_sel - self_c + cfg.alpha
+    ph = phi_sel - self_c + cfg.beta
+    pt = pt_sel - self_c + cfg.vocab_size * cfg.beta
+    u = th * ph / pt
+    # renormalize within the selected coordinates, conserving their old mass
+    # (unselected message entries stay put => sum_k mu == 1 is invariant).
+    mu_new_sel = u * sel_mass / jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), 1e-30)
+    mu_new_sel = jnp.where(is_power[..., None], mu_new_sel, mu_sel)
+
+    d_mu = mu_new_sel - mu_sel                                   # [D, L, Pk]
+    mu_new = jnp.put_along_axis(mu, k_tok, mu_new_sel, axis=-1, inplace=False)
+
+    # theta update: scatter c * d_mu into [D, Kl] at selected topic coords
+    d_idx = jnp.broadcast_to(jnp.arange(D)[:, None, None], (D, L, Pk))
+    theta_new = theta.at[d_idx, k_tok].add((c * d_mu))
+
+    # packed sync buffers: scatter straight to [P, Pk] (row==P drops padding)
+    p_drop = jnp.where(is_power, p_tok, P).reshape(-1)           # [D*L]
+    dv = (c * d_mu).reshape(-1, Pk)
+    rv = (c * jnp.abs(d_mu)).reshape(-1, Pk)
+    delta_phi_packed = jnp.zeros((P, Pk), mu.dtype).at[p_drop].add(dv, mode="drop")
+    r_packed = jnp.zeros((P, Pk), mu.dtype).at[p_drop].add(rv, mode="drop")
+    return mu_new, theta_new, delta_phi_packed, r_packed
+
+
+# --------------------------------------------------------------------------
+# the per-shard mini-batch routine (Fig. 4 body, one m)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MinibatchResult:
+    phi_acc_new: jnp.ndarray       # [W, Kl] accumulated statistic after this batch
+    iters: jnp.ndarray             # iterations actually run (incl. the dense one)
+    mean_r: jnp.ndarray            # final mean residual (line 26 quantity)
+    mu: jnp.ndarray                # final messages (for theta/perplexity)
+    theta: jnp.ndarray             # final doc-topic statistics [Dl, Kl]
+
+
+def pobp_minibatch(
+    batch: MiniBatch,
+    phi_acc_wk: jnp.ndarray,
+    key: jax.Array,
+    total_tokens: jnp.ndarray,
+    delta_weight: jnp.ndarray,
+    cfg: LDAConfig,
+    data_reducer: Reducer,
+    model_reducer: Optional[Reducer] = None,
+    sync_mode: str = "power",
+) -> MinibatchResult:
+    """Run one mini-batch to convergence on this shard (all Fig. 4 lines).
+
+    `batch` is this shard's document slice; `phi_acc_wk` [W, Kl] is the
+    synchronized accumulated statistic (identical on all data shards);
+    `total_tokens` is the *global* mini-batch token count (psum'd once by the
+    caller); `delta_weight` scales the accumulated gradient (Eq. 11).
+    """
+    model_reducer = model_reducer or LocalReducer(meter=data_reducer.meter)
+    W = cfg.vocab_size
+    Kl = phi_acc_wk.shape[1]
+    P, Pk = cfg.num_power_words, min(cfg.num_power_topics, Kl)
+
+    # ---- lines 3-8: random init, local stats, first dense update ----
+    u0 = jax.random.uniform(key, (*batch.word_ids.shape, Kl), minval=0.01, maxval=1.0)
+    mu0 = u0 / model_reducer.psum(jnp.sum(u0, -1, keepdims=True), "model_norm",
+                                  compress=False)
+    delta_local0 = token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu0, W)
+    phi_eff = phi_acc_wk + delta_local0          # local phi^0 (Fig. 4 line 5)
+    phi_tot = jnp.sum(phi_eff, axis=0)
+    if cfg.impl == "pallas" and isinstance(model_reducer, LocalReducer):
+        # fused Pallas kernel (normalization in-kernel => K must be unsharded)
+        from repro.kernels.bp_update.ops import dense_sweep_pallas
+        mu1, r_wk_local = dense_sweep_pallas(batch, mu0, phi_eff, phi_tot, cfg)
+    else:
+        mu1, r_wk_local = dense_sweep(batch, mu0, phi_eff, phi_tot, cfg,
+                                      model_reducer)
+
+    # ---- lines 9-10: dense synchronization of phi and r ----
+    delta_glob = data_reducer.psum(
+        token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu1, W), "dense")
+    phi_eff = phi_acc_wk + delta_glob
+    phi_tot = jnp.sum(phi_eff, axis=0)
+    r_glob = data_reducer.psum(r_wk_local, "dense")
+    theta = jnp.einsum("dl,dlk->dk", batch.counts, mu1)
+    r_w = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw", compress=False)
+
+    if sync_mode == "power":
+        carry0 = (mu1, theta, phi_eff, phi_tot, r_glob, r_w,
+                  jnp.asarray(1, jnp.int32))
+
+        def cond(carry):
+            *_, r_w_c, t = carry
+            return jnp.logical_and(t < cfg.inner_iters,
+                                   mean_residual(r_w_c, total_tokens) > cfg.residual_tol)
+
+        def body(carry):
+            mu, theta, phi_eff, phi_tot, r_glob, r_w_c, t = carry
+            # lines 12-13 / 27-28: two-step power selection (identical on
+            # every data shard -- computed from synchronized residuals).
+            sel_w = pw.select_power_words(r_w_c, P)
+            sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
+            mu, theta, d_phi_pack, r_pack = selective_sweep(
+                batch, mu, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            # lines 23-24: communicate only the power submatrices
+            d_phi_pack = data_reducer.psum(d_phi_pack, "power")
+            r_pack = data_reducer.psum(r_pack, "power")
+            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_phi_pack)
+            phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_phi_pack)
+            r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
+            r_w_c = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw",
+                                       compress=False)
+            return (mu, theta, phi_eff, phi_tot, r_glob, r_w_c, t + 1)
+
+        mu, theta, phi_eff, phi_tot, r_glob, r_w, t = jax.lax.while_loop(
+            cond, body, carry0)
+    elif sync_mode == "dense":
+        carry0 = (mu1, theta, phi_eff, phi_tot, r_w, jnp.asarray(1, jnp.int32))
+
+        def cond(carry):
+            *_, r_w_c, t = carry
+            return jnp.logical_and(t < cfg.inner_iters,
+                                   mean_residual(r_w_c, total_tokens) > cfg.residual_tol)
+
+        def body(carry):
+            mu, theta, phi_eff, phi_tot, _, t = carry
+            mu, r_wk = dense_sweep(batch, mu, phi_eff, phi_tot, cfg, model_reducer)
+            delta = data_reducer.psum(
+                token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu, W),
+                "dense_loop")
+            phi_eff = phi_acc_wk + delta
+            phi_tot = jnp.sum(phi_eff, axis=0)
+            theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
+            r_w_c = model_reducer.psum(
+                jnp.sum(data_reducer.psum(r_wk, "dense_loop"), axis=1),
+                "model_rw", compress=False)
+            return (mu, theta, phi_eff, phi_tot, r_w_c, t + 1)
+
+        mu, theta, phi_eff, phi_tot, r_w, t = jax.lax.while_loop(cond, body, carry0)
+    else:
+        raise ValueError(f"unknown sync_mode: {sync_mode}")
+
+    # ---- Eq. (11): accumulate this batch's synchronized gradient ----
+    phi_acc_new = phi_acc_wk + delta_weight * (phi_eff - phi_acc_wk)
+    return MinibatchResult(phi_acc_new=phi_acc_new, iters=t,
+                           mean_r=mean_residual(r_w, total_tokens),
+                           mu=mu, theta=theta)
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+def make_sim_minibatch_fn(cfg: LDAConfig, num_shards: int, sync_mode: str = "power",
+                          sync_dtype=jnp.float32):
+    """N-shard simulation on one device: vmap over a leading shard axis with a
+    named axis so lax.psum is bit-identical to the mesh execution.
+
+    Returns (jitted_fn, meter).  jitted_fn(word_ids[N,Dl,L], counts[N,Dl,L],
+    phi_acc[W,Kl], key, delta_weight) -> MinibatchResult with leading N axis
+    on mu/theta and shard-identical phi_acc_new (checked in tests).
+    """
+    meter = CommMeter()
+    if num_shards == 1:
+        reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+    else:
+        from repro.core.sync import MeshReducer
+        reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
+
+    def per_shard(word_ids, counts, phi_acc, key, delta_weight, total_tokens):
+        batch = MiniBatch(word_ids=word_ids, counts=counts)
+        res = pobp_minibatch(batch, phi_acc, key, total_tokens, delta_weight,
+                             cfg, reducer, sync_mode=sync_mode)
+        return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
+
+    def fn(word_ids, counts, phi_acc, key, delta_weight):
+        total = jnp.sum(counts)
+        if num_shards == 1:
+            return per_shard(word_ids, counts, phi_acc, key, delta_weight, total)
+        keys = jax.random.split(key, num_shards)
+        return jax.vmap(per_shard, in_axes=(0, 0, None, 0, None, None),
+                        axis_name="shards")(word_ids, counts, phi_acc, keys,
+                                            delta_weight, total)
+
+    return jax.jit(fn), meter
+
+
+def run_stream(
+    stream,
+    cfg: LDAConfig,
+    num_shards: int = 1,
+    sync_mode: str = "power",
+    seed: int = 0,
+    sync_dtype=jnp.float32,
+    callback=None,
+):
+    """OBP/POBP outer loop over a mini-batch stream (Fig. 4 outer `for m`).
+
+    `stream` yields either MiniBatch (N=1) or [N, Dl, L] stacked arrays.
+    Returns (phi_acc[W, K], history list of per-batch dicts, meter).
+    """
+    import numpy as np
+
+    fn, meter = make_sim_minibatch_fn(cfg, num_shards, sync_mode, sync_dtype)
+    phi_acc = jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    for m, batch in enumerate(stream, start=1):
+        key, sub = jax.random.split(key)
+        wid, cnt = batch.word_ids, batch.counts
+        w = jnp.asarray(cfg.delta_weight(m), jnp.float32)
+        phi_new, iters, mean_r, mu, theta = fn(wid, cnt, phi_acc, sub, w)
+        # shard-identical by construction; take shard 0's copy if stacked
+        phi_acc = phi_new if phi_new.ndim == 2 else phi_new[0]
+        rec = dict(m=m, iters=int(iters if np.ndim(iters) == 0 else iters.reshape(-1)[0]),
+                   mean_r=float(np.asarray(mean_r).reshape(-1)[0]))
+        history.append(rec)
+        if callback is not None:
+            callback(m, phi_acc, rec, theta)
+    return phi_acc, history, meter

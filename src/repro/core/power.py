@@ -1,0 +1,66 @@
+"""Two-step power word / power topic selection (paper §3.1, Fig. 2)
+and the packed gather/scatter ops that realize sparse synchronization.
+
+Layout convention: every *sync-side* matrix is [W, K] ("wk" layout) —
+residual matrix r and phi sufficient statistics alike.  Rows are words,
+so power-word selection is a row gather and power-topic selection a
+per-row column gather, which is exactly the paper's Fig. 2 picture.
+
+Because selection is computed from the *synchronized* residual (Eq. 9),
+every shard computes identical indices — no index traffic is needed,
+only the packed [P, Pk] value tensor crosses the interconnect.  This is
+the property that makes the paper's scheme XLA/TPU-native (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def select_power_words(r_w: jnp.ndarray, num_power_words: int) -> jnp.ndarray:
+    """Top-`num_power_words` vocabulary indices by total residual (Eq. 10).
+
+    The paper uses a partial sort (Fig. 4 lines 12/27); `lax.top_k` is the
+    on-device equivalent.
+    """
+    _, idx = jax.lax.top_k(r_w, num_power_words)
+    return idx.astype(jnp.int32)
+
+
+def select_power_topics(r_wk: jnp.ndarray, word_idx: jnp.ndarray,
+                        num_power_topics: int) -> jnp.ndarray:
+    """Per power word, top-`num_power_topics` topic indices (Fig. 4 lines 13/28).
+
+    r_wk: [W, K] synchronized residual matrix (local K-shard when the topic
+    axis is model-sharded — see DESIGN.md §2 on the per-shard variant).
+    Returns [P, Pk] int32.
+    """
+    rows = jnp.take(r_wk, word_idx, axis=0)          # [P, K]
+    _, idx = jax.lax.top_k(rows, num_power_topics)   # [P, Pk]
+    return idx.astype(jnp.int32)
+
+
+def word_to_row(word_idx: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Inverse map: word -> its row in the packed buffer, or -1 if not selected."""
+    rows = jnp.full((vocab_size,), -1, jnp.int32)
+    return rows.at[word_idx].set(jnp.arange(word_idx.shape[0], dtype=jnp.int32))
+
+
+def pack_rows(mat_wk: jnp.ndarray, word_idx: jnp.ndarray,
+              topic_idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather the [P, Pk] power submatrix out of a [W, K] matrix."""
+    rows = jnp.take(mat_wk, word_idx, axis=0)                    # [P, K]
+    return jnp.take_along_axis(rows, topic_idx, axis=1)          # [P, Pk]
+
+
+def scatter_add_rows(mat_wk: jnp.ndarray, word_idx: jnp.ndarray,
+                     topic_idx: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """mat[word_idx[p], topic_idx[p, j]] += vals[p, j]  (sync of phi deltas, Eq. 4/15)."""
+    return mat_wk.at[word_idx[:, None], topic_idx].add(vals)
+
+
+def scatter_set_rows(mat_wk: jnp.ndarray, word_idx: jnp.ndarray,
+                     topic_idx: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """mat[word_idx[p], topic_idx[p, j]] = vals[p, j]  (residual refresh, Eq. 9)."""
+    return mat_wk.at[word_idx[:, None], topic_idx].set(vals)

@@ -1,0 +1,27 @@
+"""Residual bookkeeping (Eqs. 7-10) and token->matrix scatters.
+
+Residuals drive both convergence detection (Fig. 5: the mean residual
+tracks predictive perplexity) and the dynamic power selection (Fig. 3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def token_scatter_wk(word_ids: jnp.ndarray, values_dlk: jnp.ndarray,
+                     vocab_size: int) -> jnp.ndarray:
+    """Scatter per-token [D, L, K] values into a [W, K] matrix by word id.
+
+    Used for Delta-phi (Eq. 3 contribution) and the residual matrix (Eq. 8).
+    Padding tokens carry zero values, so word id 0 padding is harmless.
+    """
+    K = values_dlk.shape[-1]
+    flat_w = word_ids.reshape(-1)
+    flat_v = values_dlk.reshape(-1, K)
+    return jnp.zeros((vocab_size, K), flat_v.dtype).at[flat_w].add(flat_v)
+
+
+def mean_residual(r_w: jnp.ndarray, total_tokens: jnp.ndarray) -> jnp.ndarray:
+    """Line 26 of Fig. 4: sum_w r_w / sum_{w,d} x_{w,d}."""
+    return jnp.sum(r_w) / jnp.maximum(total_tokens, 1.0)

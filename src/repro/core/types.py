@@ -1,0 +1,114 @@
+"""Core dataclasses for the LDA / POBP stack.
+
+The document-word matrix x[W, D] of the paper is represented in
+*padded-CSR* form per mini-batch: each document d owns up to L distinct
+word slots; slot l holds a vocabulary index ``word_ids[d, l]`` and a count
+``counts[d, l]``.  Padding slots use ``word_ids == 0`` and ``counts == 0``
+(zero count makes every padded contribution vanish; alpha/beta smoothing
+keeps the message update finite there).
+
+Notation maps 1:1 onto the paper (Table 1):
+  D   documents per mini-batch          W   vocabulary size
+  K   topics                            L   max distinct words per doc
+  mu[D, L, K]        messages (Eq. 1)
+  theta_hat[D, K]    doc-topic sufficient statistics (Eq. 2)
+  phi_hat[K, W]      topic-word sufficient statistics (Eq. 3)
+  r[W, K]            residual matrix (Eqs. 7-9)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    """Static configuration of an LDA/POBP run (hashable; safe to close over jit)."""
+
+    vocab_size: int                 # W
+    num_topics: int                 # K
+    alpha: float = 0.1              # Dirichlet prior on theta (paper: 2/K)
+    beta: float = 0.01              # Dirichlet prior on phi   (paper: 0.01)
+    # --- power selection (the paper's contribution) ---
+    lambda_w: float = 0.1           # ratio of power words   (paper default 0.1)
+    lambda_k_abs: int = 50          # number of power topics per word (paper: lambda_K*K = 50)
+    # --- convergence / schedule ---
+    inner_iters: int = 10           # T_m: max message-passing sweeps per mini-batch
+    residual_tol: float = 0.1       # line 26 of Fig. 4: mean residual per token
+    # --- online learning rate (Eq. 11); 'paper' => 1/max(m-1, 1) ---
+    lr_schedule: str = "paper"      # 'paper' | 'power'
+    lr_tau0: float = 1.0            # used by the 'power' schedule (tau0 + m)^-kappa
+    lr_kappa: float = 0.9
+    # --- communication payload ---
+    sync_dtype: str = "float32"     # 'float32' | 'bfloat16' (beyond-paper byte halving)
+    # --- compute backend for the dense sweep ---
+    impl: str = "jnp"               # 'jnp' | 'pallas' (fused bp_update kernel)
+
+    @property
+    def num_power_words(self) -> int:
+        return max(1, int(round(self.lambda_w * self.vocab_size)))
+
+    @property
+    def num_power_topics(self) -> int:
+        return max(1, min(self.lambda_k_abs, self.num_topics))
+
+    def delta_weight(self, m: int) -> float:
+        """Weight on the current mini-batch's unnormalized gradient Delta-phi.
+
+        The paper's Eq. (11) writes a 1/(m-1) learning rate, but (as §3.2.1
+        notes) parameter estimation is invariant to the scaling of sufficient
+        statistics: plain accumulation of the *unnormalized* statistic
+        (Fig. 4 line 5, weight 1.0) IS the Robbins-Monro 1/m rate on the
+        normalized parameter.  'paper' therefore returns 1.0; 'power' gives
+        the OVB-style decaying weight for ablations.
+        """
+        if self.lr_schedule == "paper":
+            return 1.0
+        return float((self.lr_tau0 + m) ** (-self.lr_kappa))
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    """Padded-CSR mini-batch of documents.
+
+    word_ids: int32[D, L]   vocabulary indices (0 for padding)
+    counts:   float32[D, L] word counts        (0 for padding)
+    """
+
+    word_ids: jnp.ndarray
+    counts: jnp.ndarray
+
+    @property
+    def num_docs(self) -> int:
+        return self.word_ids.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.word_ids.shape[1]
+
+    def num_tokens(self) -> jnp.ndarray:
+        return jnp.sum(self.counts)
+
+
+@dataclasses.dataclass
+class LDAState:
+    """Persistent (cross-mini-batch) state of an online run.
+
+    phi_acc[K, W]  accumulated topic-word sufficient statistics (Eq. 11)
+    m              1-indexed count of mini-batches consumed so far
+    """
+
+    phi_acc: jnp.ndarray
+    m: int = 0
+
+
+@dataclasses.dataclass
+class SweepStats:
+    """Diagnostics from one message-passing sweep."""
+
+    mean_residual: jnp.ndarray            # sum_w r_w / sum tokens (line 26)
+    comm_bytes: int                       # bytes all-reduced this sweep (analytic meter)
+    selected_words: Optional[jnp.ndarray] = None   # power word indices, if selective

@@ -1,0 +1,12 @@
+from repro.data.synthetic import (  # noqa: F401
+    lda_corpus,
+    zipf_corpus,
+    CorpusStats,
+)
+from repro.data.batching import (  # noqa: F401
+    docs_to_padded,
+    minibatch_stream,
+    sharded_minibatch_stream,
+    train_test_split_counts,
+    shard_docs,
+)

@@ -1,0 +1,144 @@
+"""Padded-CSR batching + mini-batch streaming.
+
+The streaming layer realizes the paper's §2.1 contract: mini-batches are
+loaded one at a time (constant memory), swept to convergence, then freed.
+A background prefetch thread overlaps host-side batch construction with
+device compute (the TPU analogue of the paper's disk-as-extension trick).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import MiniBatch
+from repro.data.synthetic import Doc
+
+
+def docs_to_padded(docs: Sequence[Doc], max_len: int | None = None,
+                   pad_multiple: int = 8) -> MiniBatch:
+    """Pack a list of (word_ids, counts) docs into a padded MiniBatch.
+
+    Pads L up to a multiple of ``pad_multiple`` (TPU lane friendliness).
+    Documents longer than max_len keep their ``max_len`` highest-count words
+    (the tail carries negligible probability mass — same truncation argument
+    the paper uses for the vocabulary).
+    """
+    import jax.numpy as jnp
+
+    if max_len is None:
+        max_len = max((len(d[0]) for d in docs), default=1)
+    max_len = max(1, -(-max_len // pad_multiple) * pad_multiple)
+    D = len(docs)
+    wid = np.zeros((D, max_len), np.int32)
+    cnt = np.zeros((D, max_len), np.float32)
+    for i, (ids, counts) in enumerate(docs):
+        if len(ids) > max_len:
+            keep = np.argsort(-counts)[:max_len]
+            ids, counts = ids[keep], counts[keep]
+        wid[i, : len(ids)] = ids
+        cnt[i, : len(ids)] = counts
+    return MiniBatch(word_ids=jnp.asarray(wid), counts=jnp.asarray(cnt))
+
+
+def shard_docs(docs: Sequence[Doc], num_shards: int) -> List[List[Doc]]:
+    """Evenly distribute documents over shards (paper §4: 'evenly distribute
+    D documents to N processors to avoid load imbalance')."""
+    shards: List[List[Doc]] = [[] for _ in range(num_shards)]
+    order = np.argsort([-float(c.sum()) for _, c in docs])  # greedy balance by tokens
+    loads = np.zeros(num_shards)
+    for i in order:
+        j = int(np.argmin(loads))
+        shards[j].append(docs[i])
+        loads[j] += float(docs[i][1].sum())
+    return shards
+
+
+def minibatch_stream(
+    docs: Sequence[Doc],
+    batch_docs: int,
+    max_len: int | None = None,
+    prefetch: int = 2,
+    pad_docs_multiple: int = 1,
+) -> Iterator[MiniBatch]:
+    """Yield MiniBatches of ``batch_docs`` documents with background prefetch."""
+    n_batches = -(-len(docs) // batch_docs)
+
+    def slices():
+        for m in range(n_batches):
+            chunk = list(docs[m * batch_docs: (m + 1) * batch_docs])
+            if pad_docs_multiple > 1 and len(chunk) % pad_docs_multiple:
+                # pad with empty docs so shard_map divisibility holds
+                pad = pad_docs_multiple - len(chunk) % pad_docs_multiple
+                chunk += [(np.zeros(1, np.int32), np.zeros(1, np.float32))] * pad
+            yield docs_to_padded(chunk, max_len)
+
+    if prefetch <= 0:
+        yield from slices()
+        return
+
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    _SENTINEL = object()
+
+    def worker():
+        try:
+            for b in slices():
+                q.put(b)
+        finally:
+            q.put(_SENTINEL)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _SENTINEL:
+            break
+        yield item
+    t.join()
+
+
+def sharded_minibatch_stream(
+    docs: Sequence[Doc],
+    batch_docs: int,
+    num_shards: int,
+    max_len: int | None = None,
+    prefetch: int = 2,
+) -> Iterator[MiniBatch]:
+    """Yield MiniBatches with a leading shard axis [N, Dl, L] (for the
+    vmap-simulated POBP path and for host sharding onto a real mesh)."""
+    import jax.numpy as jnp
+
+    per_shard = -(-batch_docs // num_shards)
+    for mb in minibatch_stream(docs, per_shard * num_shards, max_len,
+                               prefetch, pad_docs_multiple=num_shards):
+        D, L = mb.word_ids.shape
+        yield MiniBatch(
+            word_ids=jnp.reshape(mb.word_ids, (num_shards, D // num_shards, L)),
+            counts=jnp.reshape(mb.counts, (num_shards, D // num_shards, L)),
+        )
+
+
+def train_test_split_counts(docs: Sequence[Doc], seed: int, test_frac: float = 0.2
+                            ) -> Tuple[List[Doc], List[Doc]]:
+    """Per-document 80/20 token split for predictive perplexity (paper §4, Eq. 20).
+
+    Splits each document's *token* multiset, returning (train_docs, test_docs)
+    aligned by position.
+    """
+    rng = np.random.default_rng(seed)
+    train, test = [], []
+    for ids, counts in docs:
+        tr = np.zeros_like(counts)
+        te = np.zeros_like(counts)
+        for j, c in enumerate(counts):
+            k = rng.binomial(int(c), test_frac)
+            te[j] = k
+            tr[j] = c - k
+        keep_tr = tr > 0
+        keep_te = te > 0
+        train.append((ids[keep_tr], tr[keep_tr].astype(np.float32)))
+        test.append((ids[keep_te], te[keep_te].astype(np.float32)))
+    return train, test

@@ -1,0 +1,114 @@
+"""Synthetic corpora with the statistics the paper's data sets exhibit.
+
+Two generators:
+  - ``lda_corpus``: exact LDA generative model (known ground-truth phi) —
+    used for accuracy tests: an inference algorithm must recover topics.
+  - ``zipf_corpus``: Zipf-distributed word frequencies (power-law marginals,
+    Fig. 6 of the paper) — used for power-law/selection benchmarks.
+
+Both return a list of ``(word_ids, counts)`` numpy pairs (one per document)
+plus summary stats mirroring Table 3 (D, W, N_token, NNZ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+Doc = Tuple[np.ndarray, np.ndarray]           # (word_ids[int32], counts[float32])
+
+
+@dataclasses.dataclass
+class CorpusStats:
+    num_docs: int
+    vocab_size: int
+    num_tokens: int
+    nnz: int
+
+    def __str__(self) -> str:  # Table 3 style line
+        return (f"D={self.num_docs} W={self.vocab_size} "
+                f"N_token={self.num_tokens} NNZ={self.nnz}")
+
+
+def _docs_from_token_lists(token_lists: List[np.ndarray], W: int):
+    docs: List[Doc] = []
+    n_tok = 0
+    nnz = 0
+    for toks in token_lists:
+        ids, cnt = np.unique(toks, return_counts=True)
+        docs.append((ids.astype(np.int32), cnt.astype(np.float32)))
+        n_tok += int(toks.size)
+        nnz += int(ids.size)
+    stats = CorpusStats(len(docs), W, n_tok, nnz)
+    return docs, stats
+
+
+def lda_corpus(
+    seed: int,
+    num_docs: int,
+    vocab_size: int,
+    num_topics: int,
+    doc_len_mean: int = 160,
+    alpha: float = 0.1,
+    beta: float = 0.01,
+):
+    """Sample a corpus from the smoothed-LDA generative model.
+
+    Returns (docs, stats, true_phi[K, W]).
+    """
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet(np.full(vocab_size, beta + 0.05), size=num_topics)  # [K, W]
+    token_lists = []
+    for _ in range(num_docs):
+        n = max(4, int(rng.poisson(doc_len_mean)))
+        theta = rng.dirichlet(np.full(num_topics, alpha + 0.05))
+        z = rng.choice(num_topics, size=n, p=theta)
+        # vectorized per-topic word draws
+        toks = np.empty(n, np.int64)
+        for k in np.unique(z):
+            idx = np.nonzero(z == k)[0]
+            toks[idx] = rng.choice(vocab_size, size=idx.size, p=phi[k])
+        token_lists.append(toks)
+    docs, stats = _docs_from_token_lists(token_lists, vocab_size)
+    return docs, stats, phi.astype(np.float32)
+
+
+def lda_corpus_from_phi(seed: int, num_docs: int, phi: np.ndarray,
+                        doc_len_mean: int = 160, alpha: float = 0.1):
+    """Sample documents from a FIXED topic-word matrix phi[K, W] — for
+    streaming scenarios where every mini-batch must share the same
+    ground-truth topics (life-long regime, M -> inf)."""
+    rng = np.random.default_rng(seed)
+    K, W = phi.shape
+    token_lists = []
+    for _ in range(num_docs):
+        n = max(4, int(rng.poisson(doc_len_mean)))
+        theta = rng.dirichlet(np.full(K, alpha + 0.05))
+        z = rng.choice(K, size=n, p=theta)
+        toks = np.empty(n, np.int64)
+        for k in np.unique(z):
+            idx = np.nonzero(z == k)[0]
+            toks[idx] = rng.choice(W, size=idx.size, p=phi[k])
+        token_lists.append(toks)
+    return _docs_from_token_lists(token_lists, W)
+
+
+def zipf_corpus(
+    seed: int,
+    num_docs: int,
+    vocab_size: int,
+    doc_len_mean: int = 160,
+    zipf_s: float = 1.07,
+):
+    """Zipf word marginals (power-law, the regime of Fig. 6).  Returns (docs, stats)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    p = ranks ** (-zipf_s)
+    p /= p.sum()
+    token_lists = []
+    for _ in range(num_docs):
+        n = max(4, int(rng.poisson(doc_len_mean)))
+        token_lists.append(rng.choice(vocab_size, size=n, p=p))
+    return _docs_from_token_lists(token_lists, vocab_size)

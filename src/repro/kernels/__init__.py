@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's inner loop — the BP message update over non-zero doc-word
+entries (Eq. 1) — dominates computation (Table 2: eta*lambda_K*lambda_W*KWDT).
+`bp_update` fuses the update arithmetic, normalization and residual into one
+VMEM-resident pass.  `power_pack` implements the packed gather/scatter of the
+power submatrix (the sync path's memory hot-spot) with MXU-friendly one-hot
+contractions instead of unsupported dynamic gathers.
+
+Kernels target TPU (pl.pallas_call + BlockSpec); on CPU they run with
+``interpret=True`` which executes the kernel body in Python — the mode used
+by this container's test suite.
+"""
+
+import jax
+
+# interpret=True everywhere except on real TPU.
+INTERPRET = jax.default_backend() != "tpu"

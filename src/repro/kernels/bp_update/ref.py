@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused bp_update kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bp_update_tokens_ref(counts_t, mu_t, theta_t, phi_t, phi_tot, *,
+                         alpha: float, beta: float, wbeta: float):
+    """Identical math to kernel.py, plain XLA ops.  [T, K] in, [T, K] out x2."""
+    self_c = counts_t * mu_t
+    th = theta_t - self_c + alpha
+    ph = phi_t - self_c + beta
+    pt = phi_tot - self_c + wbeta
+    u = th * ph / pt
+    mu_new = u / jnp.maximum(jnp.sum(u, -1, keepdims=True), 1e-30)
+    r = counts_t * jnp.abs(mu_new - mu_t)
+    return mu_new, r

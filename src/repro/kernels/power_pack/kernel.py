@@ -1,0 +1,98 @@
+"""Power-submatrix pack/scatter kernels (the sync path's memory hot-spot).
+
+TPU Pallas has no general dynamic gather, so the two-step selection is
+realized TPU-natively:
+
+  - the *row* gather (power words) uses scalar-prefetched indices in the
+    BlockSpec index_map — the DMA engine fetches exactly the selected
+    [1, K] rows of the [W, K] matrix from HBM, never touching the rest;
+  - the *column* gather (power topics, per row) is a one-hot contraction
+    `row[1,K] @ onehot[K,Pk]` on the MXU — branch-free and layout-friendly.
+
+The inverse scatter aliases the destination matrix in-place and adds
+`onehot @ vals` back into the selected rows only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import kernels as K_
+
+
+def _onehot(sel_row: jnp.ndarray, k_width: int) -> jnp.ndarray:
+    """[Pk] int32 -> [Pk, K] f32 one-hot (out-of-range index -> zero row)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (sel_row.shape[0], k_width), 1)
+    return (iota == sel_row[:, None]).astype(jnp.float32)
+
+
+def _pack_kernel(sel_w_ref, sel_k_ref, mat_ref, out_ref):
+    row = mat_ref[...]                                  # [1, K] selected row
+    oh = _onehot(sel_k_ref[0], row.shape[1])            # [Pk, K]
+    out_ref[...] = jax.lax.dot_general(
+        row, oh, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [1, Pk]
+
+
+def _scatter_add_kernel(sel_w_ref, sel_k_ref, vals_ref, mat_ref, out_ref):
+    oh = _onehot(sel_k_ref[0], out_ref.shape[1])        # [Pk, K]
+    contrib = jax.lax.dot_general(
+        vals_ref[...], oh, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [1, K]
+    out_ref[...] = mat_ref[...] + contrib
+
+
+def pack_rows_pallas(mat_wk: jnp.ndarray, sel_w: jnp.ndarray,
+                     sel_k: jnp.ndarray) -> jnp.ndarray:
+    """out[p, j] = mat[sel_w[p], sel_k[p, j]] — [P, Pk] packed submatrix.
+
+    Caller guarantees K % 128 == 0 and Pk % 128 == 0 (ops.py pads).
+    """
+    P, Pk = sel_k.shape
+    W, K = mat_wk.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, Pk), lambda p, sel_w: (p, 0)),          # sel_k
+            pl.BlockSpec((1, K), lambda p, sel_w: (sel_w[p], 0)),    # mat row
+        ],
+        out_specs=pl.BlockSpec((1, Pk), lambda p, sel_w: (p, 0)),
+    )
+    return pl.pallas_call(
+        _pack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, Pk), jnp.float32),
+        interpret=K_.INTERPRET,
+    )(sel_w, sel_k, mat_wk)
+
+
+def scatter_add_rows_pallas(mat_wk: jnp.ndarray, sel_w: jnp.ndarray,
+                            sel_k: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """mat[sel_w[p], sel_k[p, j]] += vals[p, j], in place (aliased)."""
+    P, Pk = sel_k.shape
+    W, K = mat_wk.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, Pk), lambda p, sel_w: (p, 0)),          # sel_k
+            pl.BlockSpec((1, Pk), lambda p, sel_w: (p, 0)),          # vals
+            pl.BlockSpec((1, K), lambda p, sel_w: (sel_w[p], 0)),    # mat row
+        ],
+        out_specs=pl.BlockSpec((1, K), lambda p, sel_w: (sel_w[p], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_add_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((W, K), jnp.float32),
+        # input indices count the scalar-prefetch operand: sel_w=0, sel_k=1,
+        # vals=2, mat=3 -> alias mat onto the (sole) output.
+        input_output_aliases={3: 0},
+        interpret=K_.INTERPRET,
+    )(sel_w, sel_k, vals, mat_wk)

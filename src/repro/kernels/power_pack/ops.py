@@ -1,0 +1,44 @@
+"""jit'd wrappers for power_pack: padding to TPU tile multiples + dispatch.
+
+Out-of-range (padding) topic indices hit all-zero one-hot rows, so padded
+columns pack to 0 and scatter adds 0 — no masking needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.power_pack.kernel import (pack_rows_pallas,
+                                             scatter_add_rows_pallas)
+
+
+def _pad_axis(x, axis, multiple, value=0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@jax.jit
+def pack_rows(mat_wk: jnp.ndarray, sel_w: jnp.ndarray,
+              sel_k: jnp.ndarray) -> jnp.ndarray:
+    P, Pk = sel_k.shape
+    W, K = mat_wk.shape
+    mat_p = _pad_axis(mat_wk.astype(jnp.float32), 1, 128)
+    sel_k_p = _pad_axis(sel_k, 1, 128, value=mat_p.shape[1])  # OOR -> zero
+    out = pack_rows_pallas(mat_p, sel_w, sel_k_p)
+    return out[:, :Pk].astype(mat_wk.dtype)
+
+
+@jax.jit
+def scatter_add_rows(mat_wk: jnp.ndarray, sel_w: jnp.ndarray,
+                     sel_k: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    W, K = mat_wk.shape
+    mat_p = _pad_axis(mat_wk.astype(jnp.float32), 1, 128)
+    sel_k_p = _pad_axis(sel_k, 1, 128, value=mat_p.shape[1])
+    vals_p = _pad_axis(vals.astype(jnp.float32), 1, 128)
+    out = scatter_add_rows_pallas(mat_p, sel_w, sel_k_p, vals_p)
+    return out[:, :K].astype(mat_wk.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for power_pack kernels — same contract, plain gathers."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_rows_ref(mat_wk, sel_w, sel_k):
+    rows = jnp.take(mat_wk, sel_w, axis=0)
+    return jnp.take_along_axis(rows, sel_k, axis=1)
+
+
+def scatter_add_rows_ref(mat_wk, sel_w, sel_k, vals):
+    return mat_wk.at[sel_w[:, None], sel_k].add(vals)

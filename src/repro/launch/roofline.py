@@ -1,0 +1,195 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (per device, per step):
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes_accessed / HBM_bw      (819 GB/s)
+  collective = ICI_bytes_moved / link_bw        (~50 GB/s/link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the per-device
+SPMD program).  ICI bytes are parsed from ``compiled.as_text()``: for each
+collective op we extract the payload shape and the replica-group size G and
+apply the standard ring-algorithm factors:
+
+  all-reduce        2 * bytes * (G-1)/G
+  all-gather        out_bytes * (G-1)/G
+  reduce-scatter    out_bytes * (G-1)        (input = G * output)
+  all-to-all        bytes * (G-1)/G
+  collective-permute  bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+HW = {
+    "peak_flops": 197e12,     # bf16 per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "ici_bw": 50e9,           # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    base = re.match(r"[a-z]+\d*", dtype).group(0)
+    return n * _DTYPE_BYTES.get(base, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device ICI bytes moved, bucketed by collective type."""
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        parts = stripped.split(" = ", 1)
+        if len(parts) != 2:
+            continue
+        rhs = parts[1]
+        op = None
+        for c in _COLLECTIVES:
+            # the op invocation appears as "<shapes> <op>(" (tuple-shaped
+            # outputs start with "(f32[...], ...)", so search the full rhs)
+            m = re.search(rf"\b{c}(-start)?\(", rhs)
+            if m is not None and f"{c}-done" not in rhs:
+                op = c
+                seg = rhs[: m.start()]
+                break
+        if op is None:
+            continue
+        shapes = _SHAPE_RE.findall(seg)
+        payload = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if payload == 0:
+            continue
+        G = _group_size(stripped)
+        if op == "all-reduce":
+            moved = 2.0 * payload * (G - 1) / G
+        elif op == "all-gather":
+            moved = payload * (G - 1) / G
+        elif op == "reduce-scatter":
+            moved = payload * (G - 1)
+        elif op == "all-to-all":
+            moved = payload * (G - 1) / G
+        else:
+            moved = float(payload)
+        out[op] += moved
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def collective_bytes_split(hlo_text: str):
+    """(loop_body_bytes, one_time_bytes) — attributes collectives to while
+    bodies vs straight-line code.  For POBP this separates the per-iteration
+    power sync (Eq. 6) from the once-per-mini-batch dense sync (Fig. 4
+    lines 9-10)."""
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    cur = None
+    per_comp: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):  # computation header
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+            continue
+        sub = collective_bytes(line)
+        if sub["total"]:
+            per_comp[cur] = per_comp.get(cur or "?", 0.0) + sub["total"]
+    loop = sum(v for k, v in per_comp.items() if k in bodies)
+    once = sum(per_comp.values()) - loop
+    return loop, once, per_comp
+
+
+def flops_and_bytes(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = ca or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_info(compiled) -> Dict[str, Optional[float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"available": False}
+    if ma is None:
+        return {"available": False}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out: Dict[str, Optional[float]] = {"available": True}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["live_bytes"] = (out.get("argument_size_in_bytes", 0)
+                         + out.get("output_size_in_bytes", 0)
+                         + out.get("temp_size_in_bytes", 0)
+                         - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: the dominant term (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def fraction_of_roofline(self) -> float:
+        """compute_s / step_s — how close the step is to compute-bound."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, ici_bytes: float) -> Roofline:
+    return Roofline(compute_s=flops / HW["peak_flops"],
+                    memory_s=hbm_bytes / HW["hbm_bw"],
+                    collective_s=ici_bytes / HW["ici_bw"])
+
+
+def model_flops(cfg, shape, n_params_active: float, chips: int) -> float:
+    """Analytic useful FLOPs per device per step: 6ND train, 2ND inference."""
+    if shape.kind == "train":
+        tok = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tok / chips
+    if shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tok / chips
+    return 2.0 * n_params_active * shape.global_batch / chips

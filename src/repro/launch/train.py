@@ -1,0 +1,138 @@
+"""Training driver: LM training with data-parallel gradient sync via
+PowerSync (the paper's technique generalized) or dense all-reduce, plus
+checkpoint/restart fault tolerance.
+
+CPU-runnable end-to-end (reduced configs, simulated DP shards through
+vmap(axis_name=...) — identical collective semantics to a real mesh); the
+production-mesh path reuses the same step through shard_map on TPU pods.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 200 --batch 16 --seq 64 --shards 4 --sync power \
+      --ckpt-dir /tmp/ckpt
+
+Fault tolerance: --crash-at N simulates a hard failure; rerunning the same
+command restores the latest checkpoint (params, optimizer, PowerSync
+residuals, RNG, data cursor) and converges to the same trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.sync import CommMeter, LocalReducer, MeshReducer
+from repro.data.lm_data import batch_at
+from repro.dist import checkpoint as ckpt
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.powersync import (PowerSyncConfig, dense_sync_tree,
+                                   powersync_tree, residual_init)
+
+
+def build_trainer(cfg, acfg: AdamWConfig, pscfg: PowerSyncConfig,
+                  shards: int, sync: str):
+    mod = registry.build(cfg)
+    meter = CommMeter()
+    reducer = (MeshReducer("dp", meter=meter) if shards > 1
+               else LocalReducer(meter=meter))
+
+    def step_one(params, opt, residual, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: mod.loss_fn(p, batch, cfg))(params)
+        if sync == "power":
+            synced, new_res = powersync_tree(grads, residual, reducer, pscfg,
+                                             max(shards, 1))
+        else:
+            synced = dense_sync_tree(grads, reducer, max(shards, 1))
+            new_res = residual
+        new_params, new_opt = adamw_update(synced, opt, acfg)
+        return loss, new_params, new_opt, new_res
+
+    if shards > 1:
+        stepped = jax.vmap(step_one, in_axes=(None, None, 0, 0),
+                           axis_name="dp")
+    else:
+        stepped = step_one
+    return jax.jit(stepped), meter, mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--sync", default="power", choices=["power", "dense"])
+    ap.add_argument("--lambda-rows", type=float, default=0.2)
+    ap.add_argument("--lambda-cols", type=float, default=0.5)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--crash-at", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    acfg = AdamWConfig(lr=args.lr, warmup_steps=20)
+    pscfg = PowerSyncConfig(lambda_rows=args.lambda_rows,
+                            lambda_cols=args.lambda_cols)
+    step_fn, meter, mod = build_trainer(cfg, acfg, pscfg, args.shards,
+                                        args.sync)
+
+    params = mod.init(jax.random.PRNGKey(args.seed), cfg)
+    opt = adamw_init(params)
+    residual = residual_init(params)
+    if args.shards > 1:
+        residual = jax.tree.map(
+            lambda r: jnp.broadcast_to(r, (args.shards, *r.shape)), residual)
+    start = 0
+
+    if args.ckpt_dir:
+        latest = ckpt.latest_step(args.ckpt_dir)
+        if latest is not None:
+            trees, extra, _ = ckpt.restore(
+                args.ckpt_dir, latest,
+                {"params": params, "opt": opt, "residual": residual})
+            params, opt, residual = (trees["params"], trees["opt"],
+                                     trees["residual"])
+            start = extra["next_step"]
+            print(f"[restore] resumed from step {latest} -> next {start}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = batch_at(args.seed, step, args.batch, args.seq,
+                         cfg.vocab_size,
+                         shards=args.shards if args.shards > 1 else 0)
+        loss, p_new, o_new, residual = step_fn(params, opt, residual, batch)
+        params = jax.tree.map(lambda x: x[0], p_new) if args.shards > 1 else p_new
+        opt = jax.tree.map(lambda x: x[0], o_new) if args.shards > 1 else o_new
+        losses.append(float(np.mean(np.asarray(loss))))
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if args.crash_at and step + 1 == args.crash_at:
+            raise SystemExit(f"[simulated crash] at step {step + 1}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt, "residual": residual},
+                      extra={"next_step": step + 1, "seed": args.seed,
+                             "sync": args.sync})
+    print(f"[done] final loss {losses[-1]:.4f}; "
+          f"comm bytes/step by phase: {meter.bytes_by_phase}")
+    return losses, meter
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Pure-JAX architecture zoo (pytree params, no framework deps).
+
+Families: dense GQA decoders, MLA+MoE (DeepSeek-style), pure MoE, Mamba2
+(SSD), hybrid SSM+attention (Zamba2-style), cross-attention VLM backbones,
+and encoder-decoder audio backbones.  Every model exposes:
+
+  init(key, cfg)                       -> params pytree
+  loss_fn(params, batch, cfg)          -> scalar LM loss   (train shapes)
+  prefill(params, tokens, cfg)         -> (logits, cache)  (prefill shapes)
+  decode_step(params, token, cache, pos, cfg) -> (logits, cache)  (decode)
+
+Layer stacks are `lax.scan`-ned over stacked [n_layers, ...] params so the
+lowered HLO stays small enough to compile 88-layer/123B configs on this
+container's CPU within the dry-run budget.
+"""
+
+from repro.models import common, attention, mlp, moe, ssm, lm, encdec  # noqa: F401
+from repro.models.registry import build, MODEL_FAMILIES  # noqa: F401

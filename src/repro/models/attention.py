@@ -1,0 +1,255 @@
+"""Attention variants: GQA (with optional QKV bias + sliding window),
+MLA (DeepSeek multi-head latent attention, absorbed decode form), and
+cross-attention (VLM / enc-dec memory).
+
+Cache contract (decode):
+  GQA   cache = {"k": [B, S, KV, hd], "v": [B, S, KV, hd]}
+  MLA   cache = {"ckv": [B, S, kv_lora], "kr": [B, S, qk_rope]}
+  cross cache = {"mk": [B, M, H, hd], "mv": [B, M, H, hd]}  (static memory)
+`pos` is the write index; queries attend to cache positions <= pos.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (COMPUTE_DTYPE, NULL_CTX as NULL_CTX_,
+                                 ShardingCtx, apply_rope, dense_init,
+                                 rope_freqs)
+
+NEG_INF = -2.0e38
+
+
+def _attend(q, k, v, *, mask, scale, ctx: ShardingCtx):
+    """q [B,Sq,G,Hk,hd] k/v [B,Skv,Hk,hd] (G = query groups per kv head)."""
+    scores = jnp.einsum("bsghd,bthd->bghst", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bghst,bthd->bsghd", w, v)
+    return out
+
+
+def chunked_attend(q, k, v, *, causal: bool, window: int, scale: float,
+                   chunk: int, unroll: bool = False):
+    """Memory-bounded attention: scan over query blocks so the live score
+    buffer is [B, G, Hk, C, Skv] instead of [B, G, Hk, Sq, Skv].
+
+    Mandatory for the 32k/500k shapes (full S^2 scores would be TBs) and
+    keeps train_4k inside the 16 GB/chip HBM budget.  q [B,Sq,G,Hk,hd],
+    k/v [B,Skv,Hk,hd]; q/kv positions are absolute [0..S).  `unroll` mirrors
+    cfg.scan_layers=False for cost-analysis probes (while bodies are counted
+    once by XLA cost analysis).
+    """
+    B, Sq, G, Hk, hd = q.shape
+    Skv = k.shape[1]
+    C = min(chunk, Sq)
+    pad = (-Sq) % C
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nq = q.shape[1] // C
+    qb = q.reshape(B, nq, C, G, Hk, hd).transpose(1, 0, 2, 3, 4, 5)
+    starts = jnp.arange(nq) * C
+    j = jnp.arange(Skv)
+
+    def body(_, inp):
+        q_blk, start = inp                               # [B,C,G,Hk,hd]
+        i = start + jnp.arange(C)
+        if causal:
+            m = j[None, :] <= i[:, None]
+            if window:
+                m = jnp.logical_and(m, j[None, :] > i[:, None] - window)
+        else:
+            m = jnp.ones((C, Skv), bool)
+        out_blk = _attend(q_blk, k, v, mask=m[None, None, None], scale=scale,
+                          ctx=NULL_CTX_)
+        return None, out_blk                             # [B,C,G,Hk,hd]
+
+    if unroll:
+        outs = [body(None, (qb[i], starts[i]))[1] for i in range(nq)]
+        out = jnp.stack(outs)
+    else:
+        _, out = jax.lax.scan(body, None, (qb, starts))
+    dv = v.shape[-1]   # v head_dim may differ from q/k head_dim (MLA)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * C, G, Hk, dv)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------- GQA
+
+def gqa_params(key, cfg: ArchConfig):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd),
+        "wk": dense_init(ks[1], D, KV * hd),
+        "wv": dense_init(ks[2], D, KV * hd),
+        "wo": dense_init(ks[3], H * hd, D),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), COMPUTE_DTYPE)
+        p["bk"] = jnp.zeros((KV * hd,), COMPUTE_DTYPE)
+        p["bv"] = jnp.zeros((KV * hd,), COMPUTE_DTYPE)
+    return p
+
+
+def gqa_apply(p, x, *, cfg: ArchConfig, ctx: ShardingCtx,
+              positions: jnp.ndarray, cache: Optional[dict] = None,
+              pos: Optional[jnp.ndarray] = None,
+              window: int = 0):
+    """x [B, S, D].  Train/prefill: cache=None/new-cache; decode: S==1 + cache."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    inv_freq = rope_freqs(hd, cfg.rope_theta)
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # constrain only the merged-head projections (always divisible); head
+    # granularity constraints fight the (KV, G) reshape when KV < model size
+    # and trigger involuntary full remats in the SPMD partitioner.
+    q = ctx.ct(q, ctx.batch, None, ctx.model)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+
+    if cache is not None and pos is not None:            # ---- decode step
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        Sc = kc.shape[1]
+        idx = jnp.arange(Sc)
+        valid = idx <= pos
+        if window:
+            valid = jnp.logical_and(valid, idx > pos - window)
+        mask = valid[None, None, None, None, :]
+        qg = q.reshape(B, S, KV, G, hd).transpose(0, 1, 3, 2, 4)  # [B,1,G,KV,hd]
+        out = _attend(qg, kc, vc, mask=mask, scale=hd ** -0.5, ctx=ctx)
+        out = out.transpose(0, 1, 3, 2, 4).reshape(B, S, H * hd)  # [B,1,H*hd]
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"]), {"k": kc, "v": vc}
+
+    # ---- train / prefill: causal (optionally sliding-window) attention,
+    # q-chunked so the score buffer stays O(C * S) not O(S^2).
+    # KV heads are REPLICATED to H flat heads (standard TP practice): a flat
+    # H dim shards 16-way cleanly, whereas the (KV, G) split forces GSPMD
+    # into inconsistent factorizations and it replicates the whole score
+    # tensor (§Perf iteration: -11.8 TB/step of all-gathers on qwen2-72b).
+    qf = q[:, :, None]                                   # [B,S,1,H,hd]
+    k_rep = jnp.repeat(k, G, axis=2)                     # [B,S,H,hd]
+    v_rep = jnp.repeat(v, G, axis=2)
+    out = chunked_attend(qf, k_rep, v_rep, causal=True, window=window,
+                         scale=hd ** -0.5, chunk=cfg.attn_chunk,
+                         unroll=not cfg.scan_layers)
+    out = out[:, :, 0].reshape(B, S, H * hd)
+    out = ctx.ct(out, ctx.batch, None, ctx.model)
+    y = ctx.ct_seq(jnp.einsum("bsh,hd->bsd", out, p["wo"]))
+    new_cache = {"k": k, "v": v}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------- MLA
+
+def mla_params(key, cfg: ArchConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], D, H * (m.qk_nope + m.qk_rope)),
+        "wdkv": dense_init(ks[1], D, m.kv_lora + m.qk_rope),
+        "kv_norm": jnp.ones((m.kv_lora,), COMPUTE_DTYPE),
+        "wuk": dense_init(ks[2], m.kv_lora, H * m.qk_nope),
+        "wuv": dense_init(ks[3], m.kv_lora, H * m.v_head),
+        "wo": dense_init(ks[4], H * m.v_head, D),
+    }
+
+
+def mla_apply(p, x, *, cfg: ArchConfig, ctx: ShardingCtx,
+              positions: jnp.ndarray, cache: Optional[dict] = None,
+              pos: Optional[jnp.ndarray] = None, window: int = 0):
+    from repro.models.common import rmsnorm
+
+    B, S, D = x.shape
+    m = cfg.mla
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope, m.qk_rope, m.v_head
+    scale = (dn + dr) ** -0.5
+    inv_freq = rope_freqs(dr, cfg.rope_theta)
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, inv_freq)
+
+    dkv = jnp.einsum("bsd,dh->bsh", x, p["wdkv"])             # [B,S,lora+dr]
+    ckv = rmsnorm(dkv[..., :m.kv_lora], p["kv_norm"])
+    k_rope = apply_rope(dkv[..., m.kv_lora:][:, :, None, :], positions,
+                        inv_freq)[:, :, 0, :]                 # [B,S,dr] shared
+
+    if cache is not None and pos is not None:                 # ---- decode
+        ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(cache["kr"], k_rope, (0, pos, 0))
+        Sc = ckv_c.shape[1]
+        # absorbed form: fold wuk into the query -> score vs compressed cache
+        wuk = p["wuk"].reshape(m.kv_lora, H, dn)
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope, wuk)     # [B,1,H,lora]
+        scores = (jnp.einsum("bshl,btl->bhst", q_abs, ckv_c)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, kr_c))
+        scores = scores.astype(jnp.float32) * scale
+        valid = (jnp.arange(Sc) <= pos)[None, None, None, :]
+        w = jax.nn.softmax(jnp.where(valid, scores, NEG_INF), -1).astype(x.dtype)
+        ctx_l = jnp.einsum("bhst,btl->bshl", w, ckv_c)        # [B,1,H,lora]
+        wuv = p["wuv"].reshape(m.kv_lora, H, dv)
+        out = jnp.einsum("bshl,lhv->bshv", ctx_l, wuv).reshape(B, S, H * dv)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"]), {"ckv": ckv_c, "kr": kr_c}
+
+    # ---- train / prefill: materialized k/v, q-chunked attention.
+    # concat nope+rope along head_dim so one contraction computes
+    # q_nope.k_nope + q_rope.k_rope (the shared k_rope broadcasts to heads).
+    k_nope = jnp.einsum("bsl,lh->bsh", ckv, p["wuk"]).reshape(B, S, H, dn)
+    v = jnp.einsum("bsl,lh->bsh", ckv, p["wuv"]).reshape(B, S, H, dv)
+    q_cat = jnp.concatenate([q_nope, q_rope], -1)                 # [B,S,H,dn+dr]
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+    out = chunked_attend(q_cat[:, :, None], k_cat, v, causal=True,
+                         window=window, scale=scale, chunk=cfg.attn_chunk,
+                         unroll=not cfg.scan_layers)               # G=1
+    out = out[:, :, 0].reshape(B, S, H * dv)
+    y = ctx.ct_seq(jnp.einsum("bsh,hd->bsd", out, p["wo"]))
+    return y, {"ckv": ckv, "kr": k_rope}
+
+
+# --------------------------------------------------------------- cross
+
+def cross_params(key, cfg: ArchConfig, d_mem: Optional[int] = None):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    d_mem = d_mem or D
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], D, H * hd),
+        "wk": dense_init(ks[1], d_mem, H * hd),
+        "wv": dense_init(ks[2], d_mem, H * hd),
+        "wo": dense_init(ks[3], H * hd, D),
+    }
+
+
+def cross_apply(p, x, memory, *, cfg: ArchConfig, ctx: ShardingCtx,
+                mem_kv: Optional[dict] = None):
+    """x [B,S,D] attends to memory [B,M,d_mem].  mem_kv caches k/v(memory)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    if mem_kv is None:
+        k = jnp.einsum("bmd,dh->bmh", memory, p["wk"]).reshape(B, -1, H, hd)
+        v = jnp.einsum("bmd,dh->bmh", memory, p["wv"]).reshape(B, -1, H, hd)
+        mem_kv = {"mk": k, "mv": v}
+    k, v = mem_kv["mk"], mem_kv["mv"]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * hd ** -0.5
+    w = jax.nn.softmax(scores, -1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), mem_kv

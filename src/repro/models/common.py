@@ -1,0 +1,119 @@
+"""Shared model components: init helpers, norms, RoPE, sharding context."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------- sharding
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Activation-sharding hints; no-ops when no mesh is active.
+
+    `batch` covers DP axes ('pod','data'); `model` is TP/EP; `seq` is the
+    sequence-parallel axis for the residual stream between layers (Megatron
+    SP) — set to the model axis in training so the scan-saved per-layer
+    carries shrink by the TP degree (123B-scale memory fit; DESIGN.md §9).
+    """
+
+    active: bool = False
+    batch: Optional[Tuple[str, ...]] = ("data",)
+    model: Optional[str] = "model"
+    seq: Optional[str] = None
+    # concrete Mesh for shard_map islands (MoE token routing — GSPMD
+    # replicates data-dependent scatters, manual-over-data avoids it)
+    mesh: Optional[object] = None
+
+    def ct(self, x: jnp.ndarray, *spec):
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    def ct_seq(self, x: jnp.ndarray):
+        """Pin a [B, S, D] projection output to the sequence-parallel layout
+        *before* the residual add, so XLA's reduce-scatter-creation pass can
+        rewrite the row-parallel partial-sum all-reduce into a reduce-scatter
+        (§Perf iteration B — halves those collective bytes)."""
+        if not self.active or self.seq is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(self.batch, self.seq,
+                                                     None))
+
+
+NULL_CTX = ShardingCtx(active=False)
+
+
+# ----------------------------------------------------------------- params
+
+def dense_init(key, d_in: int, d_out: int, dtype=PARAM_DTYPE,
+               scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=PARAM_DTYPE) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_init(key, n: int, init_fn):
+    """vmap an init over a leading layer axis (for scanned stacks)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, H, hd] (hd even), positions [..., S] -> rotated x."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freq           # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- loss
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_id: int = -1) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32; labels==ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_mask(S: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((S, S), bool))

@@ -1,0 +1,144 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+The audio frontend is a STUB per the assignment: `frames` are precomputed
+frame embeddings [B, S_enc, d_model].  Encoder: bidirectional self-attn +
+GeLU FFN.  Decoder: causal self-attn (cached) + cross-attn to the encoder
+output (memory k/v cached once) + GeLU FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (COMPUTE_DTYPE, NULL_CTX, ShardingCtx,
+                                 embed_init, dense_init, softmax_xent,
+                                 stack_init)
+from repro.models.lm import (_norm, _norm_params, _remat, self_block_apply,
+                             self_block_params, cross_block_params,
+                             cross_block_apply, _logits, stack_scan)
+
+
+def enc_block_params(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _norm_params(cfg), "ln2": _norm_params(cfg),
+            "attn": attn.gqa_params(k1, cfg),
+            "mlp": mlp_mod.mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def enc_block_apply(p, x, *, cfg, ctx, positions):
+    """Bidirectional self-attention block (no mask, no cache)."""
+    B, S, D = x.shape
+    h = _norm(p["ln1"], x, cfg)
+    q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"]).reshape(
+        B, S, cfg.n_heads, cfg.hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"]).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"]).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    from repro.models.common import apply_rope, rope_freqs
+    inv = rope_freqs(cfg.hd, cfg.rope_theta)
+    q, k = apply_rope(q, positions, inv), apply_rope(k, positions, inv)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, G, cfg.hd).transpose(0, 1, 3, 2, 4)
+    out = attn.chunked_attend(qg, k, v, causal=False, window=0,
+                              scale=cfg.hd ** -0.5, chunk=cfg.attn_chunk,
+                              unroll=not cfg.scan_layers)
+    out = out.transpose(0, 1, 3, 2, 4).reshape(B, S, cfg.n_heads * cfg.hd)
+    x = x + jnp.einsum("bsh,hd->bsd", out, p["attn"]["wo"])
+    h = _norm(p["ln2"], x, cfg)
+    return x + mlp_mod.mlp_apply(p["mlp"], h, act=cfg.act, ctx=ctx)
+
+
+def dec_block_params(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    p = self_block_params(k1, cfg, use_moe=False)
+    p["cross"] = cross_block_params(k2, cfg)
+    return p
+
+
+def dec_block_apply(p, x, memory, *, cfg, ctx, positions, cache=None,
+                    pos=None):
+    x, kv, _ = self_block_apply({k: v for k, v in p.items() if k != "cross"},
+                                x, cfg=cfg, ctx=ctx, positions=positions,
+                                cache=None if cache is None else cache["kv"],
+                                pos=pos)
+    x, mem_kv = cross_block_apply(p["cross"], x, memory, cfg=cfg, ctx=ctx,
+                                  mem_kv=None if cache is None
+                                  else cache["mem_kv"])
+    return x, {"kv": kv, "mem_kv": mem_kv}
+
+
+def init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    n_enc = cfg.enc_layers or cfg.n_layers
+    return {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "lm_head": dense_init(ks[1], cfg.d_model, cfg.padded_vocab),
+        "ln_f": _norm_params(cfg),
+        "ln_enc": _norm_params(cfg),
+        "enc": stack_init(ks[2], n_enc, lambda k: enc_block_params(k, cfg)),
+        "dec": stack_init(ks[3], cfg.n_layers,
+                          lambda k: dec_block_params(k, cfg)),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX,
+           remat: bool = False):
+    B, S, _ = frames.shape
+    x = frames.astype(COMPUTE_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        y = enc_block_apply(lp, x, cfg=cfg, ctx=ctx, positions=positions)
+        return ctx.ct(y, ctx.batch, ctx.seq, None), None
+
+    fn = _remat(body, cfg) if remat else body
+    x, _ = stack_scan(fn, x, params["enc"], cfg)
+    return _norm(params["ln_enc"], x, cfg)
+
+
+def forward(params, tokens, frames, cfg: ArchConfig,
+            ctx: ShardingCtx = NULL_CTX, mode: str = "train"):
+    """Teacher-forced decoder over `tokens` given encoder `frames`."""
+    memory = encode(params, frames, cfg, ctx, remat=(mode == "train"))
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        x, cache = dec_block_apply(lp, x, memory, cfg=cfg, ctx=ctx,
+                                   positions=positions)
+        return ctx.ct(x, ctx.batch, ctx.seq, None), cache
+
+    fn = _remat(body, cfg) if mode == "train" else body
+    x, caches = stack_scan(fn, x, params["dec"], cfg)
+    return _logits(params, x, cfg, ctx), {"stack": caches}, jnp.float32(0.0)
+
+
+def decode_step(params, token, caches, pos, cfg: ArchConfig,
+                ctx: ShardingCtx = NULL_CTX):
+    """One decoder step; cross k/v and self KV cache come from `caches`."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    def body(x, pc):
+        lp, c = pc
+        x, c2 = dec_block_apply(lp, x, None, cfg=cfg, ctx=ctx,
+                                positions=positions, cache=c, pos=pos)
+        return x, c2
+
+    x, new_caches = stack_scan(body, x, (params["dec"], caches["stack"]), cfg)
+    return _logits(params, x, cfg, ctx), {"stack": new_caches}
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX):
+    logits, _, _ = forward(params, batch["tokens"], batch["frames"], cfg, ctx,
+                           mode="train")
+    return softmax_xent(logits, batch["labels"])

@@ -1,0 +1,400 @@
+"""Decoder-only LM assembly for all decoder families:
+
+  dense   — [attn + mlp] x N, scanned
+  moe     — dense_first_n plain layers, then [attn + moe] x rest, scanned
+  vlm     — scanned groups of (cross_attn_every-1 self layers + 1 cross layer);
+            vision frontend is a stub (precomputed patch embeddings input)
+  ssm     — [mamba2] x N, scanned
+  hybrid  — scanned groups of (shared_attn_every mamba2 layers) + one SHARED
+            attention block (weights reused across groups, Zamba2-style,
+            fed concat(hidden, initial embedding))
+
+Stacks are `lax.scan`-ned over [n_layers, ...] stacked params; train mode
+wraps the block in `jax.checkpoint` (remat) so 123B-scale activations fit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (COMPUTE_DTYPE, NULL_CTX, ShardingCtx,
+                                 dense_init, embed_init, rmsnorm, layernorm,
+                                 softmax_xent, stack_init)
+
+
+def _remat(fn, cfg: ArchConfig):
+    """jax.checkpoint with the configured policy.  'dots' saves matmul
+    outputs (no forward recompute in backward — §Perf iteration: cuts the
+    remat re-gather of FSDP weights and the recompute byte traffic; saved
+    dot outputs are cheap because they are SP/TP-sharded)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def stack_scan(body, carry, xs, cfg: ArchConfig):
+    """lax.scan over stacked layer params, or an unrolled python loop when
+    cfg.scan_layers=False (cost-analysis probes: XLA counts while-loop body
+    costs once, so rooflines are extrapolated from unrolled reduced-depth
+    builds — launch/dryrun.py)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------- blocks
+
+def _norm(params, x, cfg):
+    if cfg.norm == "rms":
+        return rmsnorm(x, params["w"])
+    return layernorm(x, params["w"], params["b"])
+
+
+def _norm_params(cfg):
+    p = {"w": jnp.ones((cfg.d_model,), COMPUTE_DTYPE)}
+    if cfg.norm != "rms":
+        p["b"] = jnp.zeros((cfg.d_model,), COMPUTE_DTYPE)
+    return p
+
+
+def self_block_params(key, cfg: ArchConfig, use_moe: bool):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": _norm_params(cfg), "ln2": _norm_params(cfg)}
+    if cfg.attn_type == "mla":
+        p["attn"] = attn.mla_params(k1, cfg)
+    else:
+        p["attn"] = attn.gqa_params(k1, cfg)
+    if use_moe:
+        p["moe"] = moe_mod.moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlp_mod.mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def self_block_apply(p, x, *, cfg: ArchConfig, ctx: ShardingCtx, positions,
+                     cache=None, pos=None, window: int = 0):
+    """Pre-norm attn + FFN.  Returns (x, cache, aux)."""
+    h = _norm(p["ln1"], x, cfg)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_apply(p["attn"], h, cfg=cfg, ctx=ctx,
+                                      positions=positions, cache=cache, pos=pos,
+                                      window=window)
+    else:
+        a, new_cache = attn.gqa_apply(p["attn"], h, cfg=cfg, ctx=ctx,
+                                      positions=positions, cache=cache, pos=pos,
+                                      window=window)
+    x = x + a
+    h = _norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        f, aux = moe_mod.moe_apply(p["moe"], h, cfg=cfg, ctx=ctx)
+    else:
+        f, aux = mlp_mod.mlp_apply(p["mlp"], h, act=cfg.act, ctx=ctx), 0.0
+    return x + f, new_cache, aux
+
+
+def cross_block_params(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _norm_params(cfg), "ln2": _norm_params(cfg),
+            "xattn": attn.cross_params(k1, cfg),
+            "mlp": mlp_mod.mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act),
+            "gate": jnp.zeros((1,), COMPUTE_DTYPE)}
+
+
+def cross_block_apply(p, x, memory, *, cfg, ctx, mem_kv=None):
+    h = _norm(p["ln1"], x, cfg)
+    a, mem_kv = attn.cross_apply(p["xattn"], h, memory, cfg=cfg, ctx=ctx,
+                                 mem_kv=mem_kv)
+    x = x + jnp.tanh(p["gate"]) * a
+    h = _norm(p["ln2"], x, cfg)
+    return x + mlp_mod.mlp_apply(p["mlp"], h, act=cfg.act, ctx=ctx), mem_kv
+
+
+def ssm_block_params(key, cfg: ArchConfig):
+    return {"ln": _norm_params(cfg), "ssm": ssm_mod.ssm_params(key, cfg)}
+
+
+def shared_attn_params(key, cfg: ArchConfig):
+    """Zamba2 shared block: concat(hidden, embed0) [2D] -> D, attn + mlp."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"in_proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+            "block": self_block_params(k2, cfg, use_moe=False)}
+
+
+# ---------------------------------------------------------------- init
+
+def _n_groups(cfg: ArchConfig) -> Tuple[int, int]:
+    """(group_size, n_groups) of the scanned stack for this family."""
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every, cfg.n_layers // cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        return cfg.shared_attn_every, cfg.n_layers // cfg.shared_attn_every
+    return 1, cfg.n_layers - cfg.dense_first_n
+
+
+def init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": embed_init(keys[0], cfg.padded_vocab,
+                                                  cfg.d_model),
+                              "ln_f": _norm_params(cfg)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.padded_vocab)
+
+    gsize, ngroups = _n_groups(cfg)
+    if cfg.family in ("dense", "moe"):
+        if cfg.dense_first_n:
+            params["head_blocks"] = [
+                self_block_params(k, cfg, use_moe=False)
+                for k in jax.random.split(keys[2], cfg.dense_first_n)]
+        params["stack"] = stack_init(
+            keys[3], ngroups,
+            lambda k: self_block_params(k, cfg, use_moe=cfg.moe is not None))
+    elif cfg.family == "vlm":
+        params["stack"] = stack_init(
+            keys[3], ngroups,
+            lambda k: {
+                "selfs": stack_init(k, gsize - 1,
+                                    lambda kk: self_block_params(kk, cfg, False)),
+                "cross": cross_block_params(jax.random.fold_in(k, 7), cfg),
+            })
+    elif cfg.family == "ssm":
+        params["stack"] = stack_init(keys[3], cfg.n_layers,
+                                     lambda k: ssm_block_params(k, cfg))
+    elif cfg.family == "hybrid":
+        params["stack"] = stack_init(
+            keys[3], ngroups,
+            lambda k: stack_init(k, gsize, lambda kk: ssm_block_params(kk, cfg)))
+        params["shared_attn"] = shared_attn_params(keys[4], cfg)
+    else:
+        raise ValueError(f"lm.init: unsupported family {cfg.family}")
+    return params
+
+
+# ------------------------------------------------------------- forward
+
+def _logits(params, x, cfg, ctx):
+    x = _norm(params["ln_f"], x, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.padded_vocab != cfg.vocab_size:   # mask padding rows to -inf
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    if ctx.seq is not None and logits.shape[1] > 1:
+        return ctx.ct(logits, ctx.batch, ctx.seq, None)
+    return ctx.ct(logits, ctx.batch, None, ctx.model)
+
+
+def forward(params, tokens, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX,
+            *, image_embeds=None, mode: str = "train"):
+    """Full-sequence forward.  Returns (logits, caches, aux_loss).
+
+    mode='train' remats each scanned block; mode='prefill' also returns
+    the KV caches / SSM states needed to continue decoding.
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.ct(x, ctx.batch, None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    remat = mode == "train"
+    caches: Dict[str, Any] = {}
+    aux_total = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe"):
+        head_caches = []
+        for hb in params.get("head_blocks", []):
+            # head blocks are dense even in MoE archs (DeepSeek layer 0)
+            hcfg = cfg
+            x, c, _ = self_block_apply(hb, x, cfg=hcfg, ctx=ctx,
+                                       positions=positions,
+                                       window=cfg.sliding_window)
+            head_caches.append(c)
+        caches["head"] = head_caches
+
+        def body(carry, layer_p):
+            x, aux = carry
+            x2, c, a = self_block_apply(layer_p, x, cfg=cfg, ctx=ctx,
+                                        positions=positions,
+                                        window=cfg.sliding_window)
+            x2 = ctx.ct(x2, ctx.batch, ctx.seq, None)
+            return (x2, aux + a), c
+
+        fn = _remat(body, cfg) if remat else body
+        (x, aux_total), stack_cache = stack_scan(fn, (x, aux_total), params["stack"], cfg)
+        caches["stack"] = stack_cache
+
+    elif cfg.family == "vlm":
+        memory = image_embeds.astype(x.dtype)
+
+        def body(carry, layer_p):
+            x, aux = carry
+
+            def inner(xc, sp):
+                xc2, c, _ = self_block_apply(sp, xc, cfg=cfg, ctx=ctx,
+                                             positions=positions)
+                return xc2, c
+
+            x, self_caches = stack_scan(inner, x, layer_p["selfs"], cfg)
+            x, mem_kv = cross_block_apply(layer_p["cross"], x, memory,
+                                          cfg=cfg, ctx=ctx)
+            x = ctx.ct(x, ctx.batch, ctx.seq, None)
+            return (x, aux), {"selfs": self_caches, "mem_kv": mem_kv}
+
+        fn = _remat(body, cfg) if remat else body
+        (x, aux_total), stack_cache = stack_scan(fn, (x, aux_total), params["stack"], cfg)
+        caches["stack"] = stack_cache
+
+    elif cfg.family == "ssm":
+        def body(carry, layer_p):
+            x, aux = carry
+            h = _norm(layer_p["ln"], x, cfg)
+            y, st = ssm_mod.ssm_apply(layer_p["ssm"], h, cfg=cfg, ctx=ctx)
+            return (ctx.ct(x + y, ctx.batch, ctx.seq, None), aux), st
+
+        fn = _remat(body, cfg) if remat else body
+        (x, aux_total), stack_cache = stack_scan(fn, (x, aux_total), params["stack"], cfg)
+        caches["stack"] = stack_cache
+
+    elif cfg.family == "hybrid":
+        x_emb0 = x
+        shared = params["shared_attn"]
+
+        def body(carry, group_p):
+            x, aux = carry
+
+            def inner(xc, lp):
+                h = _norm(lp["ln"], xc, cfg)
+                y, st = ssm_mod.ssm_apply(lp["ssm"], h, cfg=cfg, ctx=ctx)
+                return xc + y, st
+
+            x, states = stack_scan(inner, x, group_p, cfg)
+            h = jnp.einsum("bsd,dh->bsh",
+                           jnp.concatenate([x, x_emb0], -1), shared["in_proj"])
+            h2, kv, _ = self_block_apply(shared["block"], h, cfg=cfg, ctx=ctx,
+                                         positions=positions,
+                                         window=cfg.sliding_window)
+            return (ctx.ct(x + h2, ctx.batch, ctx.seq, None), aux),\
+                {"ssm": states, "attn_kv": kv}
+
+        fn = _remat(body, cfg) if remat else body
+        (x, aux_total), stack_cache = stack_scan(fn, (x, aux_total), params["stack"], cfg)
+        caches["stack"] = stack_cache
+    else:
+        raise ValueError(cfg.family)
+
+    return _logits(params, x, cfg, ctx), caches, aux_total
+
+
+# ---------------------------------------------------------- decode step
+
+def decode_step(params, token, caches, pos, cfg: ArchConfig,
+                ctx: ShardingCtx = NULL_CTX, *, image_embeds=None):
+    """One decode step.  token [B, 1] int32; pos scalar int32 (write index).
+
+    Caches carry [n_layers, ...] stacked KV / SSM state and are scanned in
+    lock-step with the params.  Returns (logits [B, 1, V], new_caches).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    if cfg.family in ("dense", "moe"):
+        new_head = []
+        for hb, c in zip(params.get("head_blocks", []), caches["head"]):
+            x, c2, _ = self_block_apply(hb, x, cfg=cfg, ctx=ctx,
+                                        positions=positions, cache=c, pos=pos,
+                                        window=cfg.sliding_window)
+            new_head.append(c2)
+
+        def body(x, pc):
+            layer_p, c = pc
+            x2, c2, _ = self_block_apply(layer_p, x, cfg=cfg, ctx=ctx,
+                                         positions=positions, cache=c, pos=pos,
+                                         window=cfg.sliding_window)
+            return x2, c2
+
+        x, stack_cache = stack_scan(body, x, (params["stack"], caches["stack"]), cfg)
+        new_caches = {"head": new_head, "stack": stack_cache}
+
+    elif cfg.family == "vlm":
+        def body(x, pc):
+            layer_p, c = pc
+
+            def inner(xc, spc):
+                sp, sc = spc
+                xc2, sc2, _ = self_block_apply(sp, xc, cfg=cfg, ctx=ctx,
+                                               positions=positions, cache=sc,
+                                               pos=pos)
+                return xc2, sc2
+
+            x, self_caches = stack_scan(inner, x, (layer_p["selfs"], c["selfs"]), cfg)
+            x, _ = cross_block_apply(layer_p["cross"], x, None, cfg=cfg,
+                                     ctx=ctx, mem_kv=c["mem_kv"])
+            return x, {"selfs": self_caches, "mem_kv": c["mem_kv"]}
+
+        x, stack_cache = stack_scan(body, x, (params["stack"], caches["stack"]), cfg)
+        new_caches = {"stack": stack_cache}
+
+    elif cfg.family == "ssm":
+        def body(x, pc):
+            layer_p, st = pc
+            h = _norm(layer_p["ln"], x, cfg)
+            y, st2 = ssm_mod.ssm_decode_step(layer_p["ssm"], h, st, cfg=cfg,
+                                             ctx=ctx)
+            return x + y, st2
+
+        x, stack_cache = stack_scan(body, x, (params["stack"], caches["stack"]), cfg)
+        new_caches = {"stack": stack_cache}
+
+    elif cfg.family == "hybrid":
+        x_emb0 = x
+        shared = params["shared_attn"]
+
+        def body(x, pc):
+            group_p, c = pc
+
+            def inner(xc, lpst):
+                lp, st = lpst
+                h = _norm(lp["ln"], xc, cfg)
+                y, st2 = ssm_mod.ssm_decode_step(lp["ssm"], h, st, cfg=cfg,
+                                                 ctx=ctx)
+                return xc + y, st2
+
+            x, states = stack_scan(inner, x, (group_p, c["ssm"]), cfg)
+            h = jnp.einsum("bsd,dh->bsh",
+                           jnp.concatenate([x, x_emb0], -1), shared["in_proj"])
+            h2, kv, _ = self_block_apply(shared["block"], h, cfg=cfg, ctx=ctx,
+                                         positions=positions, cache=c["attn_kv"],
+                                         pos=pos, window=cfg.sliding_window)
+            return x + h2, {"ssm": states, "attn_kv": kv}
+
+        x, stack_cache = stack_scan(body, x, (params["stack"], caches["stack"]), cfg)
+        new_caches = {"stack": stack_cache}
+    else:
+        raise ValueError(cfg.family)
+
+    return _logits(params, x, cfg, ctx), new_caches
+
+
+# -------------------------------------------------------------- training
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX):
+    logits, _, aux = forward(params, batch["tokens"], cfg, ctx,
+                             image_embeds=batch.get("image_embeds"),
+                             mode="train")
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + 0.01 * aux

@@ -1,0 +1,179 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: within chunks of length Q the dual (attention-like)
+quadratic form runs on the MXU; across chunks a linear recurrence over the
+[H, N, P] states runs under `lax.scan`.  Decode is the O(1)-per-token
+recurrent update — the property that makes `long_500k` runnable for the
+SSM/hybrid architectures (DESIGN.md §6).
+
+Conventions (inclusive-cumsum): h_t = exp(a_t) h_{t-1} + dt_t B_t (x) x_t,
+y_t = C_t . h_t + D x_t,  a_t = dt_t * A_h.  ngroups == 1 (B/C shared
+across heads), as in the assigned mamba2-780m / zamba2 configs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import COMPUTE_DTYPE, ShardingCtx, dense_init, rmsnorm
+
+
+def ssm_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.headdim
+    conv_ch = d_inner + 2 * s.state
+    return d_inner, H, conv_ch
+
+
+def ssm_params(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_inner + 2 * s.state + H),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, 1, conv_ch),
+                                     jnp.float32) * 0.1).astype(COMPUTE_DTYPE),
+        "conv_b": jnp.zeros((conv_ch,), COMPUTE_DTYPE),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), COMPUTE_DTYPE),
+        "out_proj": dense_init(ks[3], d_inner, cfg.d_model),
+    }
+
+
+def _split_proj(p, x, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner, H, _ = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("btd,dh->bth", x, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * s.state]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * s.state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC, cfg: ArchConfig):
+    w = cfg.ssm.conv_width
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, p["conv_w"].astype(xBC.dtype), (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xBC.shape[-1])
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def ssm_apply(p, x, *, cfg: ArchConfig, ctx: ShardingCtx,
+              state: Optional[dict] = None):
+    """Full-sequence SSD.  x [B, T, D] (T % chunk == 0 after padding).
+
+    Returns (y [B, T, D], final_state dict) — the state seeds decode.
+    """
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    P, N, Q = s.headdim, s.state, s.chunk
+    B_, T, _ = x.shape
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Tp = x.shape[1]
+    nc = Tp // Q
+
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(p, xBC, cfg)
+    xs = xBC[..., :d_inner].reshape(B_, Tp, H, P)
+    Bm = xBC[..., d_inner: d_inner + N].astype(jnp.float32)      # [B,T,N]
+    Cm = xBC[..., d_inner + N:].astype(jnp.float32)              # [B,T,N]
+
+    A = -jnp.exp(p["A_log"])                                     # [H]
+    a = dt * A                                                   # [B,T,H] log decay
+    # chunk views
+    ac = a.reshape(B_, nc, Q, H)
+    dtc = dt.reshape(B_, nc, Q, H)
+    xc = xs.reshape(B_, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+    cum = jnp.cumsum(ac, axis=2)                                 # inclusive
+
+    # ---- intra-chunk (dual quadratic form) ----
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                   # [B,nc,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Q,Q,H]
+    qi = jnp.arange(Q)
+    mask = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    scores = CB[..., None] * jnp.where(mask, decay, 0.0) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    last = cum[:, :, -1:, :]                                     # [B,nc,1,H]
+    sdecay = jnp.exp(last - cum)                                 # [B,nc,Q,H]
+    S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", sdecay * dtc, Bc, xc)
+    tot = jnp.exp(last[:, :, 0, :])                              # [B,nc,H]
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B_, H, N, P), jnp.float32))
+
+    def step(h, inp):
+        S_i, tot_i = inp
+        h_new = tot_i[:, :, None, None] * h + S_i
+        return h_new, h                                          # emit h_{c-1}
+
+    hT, h_prev = jax.lax.scan(step, h0,
+                              (S_c.transpose(1, 0, 2, 3, 4),
+                               tot.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # [B,nc,H,N,P]
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(B_, Tp, H, P)
+    y = y + p["D"][None, None, :, None] * xc.reshape(B_, Tp, H, P)
+    y = y.reshape(B_, Tp, d_inner).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    y = jnp.einsum("btd,dh->bth", y, p["out_proj"])
+    if pad:
+        y = y[:, :T]
+
+    conv_state = xBC_raw_tail(p, x, cfg)                         # [B,w-1,conv_ch]
+    return y, {"h": hT, "conv": conv_state}
+
+
+def xBC_raw_tail(p, x, cfg: ArchConfig):
+    """Last conv_width-1 pre-conv xBC rows (seed for decode's conv cache)."""
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    tail = x[:, -(s.conv_width - 1):, :]
+    zxbcdt = jnp.einsum("btd,dh->bth", tail, p["in_proj"])
+    return zxbcdt[..., d_inner: d_inner + conv_ch]
+
+
+def ssm_decode_step(p, x, state, *, cfg: ArchConfig, ctx: ShardingCtx):
+    """One-token recurrent update.  x [B, 1, D]; state {h, conv}."""
+    s = cfg.ssm
+    d_inner, H, conv_ch = ssm_dims(cfg)
+    P, N = s.headdim, s.state
+    B_ = x.shape[0]
+
+    z, xBC, dt = _split_proj(p, x, cfg)                          # xBC [B,1,ch]
+    window = jnp.concatenate([state["conv"], xBC], axis=1)       # [B,w,ch]
+    conv_out = jnp.sum(window * p["conv_w"][:, 0, :].astype(x.dtype)[None],
+                       axis=1, keepdims=True) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)                             # [B,1,ch]
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., :d_inner].reshape(B_, H, P).astype(jnp.float32)
+    Bm = conv_out[..., d_inner: d_inner + N][:, 0].astype(jnp.float32)
+    Cm = conv_out[..., d_inner + N:][:, 0].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dt1 = dt[:, 0]                                               # [B,H]
+    decay = jnp.exp(dt1 * A)                                     # [B,H]
+    h = (decay[:, :, None, None] * state["h"]
+         + jnp.einsum("bh,bn,bhp->bhnp", dt1, Bm, xs))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h) + p["D"][None, :, None] * xs
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    y = jnp.einsum("btd,dh->bth", y, p["out_proj"])
+    return y, {"h": h, "conv": new_conv}

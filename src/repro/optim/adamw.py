@@ -1,0 +1,75 @@
+"""AdamW with mixed precision: bf16 working params, fp32 master + moments.
+
+State pytree mirrors the params (so the sharding policy applies verbatim:
+master/m/v inherit each param's PartitionSpec — ZeRO-3 style partitioning
+falls out of FSDP specs)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    master: Any      # fp32 copy of params
+    m: Any           # fp32 first moment
+    v: Any           # fp32 second moment
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(master=f32(params), m=zeros(params), v=zeros(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_bf16_params, new_state).  Grads may be bf16; math is fp32."""
+    step = state.step + 1
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(cfg.warmup_steps, 1))
+    lr = cfg.lr * warm
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = nu2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                       + cfg.weight_decay * p * (p.ndim >= 2))
+        return p2, mu2, nu2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_p = jax.tree.leaves(state.master)
+    out = [upd(g, mu, nu, p) for g, mu, nu, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), new_master)
+    return new_params, AdamWState(new_master, new_m, new_v, step)

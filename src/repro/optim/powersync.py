@@ -1,0 +1,109 @@
+"""PowerSync — the paper's communication-efficient sync generalized to
+data-parallel *gradient* all-reduce (DESIGN.md §5, the paper's closing
+claim: "the proposed communication-efficient MPA scheme can be generalized
+to other parallel machine learning algorithms").
+
+Mapping from the paper's LDA quantities:
+
+  phi_hat sync (Eq. 4)        ->  gradient all-reduce
+  residual matrix r (Eq. 7-9) ->  error-feedback accumulator (unsent gradient
+                                  mass retained locally, re-eligible later —
+                                  exactly Fig. 3's dynamic re-selection)
+  power words (rows)          ->  top-|lambda_r * rows| rows by synced |acc| row norm
+  power topics (cols)         ->  top-|lambda_c * cols| cols by synced |acc| col norm
+
+Deviation from the LDA case (documented): per-row column selection is free
+in POBP because the residual matrix itself is synchronized each iteration;
+for gradients that sync would cost as much as the payload it saves, so
+PowerSync uses *rectangular* (rows x cols) selection from two cheap norm
+vectors.  Selection inputs are psum'd, so every shard picks identical
+indices — the same property that makes the paper's scheme index-free on
+TPU (DESIGN.md §2).
+
+Intended use: inside a `shard_map` (or vmap-simulated) pure-DP training
+region where gradients are per-shard; see launch/train.py and
+tests/test_powersync.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sync import CommMeter, Reducer
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSyncConfig:
+    lambda_rows: float = 0.2       # fraction of rows synced per step
+    lambda_cols: float = 0.5       # fraction of cols synced per step
+    min_dense_size: int = 4096     # tensors smaller than this sync densely
+    sync_every_dense: int = 0      # 0=never: periodic full sync (robustness)
+
+
+def _as_2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """View any >=2-D tensor as [rows, cols] (leading dims merged)."""
+    shape = x.shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def powersync_tree(grads: Any, residual: Any, reducer: Reducer,
+                   cfg: PowerSyncConfig, num_shards: int):
+    """Compressed all-reduce with error feedback.
+
+    Returns (synced_mean_grads, new_residual).  Invariant: over repeated
+    steps, every coordinate's accumulated mass is eventually transmitted
+    (residual re-selection — the paper's no-information-loss argument §3.1).
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        if acc.ndim < 2 or acc.size <= cfg.min_dense_size:
+            synced = reducer.psum(acc, "powersync_dense")
+            return (synced / num_shards).astype(g.dtype), jnp.zeros_like(acc)
+
+        a2, shape = _as_2d(acc)
+        rows, cols = a2.shape
+        P = max(1, int(round(cfg.lambda_rows * rows)))
+        Pc = max(1, int(round(cfg.lambda_cols * cols)))
+
+        # step 1: power rows from the synchronized row-norm vector
+        row_norm = reducer.psum(jnp.sum(jnp.abs(a2), axis=1), "powersync_norms",
+                                compress=False)
+        sel_r = jax.lax.top_k(row_norm, P)[1]
+        picked = jnp.take(a2, sel_r, axis=0)                      # [P, cols]
+
+        # step 2: power cols from the synchronized col-norm of picked rows
+        col_norm = reducer.psum(jnp.sum(jnp.abs(picked), axis=0),
+                                "powersync_norms", compress=False)
+        sel_c = jax.lax.top_k(col_norm, Pc)[1]
+        packed = jnp.take(picked, sel_c, axis=1)                  # [P, Pc]
+
+        # the only payload-sized collective: the packed power submatrix
+        packed_sum = reducer.psum(packed, "powersync_payload")
+
+        synced = jnp.zeros_like(a2).at[sel_r[:, None], sel_c[None, :]].set(
+            packed_sum / num_shards)
+        # error feedback: what this shard did not transmit stays local
+        new_res = a2.at[sel_r[:, None], sel_c[None, :]].set(0.0)
+        return synced.reshape(shape).astype(g.dtype), new_res.reshape(shape)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def residual_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def dense_sync_tree(grads: Any, reducer: Reducer, num_shards: int):
+    """The baseline (Eq. 4 analogue): full-gradient all-reduce."""
+    return jax.tree.map(
+        lambda g: (reducer.psum(g.astype(jnp.float32), "dense_grads")
+                   / num_shards).astype(g.dtype), grads)

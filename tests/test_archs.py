@@ -1,0 +1,241 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + family-level
+correctness: SSD chunk invariance, chunked-vs-recurrent agreement, and
+prefill -> decode logits continuity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, input_specs, cell_supported
+from repro.configs.base import SMOKE_SHAPES, SSMSpec, ShapeSpec
+from repro.models import registry
+from repro.models import ssm as ssm_mod
+from repro.models.common import NULL_CTX
+
+
+def make_batch(cfg, B, S, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+             .astype(jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            k, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k, (B, S, cfg.d_model),
+                                            jnp.float32).astype(jnp.bfloat16)
+    return batch
+
+
+def run_forward(mod, params, cfg, batch, mode):
+    if cfg.family == "audio":
+        return mod.forward(params, batch["tokens"], batch["frames"], cfg,
+                           mode=mode)
+    return mod.forward(params, batch["tokens"], cfg,
+                       image_embeds=batch.get("image_embeds"), mode=mode)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    """Reduced config: one forward/train step, output shapes + no NaNs."""
+    cfg = get_config(arch_id).reduced()
+    mod = registry.build(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: mod.loss_fn(p, batch, cfg)))(params)
+    assert np.isfinite(float(loss)), arch_id
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch_id):
+    """Prefill cache structure == cache_zeros structure; decode step runs."""
+    cfg = get_config(arch_id).reduced()
+    mod = registry.build(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits, caches, _ = jax.jit(
+        lambda p, b: run_forward(mod, p, cfg, b, "prefill"))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    cz = registry.cache_zeros(cfg, B, S)
+    assert jax.tree.structure(caches) == jax.tree.structure(cz)
+    for got, want in zip(jax.tree.leaves(caches), jax.tree.leaves(cz)):
+        assert got.shape == want.shape, (arch_id, got.shape, want.shape)
+    lg, new_caches = jax.jit(
+        lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg))(
+        params, batch["tokens"][:, :1], cz, jnp.int32(3))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg.astype(jnp.float32)).any()), arch_id
+
+
+@pytest.mark.parametrize("arch_id", ["granite-3-2b", "deepseek-v2-lite-16b",
+                                     "mamba2-780m", "zamba2-2.7b",
+                                     "seamless-m4t-medium"])
+def test_prefill_then_decode_matches_full_forward(arch_id):
+    """logits(decode token S | prefill cache of S) == logits from a full
+    forward over S+1 tokens — the KV-cache/state correctness invariant."""
+    cfg = get_config(arch_id).reduced()
+    if cfg.moe is not None:
+        # capacity-based MoE drops depend on sequence-level congestion, so a
+        # 1-token decode can differ from teacher forcing; disable drops to
+        # test the cache path itself.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    mod = registry.build(cfg)
+    params = mod.init(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 16
+    full = make_batch(cfg, B, S + 1, key=3)
+    pre = dict(full)
+    pre["tokens"] = full["tokens"][:, :S]
+    if "frames" in pre:
+        pre["frames"] = full["frames"][:, : S + 1]  # encoder memory fixed
+
+    logits_full, _, _ = jax.jit(
+        lambda p, b: run_forward(mod, p, cfg, b, "prefill"))(params, full)
+    _, caches, _ = jax.jit(
+        lambda p, b: run_forward(mod, p, cfg, b, "prefill"))(params, pre)
+
+    # grow the cache capacity to S+1 along the sequence axis
+    target = registry.cache_zeros(cfg, B, S + 1)
+    if cfg.family == "audio":  # cross memory spans S+1 frames already
+        caches["stack"]["mem_kv"] = target["stack"]["mem_kv"]
+        mem, _, _ = None, None, None
+        from repro.models import encdec
+        memory = encdec.encode(params, full["frames"], cfg)
+        # recompute cross k/v on the full memory for exactness
+        def cross_kv(lp):
+            k = jnp.einsum("bmd,dh->bmh", memory, lp["cross"]["xattn"]["wk"])
+            v = jnp.einsum("bmd,dh->bmh", memory, lp["cross"]["xattn"]["wv"])
+            H, hd = cfg.n_heads, cfg.hd
+            return {"mk": k.reshape(B, -1, H, hd), "mv": v.reshape(B, -1, H, hd)}
+        caches["stack"]["mem_kv"] = jax.vmap(cross_kv)(params["dec"])
+
+    def grow(got, want):
+        if got.shape == want.shape:
+            return got
+        pads = [(0, w - g) for g, w in zip(got.shape, want.shape)]
+        return jnp.pad(got, pads)
+
+    caches = jax.tree.map(grow, caches, target)
+    lg, _ = jax.jit(lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg))(
+        params, full["tokens"][:, S:S + 1], caches, jnp.int32(S))
+    a = np.asarray(lg[:, 0].astype(jnp.float32))
+    b = np.asarray(logits_full[:, S].astype(jnp.float32))
+    # bf16 compute: compare top-1 agreement + value closeness
+    np.testing.assert_allclose(a, b, rtol=0.1, atol=0.15)
+    assert np.mean(np.argmax(a, -1) == np.argmax(b, -1)) >= 0.5
+
+
+def test_ssd_chunk_size_invariance():
+    """SSD output must not depend on the chunk length (fp32)."""
+    base = get_config("mamba2-780m").reduced()
+    B, T = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, T, base.d_model),
+                          jnp.float32)
+    outs = []
+    for chunk in (8, 16, 32):
+        cfg = dataclasses.replace(base, ssm=dataclasses.replace(base.ssm,
+                                                                chunk=chunk))
+        p = ssm_mod.ssm_params(jax.random.PRNGKey(1), cfg)
+        p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+        y, _ = ssm_mod.ssm_apply(p, x, cfg=cfg, ctx=NULL_CTX)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_recurrent_decode():
+    """Chunked SSD == step-by-step recurrence (the duality, fp32)."""
+    cfg = get_config("mamba2-780m").reduced()
+    B, T = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.d_model),
+                          jnp.float32) * 0.5
+    p = ssm_mod.ssm_params(jax.random.PRNGKey(3), cfg)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    y_chunked, _ = ssm_mod.ssm_apply(p, x, cfg=cfg, ctx=NULL_CTX)
+
+    d_inner, H, conv_ch = ssm_mod.ssm_dims(cfg)
+    state = {"h": jnp.zeros((B, H, cfg.ssm.state, cfg.ssm.headdim), jnp.float32),
+             "conv": jnp.zeros((B, cfg.ssm.conv_width - 1, conv_ch),
+                               jnp.float32)}
+    ys = []
+    for t in range(T):
+        y_t, state = ssm_mod.ssm_decode_step(p, x[:, t:t + 1], state, cfg=cfg,
+                                             ctx=NULL_CTX)
+        ys.append(np.asarray(y_t[:, 0]))
+    y_seq = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), y_seq, rtol=2e-3,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_cell_support_matrix(arch_id):
+    """long_500k only for SSM/hybrid; every other cell is supported."""
+    assert cell_supported(arch_id, "train_4k")
+    assert cell_supported(arch_id, "prefill_32k")
+    assert cell_supported(arch_id, "decode_32k")
+    expect_long = arch_id in ("mamba2-780m", "zamba2-2.7b")
+    assert cell_supported(arch_id, "long_500k") == expect_long
+
+
+def test_moe_scatter_combine_matches_gather():
+    """The §Perf 'scatter' combine path is numerically the baseline path."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("olmoe-1b-7b").reduced()
+    p = moe_mod.moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y1, _ = moe_mod.moe_apply(p, x, cfg=cfg, ctx=NULL_CTX)
+    cfg2 = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                            combine="scatter"))
+    y2, _ = moe_mod.moe_apply(p, x, cfg=cfg2, ctx=NULL_CTX)
+    np.testing.assert_allclose(np.asarray(y1, dtype=np.float32),
+                               np.asarray(y2, dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_manual_ep_matches_local():
+    """The shard_map manual-EP path (1x1 mesh degenerate) must equal the
+    plain path — validates dispatch slicing, psum combine, shared experts."""
+    import jax.numpy as jnp
+    from repro.models import moe as moe_mod
+    from repro.models.common import ShardingCtx
+    for arch in ("olmoe-1b-7b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch).reduced()
+        p = moe_mod.moe_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                              jnp.float32).astype(jnp.bfloat16)
+        y1, a1 = moe_mod.moe_apply(p, x, cfg=cfg, ctx=NULL_CTX)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        ctx = ShardingCtx(active=True, batch=("data",), model="model",
+                          mesh=mesh)
+        with mesh:
+            y2, a2 = jax.jit(
+                lambda p_, x_: moe_mod.moe_apply(p_, x_, cfg=cfg, ctx=ctx)
+            )(p, x)
+        np.testing.assert_allclose(np.asarray(y1, dtype=np.float32),
+                                   np.asarray(y2, dtype=np.float32),
+                                   rtol=2e-2, atol=2e-2, err_msg=arch)
+        np.testing.assert_allclose(float(a1), float(a2), rtol=1e-4)
+
+
+def test_moe_capacity_and_aux():
+    """MoE: overflow drops, combine weights normalized, aux finite."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("olmoe-1b-7b").reduced()
+    p = moe_mod.moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y, aux = moe_mod.moe_apply(p, x, cfg=cfg, ctx=NULL_CTX)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) > 0
+    assert not bool(jnp.isnan(y.astype(jnp.float32)).any())

@@ -1,0 +1,76 @@
+"""Fault tolerance: checkpoint roundtrip, crash/restart determinism,
+elastic restore, atomicity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint as ckpt
+
+
+def make_tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (8, 4)),
+            "nest": {"b": jax.random.normal(k2, (3,)).astype(jnp.bfloat16),
+                     "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 10, {"params": tree},
+              extra={"next_step": 10, "m": 3})
+    out, extra, step = ckpt.restore(str(tmp_path), 10, {"params": tree})
+    assert step == 10 and extra == {"next_step": 10, "m": 3}
+    for a, b in zip(jax.tree.leaves(out["params"]), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_retention(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, {"t": tree}, extra={"next_step": s})
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 3  # retention window
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 1, {"t": tree})
+    bad = {"t": {"a": jnp.zeros((9, 4)), "nest": tree["nest"]}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_crash_restart_resumes_identically(tmp_path):
+    """Train 30 steps straight vs train-with-crash-at-20 + restart: the
+    final losses must match exactly (data cursor + RNG + residuals saved)."""
+    from repro.launch.train import main as train_main
+    args = ["--arch", "smollm-360m", "--reduced", "--steps", "30",
+            "--batch", "4", "--seq", "16", "--shards", "2", "--sync",
+            "power", "--ckpt-every", "10", "--log-every", "100"]
+    ref_losses, _ = train_main(args)
+
+    d = str(tmp_path / "ck")
+    with pytest.raises(SystemExit):
+        train_main(args + ["--ckpt-dir", d, "--crash-at", "20"])
+    resumed, _ = train_main(args + ["--ckpt-dir", d])
+    # resumed covers steps 20..29; compare against the tail of the clean run
+    np.testing.assert_allclose(resumed[-5:], ref_losses[-5:], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_elastic_restore_via_device_put(tmp_path):
+    """Restore with explicit shardings (the remesh path) — single device
+    here, but exercises the device_put branch end-to-end."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (16, 8))}
+    ckpt.save(str(tmp_path), 2, {"params": tree})
+    sh = jax.tree.map(lambda _: jax.devices()[0], tree)
+    out, _, _ = ckpt.restore(str(tmp_path), 2, {"params": tree},
+                             shardings={"params": sh})
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["w"]))

@@ -1,0 +1,130 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+always against the pure-jnp ref.py oracle (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LDAConfig, MiniBatch
+from repro.core.pobp import dense_sweep
+from repro.core.sync import LocalReducer
+from repro.kernels.bp_update.kernel import bp_update_tokens, token_tile
+from repro.kernels.bp_update.ops import dense_sweep_pallas
+from repro.kernels.bp_update.ref import bp_update_tokens_ref
+from repro.kernels.power_pack import ops as pp_ops
+from repro.kernels.power_pack.ref import pack_rows_ref, scatter_add_rows_ref
+
+
+def _rand_inputs(key, T, K, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c = jax.random.randint(k1, (T, 1), 0, 4).astype(dtype)
+    mu = jax.nn.softmax(jax.random.normal(k2, (T, K)), -1).astype(dtype)
+    th = (jax.random.uniform(k3, (T, K)) * 5).astype(dtype)
+    ph = (jax.random.uniform(k4, (T, K)) * 5).astype(dtype)
+    pt = jnp.sum(ph, 0, keepdims=True) + 1.0
+    return c, mu, th, ph, pt
+
+
+# ------------------------------------------------------------ bp_update
+
+@pytest.mark.parametrize("T,K", [(8, 128), (64, 128), (256, 256), (40, 384),
+                                 (512, 1024), (16, 2048)])
+def test_bp_update_shape_sweep(T, K):
+    c, mu, th, ph, pt = _rand_inputs(jax.random.PRNGKey(T * K), T, K)
+    kw = dict(alpha=0.1, beta=0.01, wbeta=1.2)
+    m1, r1 = bp_update_tokens(c, mu, th, ph, pt, **kw)
+    m2, r2 = bp_update_tokens_ref(c, mu, th, ph, pt, **kw)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5, atol=1e-6)
+    # normalized output
+    np.testing.assert_allclose(np.asarray(jnp.sum(m1, -1)), 1.0, atol=1e-5)
+
+
+def test_bp_update_dtype_bf16():
+    c, mu, th, ph, pt = _rand_inputs(jax.random.PRNGKey(0), 32, 128,
+                                     dtype=jnp.bfloat16)
+    kw = dict(alpha=0.1, beta=0.01, wbeta=1.2)
+    m1, r1 = bp_update_tokens(c, mu, th, ph, pt, **kw)
+    m2, r2 = bp_update_tokens_ref(c, mu, th, ph, pt, **kw)
+    np.testing.assert_allclose(np.asarray(m1, dtype=np.float32),
+                               np.asarray(m2, dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_token_tile_fits_vmem():
+    for K in (128, 512, 2048, 4096, 10240):
+        tt = token_tile(K)
+        assert tt % 8 == 0 and tt >= 8
+        assert 5 * tt * K * 4 <= 16 * 1024 * 1024  # hard VMEM budget
+
+
+def test_dense_sweep_pallas_matches_jnp_sweep():
+    """ops.py wrapper (gathers + kernel + scatter) vs core.pobp.dense_sweep."""
+    key = jax.random.PRNGKey(3)
+    cfg = LDAConfig(vocab_size=90, num_topics=16)
+    D, L = 12, 20
+    wid = jax.random.randint(key, (D, L), 0, cfg.vocab_size).astype(jnp.int32)
+    cnt = jax.random.randint(key, (D, L), 0, 3).astype(jnp.float32)
+    batch = MiniBatch(wid, cnt)
+    mu = jax.nn.softmax(jax.random.normal(key, (D, L, cfg.num_topics)), -1)
+    phi = jax.random.uniform(key, (cfg.vocab_size, cfg.num_topics)) * 3
+    phi_tot = jnp.sum(phi, 0)
+    m1, r1 = dense_sweep_pallas(batch, mu, phi, phi_tot, cfg)
+    m2, r2 = dense_sweep(batch, mu, phi, phi_tot, cfg, LocalReducer())
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ power_pack
+
+@pytest.mark.parametrize("W,K,P,Pk", [(64, 32, 8, 4), (128, 256, 16, 50),
+                                      (500, 96, 50, 10), (32, 130, 4, 130)])
+def test_power_pack_shape_sweep(W, K, P, Pk):
+    rng = np.random.default_rng(W + K)
+    mat = jnp.asarray(rng.normal(size=(W, K)).astype(np.float32))
+    sel_w = jnp.asarray(rng.choice(W, P, replace=False).astype(np.int32))
+    sel_k = jnp.asarray(np.stack([rng.choice(K, Pk, replace=False)
+                                  for _ in range(P)]).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(P, Pk)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(pp_ops.pack_rows(mat, sel_w, sel_k)),
+                               np.asarray(pack_rows_ref(mat, sel_w, sel_k)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(pp_ops.scatter_add_rows(mat, sel_w, sel_k, vals)),
+        np.asarray(scatter_add_rows_ref(mat, sel_w, sel_k, vals)),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 20), st.data())
+def test_power_pack_property_roundtrip(W, K, data):
+    """hypothesis: pack(scatter(zeros, idx, vals)) == vals for any valid idx."""
+    P = data.draw(st.integers(1, W))
+    Pk = data.draw(st.integers(1, K))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    sel_w = jnp.asarray(rng.choice(W, P, replace=False).astype(np.int32))
+    sel_k = jnp.asarray(np.stack([rng.choice(K, Pk, replace=False)
+                                  for _ in range(P)]).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(P, Pk)).astype(np.float32))
+    zero = jnp.zeros((W, K), jnp.float32)
+    scattered = pp_ops.scatter_add_rows(zero, sel_w, sel_k, vals)
+    back = pp_ops.pack_rows(scattered, sel_w, sel_k)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(vals), rtol=1e-6,
+                               atol=1e-6)
+    # total mass conserved
+    np.testing.assert_allclose(float(jnp.sum(scattered)), float(jnp.sum(vals)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.sampled_from([128, 256, 384]), st.data())
+def test_bp_update_property_normalized_and_positive(T, K, data):
+    """hypothesis: output is a prob. dist. and residual >= 0, any T/K/counts."""
+    seed = data.draw(st.integers(0, 2**31))
+    c, mu, th, ph, pt = _rand_inputs(jax.random.PRNGKey(seed), T, K)
+    m1, r1 = bp_update_tokens(c, mu, th, ph, pt, alpha=0.05, beta=0.02, wbeta=2.0)
+    assert not np.any(np.isnan(np.asarray(m1)))
+    np.testing.assert_allclose(np.asarray(jnp.sum(m1, -1)), 1.0, atol=1e-4)
+    assert np.all(np.asarray(r1) >= 0)
