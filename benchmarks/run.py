@@ -274,6 +274,134 @@ def bench_convergence(quick=False):
 
 
 # ------------------------------------------------------------------
+# this repo's perf trajectory: the selective inner iteration itself
+# (tokens/sec + per-iteration wall time; seed [D, L, K] layout vs the
+# token-major packed loop of DESIGN.md §2, plus the dense baseline)
+# ------------------------------------------------------------------
+
+def bench_inner_loop(quick=False):
+    from benchmarks.common import base_cfg, corpus
+    from repro.core import pobp, power as pw
+    from repro.core.residuals import (mean_residual, packed_rw_delta,
+                                      token_scatter_wk)
+    from repro.core.sync import LocalReducer
+    from repro.data import docs_to_padded
+
+    docs, stats, _ = corpus()
+    batch = docs_to_padded(list(docs))
+    red = LocalReducer()
+    out = {"iters_timed": 30, "parity_iters": 8}
+
+    # (K, Pk) grid: the K//8 rows match bench_speed's regime; (64, 50) is
+    # the LDAConfig default lambda_k_abs=50 (the paper's lambda_K*K = 50),
+    # where the seed's O(T*Pk) scatters hurt most.
+    grid = [(64, 8)] if quick else [(64, 8), (128, 16), (64, 50)]
+    for K, Pk_req in grid:
+        cfg = base_cfg(num_topics=K, lambda_k_abs=Pk_req,
+                       residual_tol=1e-9, inner_iters=8)
+        W, P = cfg.vocab_size, cfg.num_power_words
+        Pk = cfg.num_power_topics
+        layout = batch.token_layout()
+        total_tokens = float(jnp.sum(batch.counts))
+
+        # ---- shared state after the first dense sweep (Fig. 4 lines 3-10)
+        key = jax.random.PRNGKey(0)
+        u0 = jax.random.uniform(key, (*batch.word_ids.shape, K),
+                                minval=0.01, maxval=1.0)
+        mu0 = u0 / jnp.sum(u0, -1, keepdims=True)
+        phi_eff = token_scatter_wk(batch.word_ids,
+                                   batch.counts[..., None] * mu0, W)
+        phi_tot = jnp.sum(phi_eff, axis=0)
+        mu1, r_glob = pobp.dense_sweep(batch, mu0, phi_eff, phi_tot, cfg, red)
+        theta = jnp.einsum("dl,dlk->dk", batch.counts, mu1)
+        r_w = jnp.sum(r_glob, axis=1)
+        state0 = dict(mu=mu1, theta=theta, phi_eff=phi_eff, phi_tot=phi_tot,
+                      r_glob=r_glob, r_w=r_w)
+
+        # ---- seed-layout iteration: full [D, L, K] rewrite + O(W*K) r_w
+        def seed_step(mu, theta, phi_eff, phi_tot, r_glob, r_w):
+            sel_w = pw.select_power_words(r_w, P)
+            sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
+            mu, theta, d_pack, r_pack = pobp.selective_sweep(
+                batch, mu, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_pack)
+            phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_pack)
+            r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
+            return mu, theta, phi_eff, phi_tot, r_glob, jnp.sum(r_glob, 1)
+
+        # ---- token-major packed iteration (the production body)
+        def token_step(mu_t, theta, phi_eff, phi_tot, r_glob, r_w):
+            sel_w = pw.select_power_words(r_w, P)
+            sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
+            mu_t, theta, d_pack, r_pack = pobp.selective_sweep_tokens(
+                layout, mu_t, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            rw_delta = packed_rw_delta(r_glob, sel_w, sel_k, r_pack)
+            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_pack)
+            phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_pack)
+            r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
+            return (mu_t, theta, phi_eff, phi_tot, r_glob,
+                    r_w.at[sel_w].add(rw_delta))
+
+        # ---- dense iteration (Eq. 4/5 baseline, for scale)
+        def dense_step(mu, theta, phi_eff, phi_tot, r_glob, r_w):
+            mu, r_wk = pobp.dense_sweep(batch, mu, phi_eff, phi_tot, cfg, red)
+            phi_eff = token_scatter_wk(batch.word_ids,
+                                       batch.counts[..., None] * mu, W)
+            return (mu, jnp.einsum("dl,dlk->dk", batch.counts, mu), phi_eff,
+                    jnp.sum(phi_eff, 0), r_wk, jnp.sum(r_wk, 1))
+
+        def run_loop(step, st, iters, token_major, record_r=False):
+            carry = (st["mu"].reshape(-1, K) if token_major else st["mu"],
+                     st["theta"], st["phi_eff"], st["phi_tot"],
+                     st["r_glob"], st["r_w"])
+            # NB: no donate_argnums — on CPU, donated carries force XLA into
+            # an in-place update path that is ~2x slower than the fused
+            # copy-and-update it emits for fresh outputs (both layouts are
+            # measured under the same, faster, regime).
+            fn = jax.jit(step)
+            carry = fn(*carry)                        # warmup/compile
+            jax.block_until_ready(carry)
+            trace = [float(mean_residual(carry[-1], total_tokens))]
+            t0 = time.time()
+            for _ in range(iters - 1):
+                carry = fn(*carry)
+                if record_r:
+                    trace.append(float(mean_residual(carry[-1],
+                                                     total_tokens)))
+            jax.block_until_ready(carry)
+            return (time.time() - t0) / (iters - 1), trace
+
+        iters = out["iters_timed"]
+        rec = {}
+        for name, step, tm in (("seed_layout", seed_step, False),
+                               ("token_major", token_step, True),
+                               ("dense", dense_step, False)):
+            dt, _ = run_loop(step, state0, iters, tm)
+            rec[name] = {"iter_s": dt, "tokens_per_s": total_tokens / dt}
+            _emit(f"inner_loop/K{K}_Pk{Pk}/{name}_tokens_per_s",
+                  f"{total_tokens / dt:.0f}", f"iter={dt * 1e3:.2f}ms")
+        speedup = rec["seed_layout"]["iter_s"] / rec["token_major"]["iter_s"]
+        _emit(f"inner_loop/K{K}_Pk{Pk}/token_major_speedup_x", f"{speedup:.2f}",
+              "acceptance: >= 2x at K >= 64")
+
+        # ---- convergence parity: identical mean_r trajectories
+        n_par = out["parity_iters"]
+        _, tr_seed = run_loop(seed_step, state0, n_par, False, record_r=True)
+        _, tr_tok = run_loop(token_step, state0, n_par, True, record_r=True)
+        drift = max(abs(a - b) for a, b in zip(tr_seed, tr_tok))
+        _emit(f"inner_loop/K{K}_Pk{Pk}/mean_r_max_drift", f"{drift:.2e}",
+              "token-major vs seed trajectory (<= 1e-5)")
+        rec.update(speedup_x=speedup, mean_r_seed=tr_seed,
+                   mean_r_token=tr_tok, mean_r_max_drift=drift,
+                   tokens=total_tokens, P=P, Pk=Pk,
+                   T_slots=int(layout.num_slots))
+        out[f"K{K}_Pk{Pk}"] = rec
+    # quick mode writes a separate file so a smoke run can never clobber
+    # the committed full-grid artifact
+    _save("BENCH_inner_loop_quick" if quick else "BENCH_inner_loop", out)
+
+
+# ------------------------------------------------------------------
 # Fig. 6: power-law (rank-size) structure of residuals
 # ------------------------------------------------------------------
 
@@ -310,8 +438,8 @@ def bench_powerlaw(quick=False):
 # ------------------------------------------------------------------
 
 ALL = [bench_comm_volume, bench_lambda_sweep, bench_accuracy, bench_speed,
-       bench_scalability, bench_memory, bench_complexity, bench_convergence,
-       bench_powerlaw]
+       bench_inner_loop, bench_scalability, bench_memory, bench_complexity,
+       bench_convergence, bench_powerlaw]
 
 
 def main() -> None:

@@ -20,6 +20,18 @@ Sync modes:
   - ``dense``  — the classic MPA baseline (Newman et al.; Eq. 4/5):
     full phi matrix every iteration.  Implemented for the paper's
     before/after comparison.
+
+The power inner loop is **token-major and packed** (DESIGN.md §2): the
+padded-CSR [D, L] batch flattens to a [T, K] token layout once per
+mini-batch, each selective iteration works on [T, Pk] gathers plus the
+[P, Pk] sync buffers, and the word-residual convergence signal is carried
+and updated incrementally in packed form.  The jnp path folds the update
+back into the carried messages with a scatter-free O(T*K*Pk)
+compare-select chain — 4-6x the seed `selective_sweep`'s throughput at
+every measured (K, Pk), though still K-proportional; only the Pallas
+`power_sweep` path truly confines compute to the power submatrix the way
+communication is (Eq. 6).  `selective_sweep` is kept below as the
+oracle/benchmark baseline.
 """
 
 from __future__ import annotations
@@ -32,9 +44,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import power as pw
-from repro.core.residuals import mean_residual, token_scatter_wk
+from repro.core.residuals import (mean_residual, packed_rw_delta,
+                                  token_scatter_wk)
 from repro.core.sync import CommMeter, LocalReducer, Reducer
-from repro.core.types import LDAConfig, MiniBatch
+from repro.core.types import LDAConfig, MiniBatch, TokenLayout
 
 
 # --------------------------------------------------------------------------
@@ -86,6 +99,12 @@ def selective_sweep(
 ):
     """Update messages only at (power word, power topic) coordinates.
 
+    SEED-LAYOUT ORACLE: operates on the [D, L, K] batch-major messages and
+    rewrites the full tensor per call.  The production inner loop uses the
+    token-major `selective_sweep_tokens` below (numerically equivalent —
+    pinned by tests/test_power_sweep.py); this version stays as the
+    semantics oracle and the `benchmarks.run --only inner_loop` baseline.
+
     Never materializes a [W, K] intermediate: token deltas scatter straight
     into the packed [P, Pk] sync buffers (the TPU-native formulation of the
     paper's sparse communication — DESIGN.md §2).
@@ -136,6 +155,140 @@ def selective_sweep(
 
 
 # --------------------------------------------------------------------------
+# token-major selective sweep — the production inner-loop body
+# --------------------------------------------------------------------------
+
+def _gather_selection(layout: TokenLayout, mu_t, theta, phi_tot, sel_k,
+                      p_tok, num_power):
+    """Per-token [T, Pk] gathers at the selected coordinates.
+
+    All gathers are flat token streams — no [T, K] broadcast or temporary
+    is ever formed (the jaxpr contract pinned in DESIGN.md §2).
+    """
+    p_safe = jnp.where(p_tok < num_power, p_tok, 0)
+    k_tok = jnp.take(sel_k, p_safe, axis=0)                      # [T, Pk]
+    mu_sel = jnp.take_along_axis(mu_t, k_tok, axis=1)            # [T, Pk]
+    theta_sel = theta[layout.doc_ids[:, None], k_tok]            # [T, Pk]
+    pt_sel = jnp.take(phi_tot, k_tok)                            # [T, Pk]
+    return k_tok, mu_sel, theta_sel, pt_sel
+
+
+def _apply_token_update(layout: TokenLayout, mu_t, theta, k_tok, mu_sel,
+                        mu_new_sel):
+    """Fold the [T, Pk] update back into the carried mu_t/theta, scatter-free.
+
+    XLA's general scatter serializes per update element (~100ns/elem on
+    CPU, similarly painful per-core on TPU); at T*Pk updates per iteration
+    it dominates the sweep.  Instead the delta is accumulated through a
+    static compare-select chain over the Pk selected columns — Pk fused
+    vectorized passes that XLA folds into a single elementwise loop over
+    the donated carry — and theta's per-doc reduction reuses the same delta
+    via a free [D, L, K] reshape view (no gather/scatter anywhere;
+    DESIGN.md §2 measures both formulations).
+
+    Non-power tokens have d_mu == 0 exactly, so their carry entries are
+    bit-identical after the add.
+    """
+    d_mu = mu_new_sel - mu_sel                                   # [T, Pk]
+    K = mu_t.shape[1]
+    iota = jnp.arange(K, dtype=k_tok.dtype)[None, :]
+    delta = jnp.zeros_like(mu_t)
+    for j in range(k_tok.shape[1]):                              # static Pk
+        delta = delta + jnp.where(iota == k_tok[:, j:j + 1],
+                                  d_mu[:, j:j + 1], 0.0)
+    mu_t_new = mu_t + delta
+    c_delta = (layout.counts * delta).reshape(
+        layout.num_docs, layout.max_len, K)
+    theta_new = theta + jnp.sum(c_delta, axis=1)
+    return mu_t_new, theta_new, d_mu
+
+
+def selective_sweep_tokens(
+    layout: TokenLayout,
+    mu_t: jnp.ndarray,            # [T, Kl] token-major messages
+    theta: jnp.ndarray,           # [Dl, Kl]
+    phi_eff_wk: jnp.ndarray,      # [W, Kl]
+    phi_tot: jnp.ndarray,         # [Kl]
+    sel_w: jnp.ndarray,           # [P]
+    sel_k: jnp.ndarray,           # [P, Pk]
+    cfg: LDAConfig,
+):
+    """Token-major selective sweep (jnp reference path, DESIGN.md §2).
+
+    Same math as `selective_sweep` restricted to flat [T, Pk] streams:
+    mass-conserving renormalization within the selected coordinates, packed
+    [P, Pk] delta/residual outputs, untouched entries bit-identical.
+
+    Returns (mu_t_new, theta_new, delta_phi_packed, r_packed).
+    """
+    P, Pk = sel_k.shape
+    p_tok = pw.token_power_rows(layout.word_ids, sel_w, cfg.vocab_size)
+    k_tok, mu_sel, theta_sel, pt_sel = _gather_selection(
+        layout, mu_t, theta, phi_tot, sel_k, p_tok, P)
+    phi_pack = pw.pack_rows(phi_eff_wk, sel_w, sel_k)            # [P, Pk]
+    phi_sel = jnp.take(phi_pack, jnp.where(p_tok < P, p_tok, 0), axis=0)
+
+    c = layout.counts
+    self_c = c * mu_sel
+    sel_mass = jnp.sum(mu_sel, axis=-1, keepdims=True)           # conserved
+    th = theta_sel - self_c + cfg.alpha
+    ph = phi_sel - self_c + cfg.beta
+    pt = pt_sel - self_c + cfg.vocab_size * cfg.beta
+    u = th * ph / pt
+    mu_new_sel = u * sel_mass / jnp.maximum(
+        jnp.sum(u, axis=-1, keepdims=True), 1e-30)
+    mu_new_sel = jnp.where((p_tok < P)[:, None], mu_new_sel, mu_sel)
+
+    mu_t_new, theta_new, d_mu = _apply_token_update(
+        layout, mu_t, theta, k_tok, mu_sel, mu_new_sel)
+    cd, rv = c * d_mu, c * jnp.abs(d_mu)
+    if layout.num_slots * P <= 8_000_000:
+        # one-hot contraction (the jnp mirror of the power_sweep kernel's
+        # packed accumulation): tokens with p_tok == P match no column and
+        # drop out.  ~5x faster than XLA's serialized scatter on CPU; the
+        # scatter branch below covers shapes where [T, P] would not fit.
+        onehot_p = (p_tok[:, None] ==
+                    jnp.arange(P, dtype=p_tok.dtype)[None, :]).astype(mu_t.dtype)
+        dims = (((0,), (0,)), ((), ()))
+        delta_phi_packed = jax.lax.dot_general(onehot_p, cd, dims)
+        r_packed = jax.lax.dot_general(onehot_p, rv, dims)
+    else:
+        # p_tok == P for non-power tokens -> dropped by the bounds check
+        delta_phi_packed = jnp.zeros((P, Pk), mu_t.dtype).at[p_tok].add(
+            cd, mode="drop")
+        r_packed = jnp.zeros((P, Pk), mu_t.dtype).at[p_tok].add(
+            rv, mode="drop")
+    return mu_t_new, theta_new, delta_phi_packed, r_packed
+
+
+def selective_sweep_tokens_pallas(
+    layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
+    cfg: LDAConfig,
+):
+    """Fused-kernel selective sweep: Pallas power_pack gather + power_sweep.
+
+    The packed phi gather runs on the scalar-prefetch power_pack kernel;
+    update, renormalization and the packed delta/residual scatter fuse into
+    one power_sweep pass (kernels/power_sweep).  Same contract as
+    `selective_sweep_tokens`.
+    """
+    from repro.kernels.power_pack import ops as pp_ops
+    from repro.kernels.power_sweep.ops import power_sweep
+
+    P, Pk = sel_k.shape
+    p_tok = pw.token_power_rows(layout.word_ids, sel_w, cfg.vocab_size)
+    k_tok, mu_sel, theta_sel, pt_sel = _gather_selection(
+        layout, mu_t, theta, phi_tot, sel_k, p_tok, P)
+    phi_pack = pp_ops.pack_rows(phi_eff_wk, sel_w, sel_k)        # Pallas
+    mu_new_sel, delta_phi_packed, r_packed = power_sweep(
+        p_tok, layout.counts, mu_sel, theta_sel, pt_sel, phi_pack,
+        alpha=cfg.alpha, beta=cfg.beta, wbeta=cfg.vocab_size * cfg.beta)
+    mu_t_new, theta_new, _ = _apply_token_update(
+        layout, mu_t, theta, k_tok, mu_sel, mu_new_sel)
+    return mu_t_new, theta_new, delta_phi_packed, r_packed
+
+
+# --------------------------------------------------------------------------
 # the per-shard mini-batch routine (Fig. 4 body, one m)
 # --------------------------------------------------------------------------
 
@@ -170,6 +323,7 @@ def pobp_minibatch(
     W = cfg.vocab_size
     Kl = phi_acc_wk.shape[1]
     P, Pk = cfg.num_power_words, min(cfg.num_power_topics, Kl)
+    layout = batch.token_layout()    # persistent token-major view (§2)
 
     # ---- lines 3-8: random init, local stats, first dense update ----
     u0 = jax.random.uniform(key, (*batch.word_ids.shape, Kl), minval=0.01, maxval=1.0)
@@ -181,7 +335,8 @@ def pobp_minibatch(
     if cfg.impl == "pallas" and isinstance(model_reducer, LocalReducer):
         # fused Pallas kernel (normalization in-kernel => K must be unsharded)
         from repro.kernels.bp_update.ops import dense_sweep_pallas
-        mu1, r_wk_local = dense_sweep_pallas(batch, mu0, phi_eff, phi_tot, cfg)
+        mu1, r_wk_local = dense_sweep_pallas(batch, mu0, phi_eff, phi_tot, cfg,
+                                             layout)
     else:
         mu1, r_wk_local = dense_sweep(batch, mu0, phi_eff, phi_tot, cfg,
                                       model_reducer)
@@ -196,8 +351,20 @@ def pobp_minibatch(
     r_w = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw", compress=False)
 
     if sync_mode == "power":
-        carry0 = (mu1, theta, phi_eff, phi_tot, r_glob, r_w,
-                  jnp.asarray(1, jnp.int32))
+        # Token-major persistent inner loop (DESIGN.md §2): messages are
+        # carried as [T, Kl], every iteration touches only [T, Pk] token
+        # streams + [P, Pk] packed buffers, and the r_w convergence signal
+        # updates incrementally from the packed residual refresh instead of
+        # an O(W*K) row reduction per iteration.
+        if cfg.impl == "pallas":
+            sweep_fn = selective_sweep_tokens_pallas
+            from repro.kernels.power_pack import ops as pp_ops
+            phi_scatter = pp_ops.scatter_add_rows
+        else:
+            sweep_fn = selective_sweep_tokens
+            phi_scatter = pw.scatter_add_rows
+        carry0 = (mu1.reshape(layout.num_slots, Kl), theta, phi_eff, phi_tot,
+                  r_glob, r_w, jnp.asarray(1, jnp.int32))
 
         def cond(carry):
             *_, r_w_c, t = carry
@@ -205,25 +372,28 @@ def pobp_minibatch(
                                    mean_residual(r_w_c, total_tokens) > cfg.residual_tol)
 
         def body(carry):
-            mu, theta, phi_eff, phi_tot, r_glob, r_w_c, t = carry
+            mu_t, theta, phi_eff, phi_tot, r_glob, r_w_c, t = carry
             # lines 12-13 / 27-28: two-step power selection (identical on
             # every data shard -- computed from synchronized residuals).
             sel_w = pw.select_power_words(r_w_c, P)
             sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
-            mu, theta, d_phi_pack, r_pack = selective_sweep(
-                batch, mu, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            mu_t, theta, d_phi_pack, r_pack = sweep_fn(
+                layout, mu_t, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
             # lines 23-24: communicate only the power submatrices
             d_phi_pack = data_reducer.psum(d_phi_pack, "power")
             r_pack = data_reducer.psum(r_pack, "power")
-            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_phi_pack)
+            # packed-carry refresh: O(P*Pk) state updates, Eq. 9
+            rw_delta = packed_rw_delta(r_glob, sel_w, sel_k, r_pack)
+            phi_eff = phi_scatter(phi_eff, sel_w, sel_k, d_phi_pack)
             phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_phi_pack)
             r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
-            r_w_c = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw",
-                                       compress=False)
-            return (mu, theta, phi_eff, phi_tot, r_glob, r_w_c, t + 1)
+            rw_delta = model_reducer.psum(rw_delta, "model_rw", compress=False)
+            r_w_c = r_w_c.at[sel_w].add(rw_delta)
+            return (mu_t, theta, phi_eff, phi_tot, r_glob, r_w_c, t + 1)
 
-        mu, theta, phi_eff, phi_tot, r_glob, r_w, t = jax.lax.while_loop(
+        mu_t, theta, phi_eff, phi_tot, r_glob, r_w, t = jax.lax.while_loop(
             cond, body, carry0)
+        mu = layout.to_batch_major(mu_t)
     elif sync_mode == "dense":
         carry0 = (mu1, theta, phi_eff, phi_tot, r_w, jnp.asarray(1, jnp.int32))
 

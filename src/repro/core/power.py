@@ -47,6 +47,20 @@ def word_to_row(word_idx: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
     return rows.at[word_idx].set(jnp.arange(word_idx.shape[0], dtype=jnp.int32))
 
 
+def token_power_rows(word_ids_t: jnp.ndarray, sel_w: jnp.ndarray,
+                     vocab_size: int) -> jnp.ndarray:
+    """Token-major power-row map: token -> packed row in [0, P), or P.
+
+    The P "guard" value is what the power_sweep kernel and the packed
+    scatters use to drop non-power tokens (DESIGN.md §2) — one [W] scatter
+    plus one [T] gather per iteration, never a [T, K] mask.
+    """
+    P = sel_w.shape[0]
+    word_row = word_to_row(sel_w, vocab_size)
+    p_tok = jnp.take(word_row, word_ids_t, axis=0)
+    return jnp.where(p_tok >= 0, p_tok, P).astype(jnp.int32)
+
+
 def pack_rows(mat_wk: jnp.ndarray, word_idx: jnp.ndarray,
               topic_idx: jnp.ndarray) -> jnp.ndarray:
     """Gather the [P, Pk] power submatrix out of a [W, K] matrix."""

@@ -25,3 +25,23 @@ def token_scatter_wk(word_ids: jnp.ndarray, values_dlk: jnp.ndarray,
 def mean_residual(r_w: jnp.ndarray, total_tokens: jnp.ndarray) -> jnp.ndarray:
     """Line 26 of Fig. 4: sum_w r_w / sum_{w,d} x_{w,d}."""
     return jnp.sum(r_w) / jnp.maximum(total_tokens, 1.0)
+
+
+def packed_rw_delta(r_glob_wk: jnp.ndarray, sel_w: jnp.ndarray,
+                    sel_k: jnp.ndarray, r_pack_new: jnp.ndarray) -> jnp.ndarray:
+    """Per-power-word change of the word residual under a packed refresh.
+
+    The selective iteration only rewrites r at the [P, Pk] power coordinates
+    (Eq. 9), so the [W] word-residual vector moves by exactly
+
+        delta[p] = sum_j r_pack_new[p, j] - r_glob[sel_w[p], sel_k[p, j]]
+
+    — an O(P*Pk) update of the convergence signal instead of the seed's
+    O(W*K) row reduction per iteration (DESIGN.md §2 packed-carry
+    invariant).  Call BEFORE scattering r_pack_new into r_glob.
+    Returns delta [P]; the caller adds it at rows sel_w (after the model
+    psum when the topic axis is sharded).
+    """
+    rows = jnp.take(r_glob_wk, sel_w, axis=0)
+    old = jnp.take_along_axis(rows, sel_k, axis=1)
+    return jnp.sum(r_pack_new - old, axis=1)

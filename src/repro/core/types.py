@@ -92,6 +92,44 @@ class MiniBatch:
     def num_tokens(self) -> jnp.ndarray:
         return jnp.sum(self.counts)
 
+    def token_layout(self) -> "TokenLayout":
+        """Flatten to the token-major [T] layout (T = D*L, row-major)."""
+        D, L = self.word_ids.shape
+        return TokenLayout(
+            word_ids=self.word_ids.reshape(-1),
+            counts=self.counts.reshape(-1, 1),
+            doc_ids=jnp.repeat(jnp.arange(D, dtype=jnp.int32), L),
+            num_docs=D, max_len=L)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenLayout:
+    """Token-major view of a padded-CSR mini-batch (DESIGN.md §2).
+
+    The [D, L] slot grid flattens row-major to T = D*L token slots, built
+    ONCE per mini-batch and carried through every sweep — per-token state
+    (messages mu) lives as [T, K] and per-token metadata as [T] vectors, so
+    sweeps are flat streams over tokens with no [D, L, K] reshapes.
+
+    word_ids: int32[T]    vocabulary index per token slot (0 for padding)
+    counts:   float32[T,1] count per token slot            (0 for padding)
+    doc_ids:  int32[T]    owning document of each slot
+    """
+
+    word_ids: jnp.ndarray
+    counts: jnp.ndarray
+    doc_ids: jnp.ndarray
+    num_docs: int
+    max_len: int
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_docs * self.max_len
+
+    def to_batch_major(self, values_tk: jnp.ndarray) -> jnp.ndarray:
+        """[T, K] token-major tensor back to the [D, L, K] batch view."""
+        return values_tk.reshape(self.num_docs, self.max_len, -1)
+
 
 @dataclasses.dataclass
 class LDAState:

@@ -1,0 +1,11 @@
+"""Distribution utilities: fault-tolerant checkpointing and sharding policy.
+
+`checkpoint` persists pytrees of (possibly bf16) arrays atomically with a
+bounded retention window — the crash/restart contract of launch/train.py and
+examples/stream_big_corpus.py.  `sharding` is pure metadata: it maps param /
+batch / cache pytrees to PartitionSpecs for the production meshes
+(launch/mesh.py) and validates divisibility so pjit never sees a
+non-divisible sharded axis (DESIGN.md §6).
+"""
+
+from repro.dist import checkpoint, sharding  # noqa: F401

@@ -1,0 +1,146 @@
+"""Atomic pytree checkpointing with a 3-step retention window.
+
+Layout on disk (one directory per step):
+
+    <dir>/step_0000010/
+        manifest.json    # per-leaf key path, shape, dtype + the extra dict
+        data.npz         # raw little-endian bytes per leaf (dtype-agnostic,
+                         # so bf16 and any future ml_dtypes survive np.savez)
+
+Writes are atomic: everything lands in a ``.tmp-<step>`` staging directory
+that is ``os.rename``d into place — a crash mid-save can never leave a
+half-written checkpoint that ``latest_step`` would pick up.  Restore is
+template-driven: the caller supplies a pytree of like-shaped arrays (or
+ShapeDtypeStructs) and gets the same structure back; any mismatch is a
+``ValueError`` rather than a silently reshaped parameter.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_RETAIN = 3          # checkpoints kept on disk (newest first)
+_PREFIX = "step_"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"{_PREFIX}{step:07d}")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return ([(jax.tree_util.keystr(path), leaf) for path, leaf in leaves],
+            treedef)
+
+
+def save(directory: str, step: int, trees: Dict[str, Any],
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Persist `trees` (a dict of pytrees) + a JSON-able `extra` dict."""
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten(trees)
+    manifest = {"step": int(step), "extra": extra or {}, "leaves": []}
+    payload = {}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        manifest["leaves"].append({"key": key, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+        arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to 1-d
+        # raw bytes: np.savez can't serialize ml_dtypes (bf16) headers
+        payload[f"leaf_{i}"] = np.frombuffer(arr.tobytes(), np.uint8)
+
+    tmp = os.path.join(directory, f".tmp-{step}-{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "data.npz"), **payload)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    final = _step_dir(directory, step)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _enforce_retention(directory)
+    return final
+
+
+def _enforce_retention(directory: str) -> None:
+    steps = sorted(_all_steps(directory))
+    for s in steps[:-_RETAIN]:
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+
+
+def _all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if not name.startswith(_PREFIX):
+            continue
+        if not os.path.exists(os.path.join(directory, name, "manifest.json")):
+            continue  # staging dirs / partial writes never qualify
+        try:
+            out.append(int(name[len(_PREFIX):]))
+        except ValueError:
+            continue
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest complete checkpoint step in `directory`, or None."""
+    steps = _all_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, template: Dict[str, Any],
+            shardings: Optional[Dict[str, Any]] = None
+            ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:
+    """Load the checkpoint at `step` into the structure of `template`.
+
+    `template` leaves only provide structure/shape/dtype for validation —
+    their values are never read.  `shardings` (same structure) routes each
+    restored leaf through ``jax.device_put`` for the elastic-remesh path.
+    Returns (trees, extra, step).
+    """
+    path = _step_dir(directory, step)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "data.npz"))
+
+    flat, treedef = _flatten(template)
+    recs = manifest["leaves"]
+    if len(recs) != len(flat):
+        raise ValueError(f"checkpoint leaf count mismatch: saved {len(recs)} "
+                         f"!= template {len(flat)}")
+    sh_flat = None
+    if shardings is not None:
+        sh_flat, _ = _flatten(shardings)
+
+    leaves = []
+    for i, ((key, leaf), rec) in enumerate(zip(flat, recs)):
+        if rec["key"] != key:
+            raise ValueError(f"checkpoint key mismatch at leaf {i}: "
+                             f"saved {rec['key']!r} != template {key!r}")
+        shape = tuple(rec["shape"])
+        if shape != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: saved {shape} != "
+                             f"template {tuple(np.shape(leaf))}")
+        want_dtype = getattr(leaf, "dtype", None)
+        if want_dtype is not None and np.dtype(rec["dtype"]) != np.dtype(want_dtype):
+            raise ValueError(f"dtype mismatch for {key}: saved "
+                             f"{rec['dtype']} != template {np.dtype(want_dtype)}")
+        raw = data[f"leaf_{i}"]
+        arr = np.frombuffer(raw.tobytes(), np.dtype(rec["dtype"]))
+        arr = arr.reshape(shape)
+        if sh_flat is not None:
+            arr = jax.device_put(arr, sh_flat[i][1])
+        else:
+            arr = jax.numpy.asarray(arr)
+        leaves.append(arr)
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest.get("extra", {}), int(manifest["step"]))

@@ -1,0 +1,152 @@
+"""Sharding policy (pure metadata — no multi-device runtime required).
+
+One name-based rule table maps every parameter leaf to a PartitionSpec:
+matmul weights are FSDP-sharded on their input dim (``data``) and
+tensor-parallel on their output dim (``model``); output projections flip
+the pair so the TP all-reduce happens after the second matmul; experts are
+expert-parallel over ``model``; norms/biases/gates replicate.  Scanned
+stacks contribute leading layer dims that are never sharded — the rule
+matches the *trailing* dims, so the same table covers unstacked blocks
+(zamba2's shared block), scanned stacks, and doubly-stacked VLM groups.
+
+``validate_specs`` then drops any sharded axis that does not divide the
+mesh axis size — the dry-run can never hit the pjit divisibility error
+(tests/test_sharding.py pins this contract).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES = ("pod", "data")
+
+# leaf name -> (trailing-dim sharding, under-moe override)
+_RULES: Dict[str, Tuple] = {
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    "wo": ("model", "data"),
+    "out_proj": ("model", "data"),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wi": ("data", "model"),
+    "wg": ("data", "model"),
+    "in_proj": ("data", "model"),
+    "wdkv": ("data", None),
+    "wuk": (None, "model"),
+    "wuv": (None, "model"),
+    "wr": ("data", None),
+}
+# experts carry a leading E dim sharded over `model` (EP); d_model stays FSDP
+_MOE_RULES: Dict[str, Tuple] = {
+    "wi": ("model", "data", None),
+    "wg": ("model", "data", None),
+    "wo": ("model", None, "data"),
+}
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            keys.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            keys.append(str(entry.idx))
+    return tuple(keys)
+
+
+def spec_for(path_keys: Tuple[str, ...], leaf) -> P:
+    """PartitionSpec for one parameter leaf, from its tree path + rank.
+
+    Leading dims beyond the rule's trailing pattern (scan/stack dims) are
+    always unsharded; unknown names replicate fully.
+    """
+    name = path_keys[-1] if path_keys else ""
+    parent = path_keys[-2] if len(path_keys) > 1 else ""
+    rank = len(np.shape(leaf))
+    trailing = None
+    if parent == "moe" and name in _MOE_RULES:
+        trailing = _MOE_RULES[name]
+    elif name in _RULES:
+        trailing = _RULES[name]
+    if trailing is None or rank < len(trailing):
+        return P(*([None] * rank))
+    lead = rank - len(trailing)
+    return P(*([None] * lead), *trailing)
+
+
+def param_specs(params) -> Any:
+    """PartitionSpec pytree mirroring a parameter pytree (shapes only read)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_path_keys(path), leaf), params)
+
+
+def _dp(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in _DP_AXES)
+
+
+def batch_specs(batch, mesh) -> Any:
+    """Input batches shard their leading (batch) dim over the data axes."""
+    dp = _dp(mesh)
+
+    def one(leaf):
+        rank = len(np.shape(leaf))
+        if rank == 0:
+            return P()
+        return P(dp, *([None] * (rank - 1)))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# decode-cache leaves have a known trailing rank; the batch dim sits just
+# before it (leading dims are scan/group stacking, never sharded).
+_CACHE_BASE_RANK = {"k": 4, "v": 4, "ckv": 3, "kr": 3,
+                    "h": 4, "conv": 3, "mk": 4, "mv": 4}
+
+
+def cache_pspecs(cache, mesh, cfg=None) -> Any:
+    """Decode caches shard their batch dim over the data axes."""
+    dp = _dp(mesh)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        rank = len(np.shape(leaf))
+        base = _CACHE_BASE_RANK.get(name)
+        if base is None or rank < base:
+            return P(*([None] * rank))
+        spec = [None] * rank
+        spec[rank - base] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _axis_size(mesh, entry) -> int:
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def validate_specs(specs, tree, mesh) -> Any:
+    """Drop every sharded spec axis that does not divide its dim size."""
+
+    def one(spec, leaf):
+        shape = np.shape(leaf)
+        fixed = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                fixed.append(None)
+                continue
+            size = _axis_size(mesh, entry)
+            fixed.append(entry if size and shape[i] % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map(one, specs, tree, is_leaf=_is_spec)

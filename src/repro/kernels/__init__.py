@@ -2,10 +2,18 @@
 
 The paper's inner loop — the BP message update over non-zero doc-word
 entries (Eq. 1) — dominates computation (Table 2: eta*lambda_K*lambda_W*KWDT).
-`bp_update` fuses the update arithmetic, normalization and residual into one
-VMEM-resident pass.  `power_pack` implements the packed gather/scatter of the
-power submatrix (the sync path's memory hot-spot) with MXU-friendly one-hot
-contractions instead of unsupported dynamic gathers.
+Three kernel packages cover it (DESIGN.md §2/§4):
+
+  - `bp_update`: the t=1 dense sweep — update arithmetic, normalization and
+    residual fused into one VMEM-resident token-major pass;
+  - `power_sweep`: the t>=2 selective sweep — per-token packed phi gather
+    (scalar-prefetched power-row ids), mass-conserving renormalization over
+    the [Pk] selected topics, and the [P, Pk] delta/residual accumulation,
+    all in one grid pass (the packed sync buffers stay VMEM-resident across
+    the whole grid);
+  - `power_pack`: the packed gather/scatter of the power submatrix (the
+    sync path's memory hot-spot) with MXU-friendly one-hot contractions
+    instead of unsupported dynamic gathers.
 
 Kernels target TPU (pl.pallas_call + BlockSpec); on CPU they run with
 ``interpret=True`` which executes the kernel body in Python — the mode used
@@ -13,6 +21,21 @@ by this container's test suite.
 """
 
 import jax
+import jax.numpy as jnp
 
 # interpret=True everywhere except on real TPU.
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def pad_axis(x, axis: int, multiple: int, value=0):
+    """Right-pad `axis` of `x` to a multiple of `multiple` with `value`.
+
+    The shared TPU tile-padding contract of every kernel wrapper
+    (bp_update / power_pack / power_sweep ops.py).
+    """
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

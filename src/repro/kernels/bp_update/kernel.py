@@ -43,9 +43,13 @@ def _kernel(counts_ref, mu_ref, theta_ref, phi_ref, phi_tot_ref,
 
 
 def token_tile(k_width: int, vmem_budget_bytes: int = 12_500_000) -> int:
-    """Largest TT (multiple of 8, capped 512) s.t. 5 tiles of [TT, K] f32 fit VMEM."""
-    tt = vmem_budget_bytes // (5 * k_width * 4)
-    return max(8, min(512, (tt // 8) * 8))
+    """Largest power-of-two TT in [8, 512] s.t. 5 [TT, K] f32 tiles fit VMEM.
+
+    Power of two so the divisibility fallback (halving until TT | T, T a
+    multiple of 8) never collapses to a degenerate non-aligned tile.
+    """
+    tt = max(8, min(512, vmem_budget_bytes // (5 * k_width * 4)))
+    return 1 << (tt.bit_length() - 1)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "wbeta"))

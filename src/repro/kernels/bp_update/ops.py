@@ -12,35 +12,33 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.residuals import token_scatter_wk
-from repro.core.types import LDAConfig, MiniBatch
+from repro.core.types import LDAConfig, MiniBatch, TokenLayout
 from repro.kernels.bp_update.kernel import bp_update_tokens
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int):
-    n = x.shape[axis]
-    pad = (-n) % multiple
-    if pad == 0:
-        return x, n
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), n
+    from repro.kernels import pad_axis
+    return pad_axis(x, axis, multiple), x.shape[axis]
 
 
 def dense_sweep_pallas(batch: MiniBatch, mu: jnp.ndarray,
                        phi_eff_wk: jnp.ndarray, phi_tot: jnp.ndarray,
-                       cfg: LDAConfig):
+                       cfg: LDAConfig, layout: TokenLayout = None):
     """Fused-kernel version of core.pobp.dense_sweep (K unsharded).
 
+    Accepts an optional precomputed TokenLayout so callers that already
+    run token-major (core.pobp's persistent inner loop) don't rebuild it.
     Returns (mu_new [D, L, K], r_wk [W, K]) — bitwise-compatible contract.
     """
     D, L = batch.word_ids.shape
     K = mu.shape[-1]
+    layout = layout or batch.token_layout()
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
 
-    counts_t = batch.counts.reshape(-1, 1)                         # [T, 1]
+    counts_t = layout.counts                                       # [T, 1]
     mu_t = mu.reshape(-1, K)
-    theta_t = jnp.repeat(theta, L, axis=0)                         # token-major
-    phi_t = jnp.take(phi_eff_wk, batch.word_ids.reshape(-1), axis=0)
+    theta_t = jnp.take(theta, layout.doc_ids, axis=0)              # token-major
+    phi_t = jnp.take(phi_eff_wk, layout.word_ids, axis=0)
 
     # pad K to lane multiple; padded topics get phi_tot=+inf-ish guard via
     # zero phi & theta: u=alpha*beta/(wbeta) > 0 -> contributes to the norm!

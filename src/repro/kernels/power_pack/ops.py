@@ -9,17 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pad_axis as _pad_axis
 from repro.kernels.power_pack.kernel import (pack_rows_pallas,
                                              scatter_add_rows_pallas)
-
-
-def _pad_axis(x, axis, multiple, value=0):
-    pad = (-x.shape[axis]) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
 
 
 @jax.jit

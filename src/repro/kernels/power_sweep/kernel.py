@@ -1,0 +1,144 @@
+"""Fused selective power-sweep kernel (Fig. 4 lines 15-21, token-major).
+
+One grid pass over token tiles performs, entirely in VMEM:
+
+  1. the per-token gather of the packed phi power rows — the tile's
+     scalar-prefetched power-row ids ``p_tok`` select rows of the
+     VMEM-resident ``phi_pack [P1, Pk]`` through an MXU one-hot contraction
+     (TPU Pallas has no dynamic vector gather; cf. kernels/power_pack);
+  2. the selective message update + mass-conserving renormalization
+     (Eq. 1 restricted to the power submatrix, DESIGN.md §2):
+         u   = (theta_sel - c*mu + alpha)(phi_sel - c*mu + beta)
+               / (pt_sel - c*mu + W*beta)
+         mu' = u * mass / sum_j u        on power tokens, mu otherwise;
+  3. the packed delta/residual scatter: ``onehot^T @ (c*d)`` accumulates
+     straight into the [P1, Pk] sync buffers, which live in VMEM across the
+     whole grid (their BlockSpec index is constant) and are written back to
+     HBM once — the token loop never touches a [W, K] or [T, K] temporary.
+
+Non-power and padding tokens carry ``p_tok == n_pow`` (the guard row):
+their mask keeps mu unchanged, so their deltas are exactly zero and the
+guard row accumulates nothing but zeros.
+
+Layout contract (ops.py): Pk padded to 128 lanes with theta padded to
+-alpha (=> u == 0 on pad columns), T padded to a tile multiple with zero
+counts, packed rows padded to a sublane multiple with zero phi rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import kernels as K_
+
+
+def _kernel(p_tok_ref, c_ref, mu_ref, th_ref, pt_ref, phi_ref,
+            mu_out_ref, d_out_ref, r_out_ref, *,
+            alpha: float, beta: float, wbeta: float, tt: int, n_pow: int):
+    i = pl.program_id(0)
+    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
+    n_rows = phi_ref.shape[0]
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (tt, n_rows), 1)
+    onehot = (iota_p == p_tile[:, None]).astype(jnp.float32)   # [TT, P1]
+
+    c = c_ref[...]                                             # [TT, 1]
+    mu = mu_ref[...]                                           # [TT, Pk]
+    phi_sel = jax.lax.dot_general(                             # MXU row gather
+        onehot, phi_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # [TT, Pk]
+
+    self_c = c * mu
+    th = th_ref[...] - self_c + alpha
+    ph = phi_sel - self_c + beta
+    pt = pt_ref[...] - self_c + wbeta
+    u = th * ph / pt
+    mass = jnp.sum(mu, axis=-1, keepdims=True)                 # conserved mass
+    denom = jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), 1e-30)
+    mu_new = u * mass / denom
+    is_power = (p_tile < n_pow)[:, None]
+    mu_new = jnp.where(is_power, mu_new, mu)
+
+    d_mu = mu_new - mu
+    dv = c * d_mu
+    rv = c * jnp.abs(d_mu)
+    mu_out_ref[...] = mu_new
+
+    # packed scatter: guard row n_pow only ever receives exact zeros
+    contrib_d = jax.lax.dot_general(
+        onehot, dv, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # [P1, Pk]
+    contrib_r = jax.lax.dot_general(
+        onehot, rv, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        d_out_ref[...] = jnp.zeros_like(d_out_ref)
+        r_out_ref[...] = jnp.zeros_like(r_out_ref)
+
+    d_out_ref[...] += contrib_d
+    r_out_ref[...] += contrib_r
+
+
+def token_tile(pk_width: int, n_rows: int,
+               vmem_budget_bytes: int = 12_500_000) -> int:
+    """Largest power-of-two TT in [8, 512] fitting the VMEM budget.
+
+    Resident per grid step: 5 [TT, Pk] tiles + the [TT, P1] one-hot +
+    3 [P1, Pk] packed buffers (phi in, delta/residual out), all f32.
+    Power of two so the caller's divisibility fallback (halving until
+    TT | T, with T padded to a multiple of 8) always lands on a full
+    sublane-aligned tile instead of collapsing to a degenerate size.
+    Floors at 8 even when the resident packed buffers alone bust the
+    budget (huge P1) — that case surfaces as a Mosaic VMEM error on real
+    TPU rather than a silent wrong answer.
+    """
+    fixed = 3 * n_rows * pk_width * 4
+    per_token = (5 * pk_width + n_rows) * 4
+    tt = max(8, min(512, max(0, vmem_budget_bytes - fixed) // per_token))
+    return 1 << (tt.bit_length() - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "beta", "wbeta", "n_pow"))
+def power_sweep_tokens(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
+                       mu_sel: jnp.ndarray, theta_sel: jnp.ndarray,
+                       pt_sel: jnp.ndarray, phi_pack: jnp.ndarray, *,
+                       alpha: float, beta: float, wbeta: float, n_pow: int):
+    """Fused selective update over pre-gathered [T, Pk] token tiles.
+
+    p_tok [T] int32 power-row id per token (n_pow => not selected);
+    counts_t [T, 1]; mu_sel/theta_sel/pt_sel [T, Pk]; phi_pack [P1, Pk]
+    with P1 > n_pow.  T % TT == 0, Pk % 128 == 0 and P1 % 8 == 0 are the
+    caller's (ops.py) responsibility.
+    Returns (mu_new_sel [T, Pk], d_pack [P1, Pk], r_pack [P1, Pk]).
+    """
+    T, Pk = mu_sel.shape
+    P1 = phi_pack.shape[0]
+    TT = token_tile(Pk, P1)
+    while T % TT:
+        TT //= 2
+    grid = (T // TT,)
+    spec_tk = pl.BlockSpec((TT, Pk), lambda i, p_tok: (i, 0))
+    spec_c = pl.BlockSpec((TT, 1), lambda i, p_tok: (i, 0))
+    spec_pack = pl.BlockSpec((P1, Pk), lambda i, p_tok: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[spec_c, spec_tk, spec_tk, spec_tk, spec_pack],
+        out_specs=[spec_tk, spec_pack, spec_pack],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, beta=beta, wbeta=wbeta,
+                          tt=TT, n_pow=n_pow),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((T, Pk), jnp.float32),
+                   jax.ShapeDtypeStruct((P1, Pk), jnp.float32),
+                   jax.ShapeDtypeStruct((P1, Pk), jnp.float32)],
+        interpret=K_.INTERPRET,
+    )(p_tok, counts_t, mu_sel, theta_sel, pt_sel, phi_pack)

@@ -1,0 +1,57 @@
+"""jit'd wrapper for power_sweep: TPU tile padding + dispatch.
+
+Padding contract (keeps the fused math exact — see kernel.py):
+  - Pk -> lane multiple (128): mu/pt/phi pad 0, theta pads -alpha so the
+    padded columns contribute u == 0 to the in-tile renormalization;
+  - packed rows -> sublane multiple (8) past the P+1 guard row, zero rows;
+  - T -> tile multiple: padded tokens carry p_tok == P (guard) and c == 0,
+    so they update nothing and scatter exact zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pad_axis as _pad_axis
+from repro.kernels.power_sweep.kernel import power_sweep_tokens
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "wbeta"))
+def power_sweep(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
+                mu_sel: jnp.ndarray, theta_sel: jnp.ndarray,
+                pt_sel: jnp.ndarray, phi_pack: jnp.ndarray, *,
+                alpha: float, beta: float, wbeta: float):
+    """Fused selective sweep over pre-gathered token tiles.
+
+    p_tok [T] int32 in [0, P] (P => token not selected); counts_t [T, 1];
+    mu_sel/theta_sel/pt_sel [T, Pk] gathered at the token's power topic
+    coords; phi_pack [P, Pk] packed effective phi.
+    Returns (mu_new_sel [T, Pk], d_pack [P, Pk], r_pack [P, Pk]).
+    """
+    T0, Pk = mu_sel.shape
+    P = phi_pack.shape[0]
+    f32 = jnp.float32
+
+    mu_p = _pad_axis(mu_sel.astype(f32), 1, 128)
+    th_p = _pad_axis(theta_sel.astype(f32), 1, 128, value=-alpha)
+    pt_p = _pad_axis(pt_sel.astype(f32), 1, 128)
+    phi_p = _pad_axis(_pad_axis(phi_pack.astype(f32), 1, 128), 0, 8,
+                      value=0.0)
+    if phi_p.shape[0] < P + 1:                    # guard row must exist
+        phi_p = jnp.pad(phi_p, ((0, 8), (0, 0)))
+
+    c_p = _pad_axis(counts_t.astype(f32), 0, 8)
+    mu_p = _pad_axis(mu_p, 0, 8)
+    th_p = _pad_axis(th_p, 0, 8, value=-alpha)
+    pt_p = _pad_axis(pt_p, 0, 8)
+    p_tok_p = _pad_axis(p_tok.astype(jnp.int32), 0, 8, value=P)
+
+    mu_new, d_pack, r_pack = power_sweep_tokens(
+        p_tok_p, c_p, mu_p, th_p, pt_p, phi_p,
+        alpha=alpha, beta=beta, wbeta=wbeta, n_pow=P)
+    return (mu_new[:T0, :Pk].astype(mu_sel.dtype),
+            d_pack[:P, :Pk].astype(mu_sel.dtype),
+            r_pack[:P, :Pk].astype(mu_sel.dtype))

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused power_sweep kernel — same contract."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def power_sweep_tokens_ref(p_tok, counts_t, mu_sel, theta_sel, pt_sel,
+                           phi_pack, *, alpha: float, beta: float,
+                           wbeta: float, n_pow: int):
+    """Identical math to kernel.py in plain XLA ops.
+
+    Shapes as in kernel.power_sweep_tokens (no padding requirements here:
+    phi_pack [P1, Pk] only needs P1 > n_pow so the guard row exists).
+    Returns (mu_new_sel [T, Pk], d_pack [P1, Pk], r_pack [P1, Pk]).
+    """
+    P1 = phi_pack.shape[0]
+    is_power = (p_tok < n_pow)[:, None]
+    phi_sel = jnp.take(phi_pack, p_tok, axis=0)
+    self_c = counts_t * mu_sel
+    th = theta_sel - self_c + alpha
+    ph = phi_sel - self_c + beta
+    pt = pt_sel - self_c + wbeta
+    u = th * ph / pt
+    mass = jnp.sum(mu_sel, axis=-1, keepdims=True)
+    mu_new = u * mass / jnp.maximum(jnp.sum(u, -1, keepdims=True), 1e-30)
+    mu_new = jnp.where(is_power, mu_new, mu_sel)
+    d_mu = mu_new - mu_sel
+    zeros = jnp.zeros((P1, mu_sel.shape[1]), jnp.float32)
+    d_pack = zeros.at[p_tok].add(counts_t * d_mu)
+    r_pack = zeros.at[p_tok].add(counts_t * jnp.abs(d_mu))
+    # the guard row only ever collects exact zeros; clear it regardless so
+    # both implementations agree bit-for-bit
+    d_pack = d_pack.at[n_pow].set(0.0)
+    r_pack = r_pack.at[n_pow].set(0.0)
+    return mu_new, d_pack, r_pack

@@ -46,6 +46,16 @@ def test_shape_mismatch_rejected(tmp_path):
         ckpt.restore(str(tmp_path), 1, bad)
 
 
+def test_dtype_mismatch_rejected(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(4))
+    ckpt.save(str(tmp_path), 1, {"t": tree})
+    bad = {"t": {"a": tree["a"],
+                 "nest": {"b": tree["nest"]["b"].astype(jnp.float32),
+                          "step": tree["nest"]["step"]}}}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
 def test_crash_restart_resumes_identically(tmp_path):
     """Train 30 steps straight vs train-with-crash-at-20 + restart: the
     final losses must match exactly (data cursor + RNG + residuals saved)."""

@@ -4,6 +4,9 @@ correctness, error feedback, byte reduction, end-to-end convergence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sync import CommMeter, MeshReducer
