@@ -1,45 +1,25 @@
 """End-to-end driver (the paper's kind of workload): stream a corpus
-through POBP for a few hundred mini-batch iterations with CONSTANT memory,
-checkpointing the sufficient statistics for crash recovery.
+through POBP for hundreds of mini-batch iterations with CONSTANT memory,
+checkpointing the full training state for crash recovery.
 
 The corpus is generated on the fly (never fully materialized) — the
-life-long/never-ending regime of §3.2 where M -> infinity.
+life-long/never-ending regime of §3.2 where M -> infinity — and runs on
+the production streaming driver (`repro.launch.lda_train`): shape-bucketed
+batching, async dispatch, and a real restore path.  Simulate a crash and
+watch the rerun RESUME from the latest checkpoint instead of silently
+restarting from m=1:
 
-    PYTHONPATH=src python examples/stream_big_corpus.py [--minibatches 30]
+    PYTHONPATH=src python examples/stream_big_corpus.py --minibatches 30 \
+        --crash-at 17
+    PYTHONPATH=src python examples/stream_big_corpus.py --minibatches 30
+    # -> [restore] resumed from checkpoint step 10 -> next minibatch 11
 """
 
 import argparse
 import os
 import resource
+import shutil
 import tempfile
-
-import jax
-import numpy as np
-
-from repro.core import LDAConfig, perplexity, run_stream
-from repro.data import docs_to_padded, lda_corpus, train_test_split_counts
-from repro.data.batching import docs_to_padded as pad
-from repro.dist import checkpoint as ckpt
-from repro.core.types import MiniBatch
-
-
-def endless_stream(cfg, num_minibatches, docs_per_batch, num_shards,
-                   true_phi):
-    """Generate mini-batches lazily — memory stays flat regardless of M.
-    All batches share the SAME ground-truth topics (life-long regime)."""
-    import jax.numpy as jnp
-    from repro.data.synthetic import lda_corpus_from_phi
-    for m in range(num_minibatches):
-        docs, _ = lda_corpus_from_phi(1000 + m, docs_per_batch, true_phi,
-                                      doc_len_mean=60)
-        b = pad(docs, max_len=48)
-        D, L = b.word_ids.shape
-        Dp = (D // num_shards) * num_shards
-        yield MiniBatch(
-            word_ids=jnp.reshape(b.word_ids[:Dp],
-                                 (num_shards, Dp // num_shards, L)),
-            counts=jnp.reshape(b.counts[:Dp],
-                               (num_shards, Dp // num_shards, L)))
 
 
 def main():
@@ -47,44 +27,47 @@ def main():
     ap.add_argument("--minibatches", type=int, default=30)
     ap.add_argument("--docs-per-batch", type=int, default=64)
     ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate a hard failure after minibatch N; rerun "
+                         "the same command to resume")
+    ap.add_argument("--ckpt-dir",
+                    default=os.path.join(tempfile.gettempdir(),
+                                         "pobp_lda_train_ck"))
+    ap.add_argument("--fresh", action="store_true",
+                    help="discard any previous checkpoints first")
     args = ap.parse_args()
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
 
-    cfg = LDAConfig(vocab_size=500, num_topics=16, lambda_w=0.1,
-                    lambda_k_abs=8, inner_iters=20, residual_tol=0.05)
-    ckdir = os.path.join(tempfile.gettempdir(), "pobp_stream_ck")
-    # one fixed ground-truth topic set shared by the whole stream
-    import numpy as np
-    true_phi = np.random.default_rng(42).dirichlet(
-        np.full(cfg.vocab_size, 0.06), size=cfg.num_topics).astype(np.float32)
+    from repro.launch.lda_train import default_args, train_loop
 
     rss = []
 
-    def cb(m, phi_acc, rec, theta):
+    def track_rss(step_no, state, diag):
+        # host-side only: reading diag values here would force a sync
         rss.append(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e3)
-        if m % 10 == 0:
-            ckpt.save(ckdir, m, {"phi": {"acc": phi_acc}},
-                      extra={"m": m})  # restartable: learning rate is 1/(m-1)
-            print(f"minibatch {m:4d}  mean_r={rec['mean_r']:.4f} "
-                  f"iters={rec['iters']:3d}  rss={rss[-1]:.0f}MB "
-                  f"[checkpointed]", flush=True)
 
-    stream = endless_stream(cfg, args.minibatches, args.docs_per_batch,
-                            args.shards, true_phi)
-    phi, hist, meter = run_stream(stream, cfg, num_shards=args.shards,
-                                  sync_mode="power", seed=0, callback=cb)
+    run = default_args(
+        minibatches=args.minibatches, docs_per_batch=args.docs_per_batch,
+        shards=args.shards, vocab=500, topics=16, lambda_k=8,
+        inner_iters=20, tol=0.05, doc_len_means="30,60,90",
+        len_buckets="32,64,96", log_every=10, eval_every=0,
+        ckpt_dir=args.ckpt_dir, ckpt_every=10, crash_at=args.crash_at,
+        seed=0)
+    res = train_loop(run, on_batch=track_rss)
 
-    # held-out evaluation
-    from repro.data.synthetic import lda_corpus_from_phi
-    docs, _ = lda_corpus_from_phi(9999, 100, true_phi, doc_len_mean=60)
-    train, test = train_test_split_counts(docs, 0)
-    ppl = perplexity.evaluate(jax.random.PRNGKey(3), phi,
-                              docs_to_padded(train), docs_to_padded(test),
-                              cfg)
-    drift = (max(rss[3:]) - min(rss[3:])) / max(min(rss[3:]), 1)
-    print(f"\nprocessed {len(hist)} mini-batches; held-out ppl={ppl:.1f}")
-    print(f"RSS drift after warmup: {drift * 100:.1f}% "
-          f"(constant-memory streaming, paper Table 5)")
-    print(f"total sync bytes by phase: {meter.bytes_by_phase}")
+    n = len(res["mean_r"])
+    print(f"\nprocessed {n} mini-batches (resumed at m="
+          f"{res['first_m'] + 1}); held-out ppl={res['ppl']:.1f}")
+    if len(rss) > 4:
+        warm = rss[3:]
+        drift = (max(warm) - min(warm)) / max(min(warm), 1)
+        print(f"RSS drift after warmup: {drift * 100:.1f}% "
+              f"(constant-memory streaming, paper Table 5)")
+    print(f"step compiles: {res['compiles']} for buckets "
+          f"{res['len_buckets']} (shape-bucketed batching)")
+    print(f"per-minibatch sync bytes: {res['per_minibatch_bytes']:,} "
+          f"(phases: {res['bytes_by_phase']})")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
 """repro.core — the paper's contribution: OBP / POBP with the
 communication-efficient power-selection MPA, plus reference baselines."""
 
-from repro.core.types import LDAConfig, LDAState, MiniBatch  # noqa: F401
+from repro.core.types import (LDAConfig, LDAState, LDATrainState,  # noqa: F401
+                              MiniBatch)
 from repro.core.pobp import (  # noqa: F401
     dense_sweep,
     selective_sweep,
     pobp_minibatch,
+    pobp_shard_body,
+    init_train_state,
+    make_train_step,
+    make_mesh_shard_fn,
     make_sim_minibatch_fn,
     run_stream,
 )

@@ -46,8 +46,8 @@ import jax.numpy as jnp
 from repro.core import power as pw
 from repro.core.residuals import (mean_residual, packed_rw_delta,
                                   token_scatter_wk)
-from repro.core.sync import CommMeter, LocalReducer, Reducer
-from repro.core.types import LDAConfig, MiniBatch, TokenLayout
+from repro.core.sync import CommMeter, LocalReducer, MeshReducer, Reducer
+from repro.core.types import LDAConfig, LDATrainState, MiniBatch, TokenLayout
 
 
 # --------------------------------------------------------------------------
@@ -61,12 +61,16 @@ def dense_sweep(
     phi_tot: jnp.ndarray,
     cfg: LDAConfig,
     model_reducer: Reducer,
+    norm_phase: str = "model_norm",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One synchronous full update of all messages (Eq. 1).
 
     phi_eff_wk [W, Kl] is the *effective* topic-word statistic (accumulated
     prior + current-mini-batch contribution, already synchronized over data
     shards).  Kl is the local topic-shard width.  Returns (mu_new, r_wk).
+    `norm_phase` labels the cross-topic-shard normalization psum — callers
+    inside the inner while loop pass the per-iteration "model_norm_loop"
+    so the byte meter can bill it per iteration (sync.LOOP_PHASES).
     """
     W = cfg.vocab_size
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)           # Eq. (2), local topics
@@ -77,7 +81,7 @@ def dense_sweep(
     pt = phi_tot[None, None, :] - self_c + W * cfg.beta
     unnorm = th * ph / pt
     norm = model_reducer.psum(jnp.sum(unnorm, axis=-1, keepdims=True),
-                              "model_norm", compress=False)
+                              norm_phase, compress=False)
     mu_new = unnorm / norm
     r_wk = token_scatter_wk(batch.word_ids, c * jnp.abs(mu_new - mu), W)
     return mu_new, r_wk
@@ -326,7 +330,12 @@ def pobp_minibatch(
     layout = batch.token_layout()    # persistent token-major view (§2)
 
     # ---- lines 3-8: random init, local stats, first dense update ----
-    u0 = jax.random.uniform(key, (*batch.word_ids.shape, Kl), minval=0.01, maxval=1.0)
+    # cfg.init_pad_len: draw the random field at a fixed padded length and
+    # slice, so phi_acc is invariant to the L bucket this batch landed in
+    # (shape-bucketed streaming; padding slots have zero counts).
+    D, L = batch.word_ids.shape
+    Lpad = L if cfg.init_pad_len is None else max(cfg.init_pad_len, L)
+    u0 = jax.random.uniform(key, (D, Lpad, Kl), minval=0.01, maxval=1.0)[:, :L]
     mu0 = u0 / model_reducer.psum(jnp.sum(u0, -1, keepdims=True), "model_norm",
                                   compress=False)
     delta_local0 = token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu0, W)
@@ -387,7 +396,8 @@ def pobp_minibatch(
             phi_eff = phi_scatter(phi_eff, sel_w, sel_k, d_phi_pack)
             phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_phi_pack)
             r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
-            rw_delta = model_reducer.psum(rw_delta, "model_rw", compress=False)
+            rw_delta = model_reducer.psum(rw_delta, "model_rw_loop",
+                                          compress=False)
             r_w_c = r_w_c.at[sel_w].add(rw_delta)
             return (mu_t, theta, phi_eff, phi_tot, r_glob, r_w_c, t + 1)
 
@@ -404,7 +414,8 @@ def pobp_minibatch(
 
         def body(carry):
             mu, theta, phi_eff, phi_tot, _, t = carry
-            mu, r_wk = dense_sweep(batch, mu, phi_eff, phi_tot, cfg, model_reducer)
+            mu, r_wk = dense_sweep(batch, mu, phi_eff, phi_tot, cfg,
+                                   model_reducer, norm_phase="model_norm_loop")
             delta = data_reducer.psum(
                 token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu, W),
                 "dense_loop")
@@ -413,7 +424,7 @@ def pobp_minibatch(
             theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
             r_w_c = model_reducer.psum(
                 jnp.sum(data_reducer.psum(r_wk, "dense_loop"), axis=1),
-                "model_rw", compress=False)
+                "model_rw_loop", compress=False)
             return (mu, theta, phi_eff, phi_tot, r_w_c, t + 1)
 
         mu, theta, phi_eff, phi_tot, r_w, t = jax.lax.while_loop(cond, body, carry0)
@@ -430,6 +441,96 @@ def pobp_minibatch(
 # --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
+#
+# Every execution mode funnels through ONE per-shard body (pobp_shard_body):
+#   - `make_train_step`        jitted, donated-carry production step
+#                              (vmap N-shard simulation; the streaming
+#                              driver `launch.lda_train` and `run_stream`)
+#   - `make_sim_minibatch_fn`  the stateless single-mini-batch entry used
+#                              by tests and paper-figure benchmarks
+#   - `make_mesh_shard_fn`     the shard_map body for the production mesh
+#                              (launch.dryrun's compile-only cell and
+#                              launch.lda_train's --backend shard_map)
+
+
+def pobp_shard_body(word_ids, counts, phi_acc, key, delta_weight,
+                    cfg: LDAConfig, data_reducer: Reducer,
+                    model_reducer: Optional[Reducer] = None,
+                    sync_mode: str = "power"):
+    """One shard's complete mini-batch routine (Fig. 4, one m).
+
+    `word_ids`/`counts` are THIS shard's [Dl, L] slice; `phi_acc` is the
+    synchronized accumulated statistic.  The global token count is psum'd
+    here ("tokens" phase), so callers never pre-reduce anything.
+    Returns (phi_acc_new, iters, mean_r, mu, theta).
+    """
+    batch = MiniBatch(word_ids=word_ids, counts=counts)
+    total = data_reducer.psum(jnp.sum(counts), "tokens", compress=False)
+    res = pobp_minibatch(batch, phi_acc, key, total, delta_weight, cfg,
+                         data_reducer, model_reducer, sync_mode=sync_mode)
+    return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
+
+
+def _delta_weight(cfg: LDAConfig, m):
+    """Traced Eq. 11 weight for the (1-indexed, possibly traced) batch m."""
+    if cfg.lr_schedule == "paper":
+        return jnp.float32(1.0)
+    return (cfg.lr_tau0 + m.astype(jnp.float32)) ** (-cfg.lr_kappa)
+
+
+def init_train_state(cfg: LDAConfig, seed: int = 0) -> LDATrainState:
+    """Cold-start carry for `make_train_step` (phi_acc = 0, m = 0)."""
+    return LDATrainState(
+        phi_acc=jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32),
+        m=jnp.zeros((), jnp.int32),
+        rng=jax.random.PRNGKey(seed))
+
+
+def make_train_step(cfg: LDAConfig, num_shards: int = 1,
+                    sync_mode: str = "power", sync_dtype=jnp.float32,
+                    donate: bool = True):
+    """The production streaming step: one jitted, donated-carry POBP batch.
+
+    Returns (step, meter) with ``step(state, word_ids, counts) ->
+    (new_state, diag)``.  `word_ids`/`counts` are [Dl, L] (num_shards == 1)
+    or [N, Dl, L] stacked; `state` is an `LDATrainState` whose buffers are
+    donated (constant memory over an unbounded stream — §3.2 / Table 5).
+    `diag` = {iters, mean_r, theta} stays on device: the caller decides
+    when to pay a host sync (asynchronous dispatch — the driver fetches
+    every --log-every batches, never per batch).
+
+    The step recompiles once per distinct (Dl, L) input shape; feed it
+    through `repro.data.batching.bucketed_minibatch_stream` to bound the
+    compile count.  Compiles so far: ``step._cache_size()``.
+    """
+    meter = CommMeter()
+    if num_shards == 1:
+        reducer: Reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+    else:
+        reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
+
+    def body(wid, cnt, phi_acc, key, weight):
+        return pobp_shard_body(wid, cnt, phi_acc, key, weight, cfg, reducer,
+                               sync_mode=sync_mode)
+
+    def step(state: LDATrainState, word_ids, counts):
+        rng, sub = jax.random.split(state.rng)
+        weight = _delta_weight(cfg, state.m + 1)
+        if num_shards == 1:
+            phi, iters, mean_r, _mu, theta = body(word_ids, counts,
+                                                  state.phi_acc, sub, weight)
+        else:
+            keys = jax.random.split(sub, num_shards)
+            phi, iters, mean_r, _mu, theta = jax.vmap(
+                body, in_axes=(0, 0, None, 0, None), axis_name="shards")(
+                    word_ids, counts, state.phi_acc, keys, weight)
+            # shard-identical by construction: carry shard 0's copy
+            phi, iters, mean_r = phi[0], iters[0], mean_r[0]
+        new_state = LDATrainState(phi_acc=phi, m=state.m + 1, rng=rng)
+        return new_state, dict(iters=iters, mean_r=mean_r, theta=theta)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ()), meter
+
 
 def make_sim_minibatch_fn(cfg: LDAConfig, num_shards: int, sync_mode: str = "power",
                           sync_dtype=jnp.float32):
@@ -442,27 +543,102 @@ def make_sim_minibatch_fn(cfg: LDAConfig, num_shards: int, sync_mode: str = "pow
     """
     meter = CommMeter()
     if num_shards == 1:
-        reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+        reducer: Reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
     else:
-        from repro.core.sync import MeshReducer
         reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
 
-    def per_shard(word_ids, counts, phi_acc, key, delta_weight, total_tokens):
-        batch = MiniBatch(word_ids=word_ids, counts=counts)
-        res = pobp_minibatch(batch, phi_acc, key, total_tokens, delta_weight,
-                             cfg, reducer, sync_mode=sync_mode)
-        return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
+    def per_shard(word_ids, counts, phi_acc, key, delta_weight):
+        return pobp_shard_body(word_ids, counts, phi_acc, key, delta_weight,
+                               cfg, reducer, sync_mode=sync_mode)
 
     def fn(word_ids, counts, phi_acc, key, delta_weight):
-        total = jnp.sum(counts)
         if num_shards == 1:
-            return per_shard(word_ids, counts, phi_acc, key, delta_weight, total)
+            return per_shard(word_ids, counts, phi_acc, key, delta_weight)
         keys = jax.random.split(key, num_shards)
-        return jax.vmap(per_shard, in_axes=(0, 0, None, 0, None, None),
+        return jax.vmap(per_shard, in_axes=(0, 0, None, 0, None),
                         axis_name="shards")(word_ids, counts, phi_acc, keys,
-                                            delta_weight, total)
+                                            delta_weight)
 
     return jax.jit(fn), meter
+
+
+def make_mesh_shard_fn(cfg: LDAConfig, mesh_axis_names, sync_mode: str = "power",
+                       sync_dtype=jnp.float32, meter: Optional[CommMeter] = None):
+    """Per-shard POBP body for ``shard_map`` on a production mesh: documents
+    sharded over the data (and pod) axes, topics over the 'model' axis.
+
+    Shared by ``launch.dryrun.run_lda_cell`` (compile-only HLO analysis) and
+    ``launch.lda_train`` (--backend shard_map), so the production cell and
+    the streaming driver cannot fork.  Returns (local_fn, meter) with
+    ``local_fn(wid, cnt, phi_acc, key, delta_weight) ->
+    (phi_acc_new, iters, mean_r)``.
+    """
+    dp = tuple(a for a in mesh_axis_names if a in ("pod", "data"))
+    meter = meter or CommMeter()
+
+    def local(wid, cnt, phi_acc, key, delta_weight):
+        data_red = MeshReducer(dp, meter=meter, sync_dtype=sync_dtype)
+        model_red = MeshReducer("model", meter=meter, sync_dtype=sync_dtype)
+        phi, iters, mean_r, _mu, _theta = pobp_shard_body(
+            wid, cnt, phi_acc, key, delta_weight, cfg, data_red, model_red,
+            sync_mode=sync_mode)
+        return phi, iters, mean_r
+
+    return local, meter
+
+
+def shard_map_minibatch_fn(cfg: LDAConfig, mesh, sync_mode: str = "power",
+                           sync_dtype=jnp.float32,
+                           meter: Optional[CommMeter] = None):
+    """`make_mesh_shard_fn` wrapped in shard_map on `mesh`, partition specs
+    included: fn(wid[D, L], cnt[D, L], phi_acc[W, K], key, delta_weight)
+    -> (phi_acc_new, iters, mean_r) with documents split over data/pod and
+    topics over 'model'.  The ONE wrapper both `launch.dryrun.run_lda_cell`
+    (lower/compile) and `launch.lda_train` (execute) use — specs cannot
+    fork between the compile-only cell and the production driver.
+    Returns (fn, meter).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    local, meter = make_mesh_shard_fn(cfg, mesh.axis_names, sync_mode,
+                                      sync_dtype, meter)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(dp, None), P(dp, None), P(None, "model"),
+                             P(), P()),
+                   out_specs=(P(None, "model"), P(), P()),
+                   check_rep=False)
+    return fn, meter
+
+
+class DiagBuffer:
+    """Buffers per-batch device scalars and materializes them to host
+    values in blocks: dispatch stays asynchronous (a flushed value is many
+    batches old, its compute long finished) while the set of live device
+    buffers stays bounded on an unbounded stream.  Shared by `run_stream`
+    and `launch.lda_train`."""
+
+    def __init__(self, block: int = 64):
+        self.block = max(int(block), 1)
+        self._pending: list = []
+        self._done: list = []
+
+    def append(self, *vals) -> None:
+        self._pending.append(vals)
+        if len(self._pending) >= self.block:
+            self.flush()
+
+    def flush(self) -> None:
+        import numpy as np
+        self._done.extend(
+            tuple(np.asarray(v).reshape(-1)[0] for v in vals)
+            for vals in self._pending)
+        self._pending.clear()
+
+    def rows(self) -> list:
+        self.flush()
+        return self._done
 
 
 def run_stream(
@@ -473,28 +649,34 @@ def run_stream(
     seed: int = 0,
     sync_dtype=jnp.float32,
     callback=None,
+    state: Optional[LDATrainState] = None,
+    donate: bool = True,
 ):
-    """OBP/POBP outer loop over a mini-batch stream (Fig. 4 outer `for m`).
+    """OBP/POBP outer loop over a mini-batch stream (Fig. 4 outer `for m`),
+    built on the donated-carry `make_train_step`.
 
     `stream` yields either MiniBatch (N=1) or [N, Dl, L] stacked arrays.
+    Dispatch is asynchronous: nothing forces a host sync per mini-batch —
+    history diagnostics are materialized once, after the loop.  `callback`
+    (if given) receives ``(m, phi_acc, rec, theta)`` with *device* scalars
+    in `rec`; convert them only as often as a sync is affordable.  Because
+    the carry is donated, the phi_acc handed to the callback is only valid
+    until the next step runs — ``np.asarray`` it if it must outlive that
+    (checkpointing does exactly this).  Pass `state` to continue a run.
     Returns (phi_acc[W, K], history list of per-batch dicts, meter).
     """
-    import numpy as np
-
-    fn, meter = make_sim_minibatch_fn(cfg, num_shards, sync_mode, sync_dtype)
-    phi_acc = jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32)
-    key = jax.random.PRNGKey(seed)
-    history = []
-    for m, batch in enumerate(stream, start=1):
-        key, sub = jax.random.split(key)
-        wid, cnt = batch.word_ids, batch.counts
-        w = jnp.asarray(cfg.delta_weight(m), jnp.float32)
-        phi_new, iters, mean_r, mu, theta = fn(wid, cnt, phi_acc, sub, w)
-        # shard-identical by construction; take shard 0's copy if stacked
-        phi_acc = phi_new if phi_new.ndim == 2 else phi_new[0]
-        rec = dict(m=m, iters=int(iters if np.ndim(iters) == 0 else iters.reshape(-1)[0]),
-                   mean_r=float(np.asarray(mean_r).reshape(-1)[0]))
-        history.append(rec)
+    step, meter = make_train_step(cfg, num_shards, sync_mode, sync_dtype,
+                                  donate=donate)
+    if state is None:
+        state = init_train_state(cfg, seed)
+    buf = DiagBuffer()
+    for m, batch in enumerate(stream, start=int(state.m) + 1):
+        state, diag = step(state, batch.word_ids, batch.counts)
+        buf.append(m, diag["iters"], diag["mean_r"])
         if callback is not None:
-            callback(m, phi_acc, rec, theta)
-    return phi_acc, history, meter
+            callback(m, state.phi_acc,
+                     dict(m=m, iters=diag["iters"], mean_r=diag["mean_r"]),
+                     diag["theta"])
+    history = [dict(m=int(m), iters=int(it), mean_r=float(r))
+               for m, it, r in buf.rows()]
+    return state.phi_acc, history, meter

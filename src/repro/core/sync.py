@@ -9,33 +9,112 @@ The `Reducer` abstraction lets the same POBP code run
 
 Byte accounting happens at *trace time*: payload shapes are static, so each
 ``psum`` registers its logical payload (size x itemsize) in a phase bucket.
-Per-mini-batch totals are then ``dense_bytes + (iters-1) * sparse_bytes``
-with `iters` known only at run time.  This reproduces Eqs. (5)/(6) exactly
-and is cross-checked against HLO collective parsing in the roofline pass.
+Recording is **idempotent under retracing**: a reshape-triggered retrace of
+the same program (e.g. a variable-length mini-batch stream hitting a new
+padded shape) must not inflate the totals, so every record is attributed to
+the trace it happens under and two traces whose record sequences are
+identical count once (see ``CommMeter``).  Per-mini-batch totals are then
+``dense_bytes + (iters-1) * sparse_bytes`` with `iters` known only at run
+time (``CommMeter.per_minibatch_bytes``).  This reproduces Eqs. (5)/(6)
+exactly and is cross-checked against HLO collective parsing in the
+roofline pass.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Union
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 AxisName = Union[str, Sequence[str]]
 
+# phases recorded once per *inner-loop iteration* (their psums live in
+# trace-once while bodies — core/pobp.py names every in-body psum with a
+# distinct loop phase); everything else is a once-per-mini-batch payload.
+LOOP_PHASES = ("power", "dense_loop", "model_rw_loop", "model_norm_loop")
 
-@dataclasses.dataclass
+
 class CommMeter:
-    """Trace-time logical-byte counter, bucketed by phase label."""
+    """Trace-time logical-byte counter, bucketed by phase label.
 
-    bytes_by_phase: Dict[str, int] = dataclasses.field(default_factory=dict)
-    calls: List[str] = dataclasses.field(default_factory=list)
+    Each ``record`` is keyed to the jax trace it happens under: retracing —
+    a new padded shape on a variable-length stream, a fresh ``vmap``
+    application — creates new trace objects, so each traced program section
+    yields its own ordered log of (phase, shape, dtype) records.  Logs then
+    merge into per-phase totals as follows:
+
+      - identical logs count ONCE (a plain retrace of the same section must
+        not double-count — the bug this class replaces);
+      - logs with the same *phase sequence* but different payload shapes
+        are shape-bucket variants of one section (e.g. the L-dependent
+        ``model_norm`` psum across length buckets): the per-phase MAX is
+        taken — what the worst single mini-batch pays — never the sum;
+      - distinct phase sequences are genuinely different program sections
+        (dense body vs power loop, another sync mode) and add up.
+
+    Records from eager (untraced) psums accumulate per call, since each one
+    is a real execution.  Traces are held only by weakref, so the meter
+    neither extends trace lifetimes nor trips jax's tracer-leak checker;
+    a log whose trace id gets reused by a later trace is frozen first.
+    """
+
+    def __init__(self) -> None:
+        self.calls: List[str] = []                 # every record ever (debug)
+        self._archived: List[Tuple[Tuple, ...]] = []   # frozen trace logs
+        # live trace id -> [weakref-to-trace (or the trace itself when it
+        # rejects weakrefs), ordered (phase, shape, dtype, nbytes) records]
+        self._live: Dict[int, list] = {}
+        self._eager: List[Tuple] = []
 
     def record(self, phase: str, arr: jnp.ndarray) -> None:
         nbytes = int(arr.size) * arr.dtype.itemsize
-        self.bytes_by_phase[phase] = self.bytes_by_phase.get(phase, 0) + nbytes
-        self.calls.append(f"{phase}:{arr.shape}:{arr.dtype}:{nbytes}")
+        sig = (phase, tuple(arr.shape), str(arr.dtype), nbytes)
+        self.calls.append(f"{phase}:{tuple(arr.shape)}:{arr.dtype}:{nbytes}")
+        trace = getattr(arr, "_trace", None)
+        if trace is None:
+            self._eager.append(sig)
+            return
+        tid = id(trace)
+        entry = self._live.get(tid)
+        if entry is not None:
+            ref, log = entry
+            cur = ref() if isinstance(ref, weakref.ref) else ref
+            if cur is not trace:           # id reused by a newer trace
+                self._archived.append(tuple(log))
+                entry = None
+        if entry is None:
+            try:
+                ref = weakref.ref(trace)
+            except TypeError:
+                ref = trace
+            entry = [ref, []]
+            self._live[tid] = entry
+        entry[1].append(sig)
+
+    def _logs(self) -> List[Tuple[Tuple, ...]]:
+        return self._archived + [tuple(log) for _, log in self._live.values()]
+
+    @property
+    def bytes_by_phase(self) -> Dict[str, int]:
+        # group deduplicated logs by phase sequence; max-merge within a
+        # group (shape-bucket variants), sum across groups and eager records
+        groups: Dict[Tuple[str, ...], Dict[str, int]] = {}
+        for log in set(self._logs()):
+            per: Dict[str, int] = {}
+            for phase, _, _, nbytes in log:
+                per[phase] = per.get(phase, 0) + nbytes
+            g = groups.setdefault(tuple(s[0] for s in log), {})
+            for phase, nbytes in per.items():
+                g[phase] = max(g.get(phase, 0), nbytes)
+        out: Dict[str, int] = {}
+        for phase, _, _, nbytes in self._eager:
+            out[phase] = out.get(phase, 0) + nbytes
+        for g in groups.values():
+            for phase, nbytes in g.items():
+                out[phase] = out.get(phase, 0) + nbytes
+        return out
 
     def phase_bytes(self, phase: str) -> int:
         return self.bytes_by_phase.get(phase, 0)
@@ -43,6 +122,26 @@ class CommMeter:
     @property
     def total_bytes(self) -> int:
         return sum(self.bytes_by_phase.values())
+
+    def per_minibatch_bytes(self, iters,
+                            loop_phases: Sequence[str] = LOOP_PHASES) -> int:
+        """The documented ``dense + (iters-1) * sparse`` mini-batch total.
+
+        `loop_phases` payloads cross the interconnect once per inner
+        iteration (their psums live in a trace-once while body); every
+        other phase is paid once per mini-batch.  `iters` includes the
+        first dense iteration, mirroring ``MinibatchResult.iters``.
+        """
+        by = self.bytes_by_phase
+        once = sum(v for p, v in by.items() if p not in loop_phases)
+        loop = sum(v for p, v in by.items() if p in loop_phases)
+        return int(once + max(int(iters) - 1, 0) * loop)
+
+    def reset(self) -> None:
+        self.calls.clear()
+        self._archived.clear()
+        self._live.clear()
+        self._eager.clear()
 
 
 class Reducer:
@@ -103,6 +202,15 @@ def dense_sync_bytes(W: int, K: int, itemsize: int = 4) -> int:
     return W * K * itemsize
 
 
-def power_sync_bytes(P: int, Pk: int, W: int, itemsize: int = 4) -> int:
-    """Eq. (6) per-iteration payload of POBP: packed phi + packed r + r_w vector."""
-    return 2 * P * Pk * itemsize + W * 4
+def power_sync_bytes(P: int, Pk: int, W: int, itemsize: int = 4,
+                     rw_itemsize: int = 4) -> int:
+    """Eq. (6) per-iteration payload of POBP: packed phi + packed r at
+    `itemsize` (the sync_dtype width) plus the [W] word-residual vector at
+    `rw_itemsize`.
+
+    `rw_itemsize` defaults to 4 because ``core/pobp.py`` syncs residuals
+    with ``compress=False`` — those psums always travel at float32 width
+    regardless of sync_dtype.  Pass ``rw_itemsize=itemsize`` only for a
+    deployment that compresses the r_w sync too.
+    """
+    return 2 * P * Pk * itemsize + W * rw_itemsize

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 
@@ -46,6 +47,13 @@ class LDAConfig:
     sync_dtype: str = "float32"     # 'float32' | 'bfloat16' (beyond-paper byte halving)
     # --- compute backend for the dense sweep ---
     impl: str = "jnp"               # 'jnp' | 'pallas' (fused bp_update kernel)
+    # --- shape-bucketed streaming ---
+    # When set, the random message init is drawn at [D, init_pad_len, K] and
+    # sliced to the batch's L, so phi_acc is invariant to how far L was
+    # padded (padding slots carry zero counts and contribute nothing).  The
+    # streaming driver sets this to its largest length bucket, making
+    # bucketed and unbucketed runs of the same corpus agree.
+    init_pad_len: Optional[int] = None
 
     @property
     def num_power_words(self) -> int:
@@ -141,6 +149,31 @@ class LDAState:
 
     phi_acc: jnp.ndarray
     m: int = 0
+
+
+@dataclasses.dataclass
+class LDATrainState:
+    """Device-carried state of the streaming POBP driver (a jax pytree).
+
+    This is the donated carry of ``core.pobp.make_train_step``: it never
+    leaves the device between mini-batches (asynchronous dispatch) and is
+    the exact payload of a driver checkpoint — phi_acc, the mini-batch
+    cursor and the RNG together make a crash-resumed run bit-identical to
+    an uninterrupted one.
+
+    phi_acc[W, K]  accumulated topic-word sufficient statistics (Eq. 11)
+    m              int32 scalar: mini-batches consumed so far (0-indexed
+                   cursor; batch m+1 is the next one, matching Eq. 11's m)
+    rng            PRNG key split once per mini-batch
+    """
+
+    phi_acc: jnp.ndarray
+    m: jnp.ndarray
+    rng: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    LDATrainState, data_fields=("phi_acc", "m", "rng"), meta_fields=())
 
 
 @dataclasses.dataclass

@@ -4,9 +4,14 @@ from repro.data.synthetic import (  # noqa: F401
     CorpusStats,
 )
 from repro.data.batching import (  # noqa: F401
+    bucket_len,
+    bucketed_minibatch_stream,
     docs_to_padded,
+    make_len_buckets,
     minibatch_stream,
+    prefetched,
     sharded_minibatch_stream,
+    stack_shards,
     train_test_split_counts,
     shard_docs,
 )

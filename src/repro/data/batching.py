@@ -4,18 +4,26 @@ The streaming layer realizes the paper's §2.1 contract: mini-batches are
 loaded one at a time (constant memory), swept to convergence, then freed.
 A background prefetch thread overlaps host-side batch construction with
 device compute (the TPU analogue of the paper's disk-as-extension trick).
+
+Shape bucketing (`bucketed_minibatch_stream`) is what makes the streaming
+regime *production-grade* under jit: every yielded batch has a constant
+document count and an L snapped up to a small ladder of buckets, so an
+arbitrary-length corpus hits at most ``len(len_buckets)`` distinct step
+shapes — a handful of compiles instead of one per natural shape.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator, List, Sequence, Tuple
+from typing import Callable, Iterator, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.types import MiniBatch
 from repro.data.synthetic import Doc
+
+_SENTINEL = object()
 
 
 def docs_to_padded(docs: Sequence[Doc], max_len: int | None = None,
@@ -57,6 +65,65 @@ def shard_docs(docs: Sequence[Doc], num_shards: int) -> List[List[Doc]]:
     return shards
 
 
+# --------------------------------------------------------------------------
+# prefetch plumbing
+# --------------------------------------------------------------------------
+
+def _put_until_stopped(q: "queue.Queue", item, stop: threading.Event) -> bool:
+    """Bounded put that polls `stop` instead of blocking forever."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=0.05)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def prefetched(gen_factory: Callable[[], Iterator], prefetch: int) -> Iterator:
+    """Run ``gen_factory()`` on a background thread with a bounded queue.
+
+    The worker never blocks unconditionally on a full queue: its puts poll a
+    stop event, so *abandoning* the returned generator (a consumer crash, a
+    cancelled request — Python delivers GeneratorExit via ``close()``/GC)
+    stops and joins the thread instead of leaking it parked on ``q.put``
+    forever.  Worker exceptions are re-raised in the consumer.
+    """
+    if prefetch <= 0:
+        yield from gen_factory()
+        return
+
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+    err: List[BaseException] = []
+
+    def worker():
+        try:
+            for item in gen_factory():
+                if not _put_until_stopped(q, item, stop):
+                    return
+        except BaseException as e:  # noqa: BLE001 — surfaced in the consumer
+            err.append(e)
+        finally:
+            _put_until_stopped(q, _SENTINEL, stop)
+
+    t = threading.Thread(target=worker, daemon=True, name="repro-prefetch")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _SENTINEL:
+                break
+            yield item
+        if err:
+            raise err[0]
+    finally:
+        # normal exhaustion, consumer exception, or GeneratorExit: the
+        # worker always observes `stop` within one put poll and terminates.
+        stop.set()
+        t.join(timeout=10.0)
+
+
 def minibatch_stream(
     docs: Sequence[Doc],
     batch_docs: int,
@@ -76,28 +143,7 @@ def minibatch_stream(
                 chunk += [(np.zeros(1, np.int32), np.zeros(1, np.float32))] * pad
             yield docs_to_padded(chunk, max_len)
 
-    if prefetch <= 0:
-        yield from slices()
-        return
-
-    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
-    _SENTINEL = object()
-
-    def worker():
-        try:
-            for b in slices():
-                q.put(b)
-        finally:
-            q.put(_SENTINEL)
-
-    t = threading.Thread(target=worker, daemon=True)
-    t.start()
-    while True:
-        item = q.get()
-        if item is _SENTINEL:
-            break
-        yield item
-    t.join()
+    yield from prefetched(slices, prefetch)
 
 
 def sharded_minibatch_stream(
@@ -109,16 +155,96 @@ def sharded_minibatch_stream(
 ) -> Iterator[MiniBatch]:
     """Yield MiniBatches with a leading shard axis [N, Dl, L] (for the
     vmap-simulated POBP path and for host sharding onto a real mesh)."""
-    import jax.numpy as jnp
-
     per_shard = -(-batch_docs // num_shards)
     for mb in minibatch_stream(docs, per_shard * num_shards, max_len,
                                prefetch, pad_docs_multiple=num_shards):
-        D, L = mb.word_ids.shape
-        yield MiniBatch(
-            word_ids=jnp.reshape(mb.word_ids, (num_shards, D // num_shards, L)),
-            counts=jnp.reshape(mb.counts, (num_shards, D // num_shards, L)),
-        )
+        yield stack_shards(mb, num_shards)
+
+
+# --------------------------------------------------------------------------
+# shape bucketing
+# --------------------------------------------------------------------------
+
+def stack_shards(mb: MiniBatch, num_shards: int) -> MiniBatch:
+    """[D, L] -> [N, D//N, L] leading-shard stack (host-side sharding for
+    the vmap simulation; shard_map shards the flat batch on device)."""
+    if num_shards <= 1:
+        return mb
+    import jax.numpy as jnp
+
+    D, L = mb.word_ids.shape
+    if D % num_shards:
+        raise ValueError(f"batch of {D} docs does not divide over "
+                         f"{num_shards} shards")
+    return MiniBatch(
+        word_ids=jnp.reshape(mb.word_ids, (num_shards, D // num_shards, L)),
+        counts=jnp.reshape(mb.counts, (num_shards, D // num_shards, L)))
+
+
+def make_len_buckets(max_len: int, min_len: int = 8, growth: float = 2.0,
+                     pad_multiple: int = 8) -> Tuple[int, ...]:
+    """Geometric ladder of L buckets covering [1, max_len].
+
+    Every bucket is a multiple of ``pad_multiple`` (so ``docs_to_padded``
+    pads exactly to the bucket) and the last bucket is >= max_len.
+    """
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+    buckets: List[int] = []
+    b = float(max(min_len, 1))
+    while True:
+        bb = int(-(-int(round(b)) // pad_multiple) * pad_multiple)
+        if not buckets or bb > buckets[-1]:
+            buckets.append(bb)
+        if bb >= max_len:
+            return tuple(buckets)
+        b *= growth
+
+
+def bucket_len(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n; the largest bucket when n exceeds them all
+    (``docs_to_padded`` then truncates each doc to the bucket — the same
+    highest-count-tail truncation contract as its ``max_len``)."""
+    for b in buckets:
+        if b >= n:
+            return int(b)
+    return int(buckets[-1])
+
+
+def bucketed_minibatch_stream(
+    docs: Sequence[Doc],
+    batch_docs: int,
+    num_shards: int = 1,
+    len_buckets: Sequence[int] = (16, 32, 64, 128),
+    prefetch: int = 2,
+) -> Iterator[MiniBatch]:
+    """Shape-bucketed streaming for the production driver.
+
+    Every yielded batch has EXACTLY ``batch_docs`` documents (a short final
+    chunk is padded with empty docs, so D never varies) and an L snapped up
+    to one of ``len_buckets`` — an arbitrary-length corpus therefore
+    compiles a jitted step at most ``len(len_buckets)`` times.  Yields
+    [N, Dl, L]-stacked MiniBatches when ``num_shards > 1``.
+    """
+    len_buckets = tuple(sorted(int(b) for b in len_buckets))
+    if any(b % 8 for b in len_buckets):
+        raise ValueError(f"len_buckets must be multiples of 8: {len_buckets}")
+    if batch_docs % max(num_shards, 1):
+        raise ValueError(f"batch_docs={batch_docs} must divide over "
+                         f"num_shards={num_shards}")
+    n_batches = -(-len(docs) // batch_docs)
+
+    def slices():
+        for m in range(n_batches):
+            chunk = list(docs[m * batch_docs: (m + 1) * batch_docs])
+            nat = max((len(ids) for ids, _ in chunk), default=1)
+            if len(chunk) < batch_docs:
+                chunk += [(np.zeros(1, np.int32), np.zeros(1, np.float32))
+                          ] * (batch_docs - len(chunk))
+            mb = docs_to_padded(chunk, max_len=bucket_len(nat, len_buckets))
+            yield stack_shards(mb, num_shards)
+
+    yield from prefetched(slices, prefetch)
 
 
 def train_test_split_counts(docs: Sequence[Doc], seed: int, test_frac: float = 0.2

@@ -97,6 +97,20 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def restore_latest(directory: str, template: Dict[str, Any],
+                   shardings: Optional[Dict[str, Any]] = None
+                   ) -> Optional[Tuple[Dict[str, Any], Dict[str, Any], int]]:
+    """Restore the newest complete checkpoint, or return None.
+
+    The cold-start branch of a crash-resume driver collapses to
+    ``got = restore_latest(dir, template)`` followed by an ``if got:``.
+    """
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return restore(directory, step, template, shardings)
+
+
 def restore(directory: str, step: int, template: Dict[str, Any],
             shardings: Optional[Dict[str, Any]] = None
             ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:

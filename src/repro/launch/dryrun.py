@@ -318,56 +318,41 @@ def run_lda_cell(K: int, mesh_kind: str, sync_mode: str,
     axes, topics over the model axis.  The HLO while-body collectives give
     the *per-iteration* sync bytes, so the Eq. 5 (dense) vs Eq. 6 (power)
     reduction is measured directly in the compiled collective schedule."""
-    from functools import partial
-    from jax.experimental.shard_map import shard_map
-    from repro.core.pobp import pobp_minibatch
-    from repro.core.sync import MeshReducer
-    from repro.core.types import LDAConfig, MiniBatch
+    from repro.core.pobp import shard_map_minibatch_fn
+    from repro.core.types import LDAConfig
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh_chip_count(mesh)
-    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     model_size = mesh.shape["model"]
     cfg = LDAConfig(vocab_size=W, num_topics=K,
                     lambda_w=0.1,
                     lambda_k_abs=max(1, round(50 / model_size)),  # global ~50
                     inner_iters=200, residual_tol=0.1)
-    meter_holder = {}
 
-    def local(wid, cnt, phi_acc, key):
-        data_red = MeshReducer(dp)
-        model_red = MeshReducer("model", meter=data_red.meter)
-        meter_holder["meter"] = data_red.meter
-        batch = MiniBatch(wid, cnt)
-        total = data_red.psum(jnp.sum(cnt), "tokens", compress=False)
-        res = pobp_minibatch(batch, phi_acc, key, total, jnp.float32(1.0),
-                             cfg, data_red, model_red, sync_mode=sync_mode)
-        return res.phi_acc_new, res.iters, res.mean_r
-
-    P_ = P
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P_(dp, None), P_(dp, None), P_(None, "model"),
-                             P_()),
-                   out_specs=(P_(None, "model"), P_(), P_()),
-                   check_rep=False)
+    # the SAME shard_map'd step the streaming driver executes
+    # (launch.lda_train --backend shard_map) — compile-only here.
+    fn, _meter = shard_map_minibatch_fn(cfg, mesh, sync_mode)
 
     wid_s = jax.ShapeDtypeStruct((D_m, L), jnp.int32)
     cnt_s = jax.ShapeDtypeStruct((D_m, L), jnp.float32)
     phi_s = jax.ShapeDtypeStruct((W, K), jnp.float32)
     key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    w_s = jax.ShapeDtypeStruct((), jnp.float32)
 
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(fn).lower(wid_s, cnt_s, phi_s, key_s)
+        lowered = jax.jit(fn).lower(wid_s, cnt_s, phi_s, key_s, w_s)
         compiled = lowered.compile()
     t_compile = time.time() - t0
     txt = compiled.as_text()
     loop_bytes, once_bytes, per_comp = rl.collective_bytes_split(txt)
     fb = rl.flops_and_bytes(compiled)
     mem = rl.memory_info(compiled)
-    analytic_power = (2 * cfg.num_power_words * cfg.num_power_topics * 4
-                      + W * 4)            # packed phi+r and the r_w vector
-    analytic_dense = W * (K // model_size) * 4 * 2   # per-device phi+r
+    from repro.core.sync import dense_sync_bytes, power_sync_bytes
+    # packed phi+r and the r_w vector (Eq. 6) / per-device phi+r (Eq. 5)
+    analytic_power = power_sync_bytes(cfg.num_power_words,
+                                      cfg.num_power_topics, W)
+    analytic_dense = 2 * dense_sync_bytes(W, K // model_size)
     # T-iteration mini-batch totals (T=200 the paper's regime)
     T = cfg.inner_iters
     total_coll = once_bytes + loop_bytes * (T - 1)

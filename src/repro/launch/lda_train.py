@@ -1,0 +1,456 @@
+"""Production streaming POBP driver — the paper's Fig. 4 outer loop as a
+service-grade artifact (constant memory over an unbounded mini-batch
+stream, §3.2 / Table 5).
+
+One jitted, donated-carry step (`repro.core.pobp.make_train_step`)
+consumes the stream with:
+
+  - **shape-bucketed batching**: mini-batch L snaps up to a small ladder
+    of buckets (`repro.data.batching`), so an arbitrary-length corpus
+    compiles the step at most once per bucket instead of once per natural
+    shape; D is constant by construction.
+  - **asynchronous dispatch**: no ``float()``/``int()`` host sync per
+    mini-batch — convergence diagnostics stay on device and are fetched
+    every ``--log-every`` batches.
+  - **crash-resume**: the full state (phi_acc, m, RNG, stream cursor) is
+    checkpointed through `repro.dist.checkpoint`; ``--crash-at N``
+    simulates a hard failure on a FRESH run (it does not re-fire on a
+    resumed one), so rerunning the same command continues from the
+    latest checkpoint with a matching mean_r trajectory.  Resuming
+    validates the checkpoint's seed/sync/backend against the flags.
+  - **periodic held-out perplexity** every ``--eval-every`` batches.
+  - execution either as the vmap N-shard simulation (``--backend sim``,
+    CPU tests/benchmarks) or under ``shard_map`` on the production mesh
+    (``--backend shard_map`` — the dryrun cell's per-shard body, shared
+    via `make_mesh_shard_fn`, not forked).
+
+  PYTHONPATH=src python -m repro.launch.lda_train --shards 4 --sync power \
+      --minibatches 24 --ckpt-dir /tmp/lda_ck --crash-at 10
+  # rerun the same command: resumes from the latest checkpoint
+
+NB: jax is imported lazily so ``--backend shard_map`` can force the host
+platform device count before first jax use (same contract as dryrun.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    # stream
+    ap.add_argument("--minibatches", type=int, default=24)
+    ap.add_argument("--docs-per-batch", type=int, default=64)
+    ap.add_argument("--doc-len-means", default="12,24,40",
+                    help="cycled per mini-batch: a variable-length stream")
+    ap.add_argument("--len-buckets", default="16,32,48",
+                    help="L buckets (multiples of 8); compiles <= #buckets")
+    ap.add_argument("--fixed-len", action="store_true",
+                    help="pad every batch to the largest bucket "
+                         "(single-compile baseline for BENCH_e2e)")
+    ap.add_argument("--prefetch", type=int, default=2)
+    # model
+    ap.add_argument("--vocab", type=int, default=500)
+    ap.add_argument("--topics", type=int, default=16)
+    ap.add_argument("--lambda-w", type=float, default=0.1)
+    ap.add_argument("--lambda-k", type=int, default=8)
+    ap.add_argument("--inner-iters", type=int, default=12)
+    ap.add_argument("--tol", type=float, default=0.05)
+    ap.add_argument("--sync", default="power", choices=["power", "dense"])
+    ap.add_argument("--sync-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    # execution
+    ap.add_argument("--shards", type=int, default=4,
+                    help="simulated data shards (--backend sim)")
+    ap.add_argument("--backend", default="sim", choices=["sim", "shard_map"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"],
+                    help="production mesh for --backend shard_map")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override mesh as 'data,model' (smoke tests), "
+                         "e.g. --mesh-shape 4,2")
+    # driving
+    ap.add_argument("--warmup-buckets", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pre-compile every bucket shape before the stream "
+                         "starts (predictable latency: no compile hiccups "
+                         "mid-stream; timed throughput is steady-state)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--eval-docs", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate a hard failure after minibatch N")
+    return ap
+
+
+def default_args(**overrides) -> argparse.Namespace:
+    """Programmatic entry: parser defaults + keyword overrides."""
+    args = build_parser().parse_args([])
+    for k, v in overrides.items():
+        if not hasattr(args, k):
+            raise TypeError(f"unknown driver arg: {k}")
+        setattr(args, k, v)
+    return args
+
+
+def _csv_ints(s: str):
+    return tuple(int(x) for x in str(s).split(",") if str(x).strip())
+
+
+def _build_cfg(args):
+    from repro.core.types import LDAConfig
+    buckets = tuple(sorted(_csv_ints(args.len_buckets)))
+    if any(b % 8 for b in buckets):
+        # docs_to_padded rounds L up to a multiple of 8: an unaligned bucket
+        # would warm up a shape the stream never produces and break the
+        # compiles <= #buckets contract
+        raise ValueError(f"--len-buckets must be multiples of 8: {buckets}")
+    return LDAConfig(vocab_size=args.vocab, num_topics=args.topics,
+                     lambda_w=args.lambda_w, lambda_k_abs=args.lambda_k,
+                     inner_iters=args.inner_iters, residual_tol=args.tol,
+                     sync_dtype=args.sync_dtype, impl=args.impl,
+                     init_pad_len=buckets[-1]), buckets
+
+
+def _true_phi(args):
+    """One fixed ground-truth topic set shared by the whole stream
+    (life-long regime: every mini-batch is drawn from the same model)."""
+    return np.random.default_rng(args.seed).dirichlet(
+        np.full(args.vocab, 0.06), size=args.topics).astype(np.float32)
+
+
+def synthetic_stream(args, buckets, start_m: int, stacked: bool):
+    """Deterministic, resumable variable-length stream factory.
+
+    Batch m is generated purely from (seed, m), so resuming from a
+    checkpoint cursor only needs `start_m` — no stream state to persist.
+    Yields (MiniBatch, host_token_count); batches are [N, Dl, L] stacked
+    when `stacked`, global [D, L] otherwise (shard_map shards on device).
+    """
+    from repro.data.batching import bucket_len, docs_to_padded, stack_shards
+    from repro.data.synthetic import lda_corpus_from_phi
+
+    phi = _true_phi(args)
+    means = _csv_ints(args.doc_len_means)
+
+    def gen():
+        for m in range(start_m, args.minibatches):
+            docs, stats = lda_corpus_from_phi(
+                args.seed * 1_000_003 + m, args.docs_per_batch, phi,
+                doc_len_mean=means[m % len(means)])
+            nat = max(len(ids) for ids, _ in docs)
+            L = buckets[-1] if args.fixed_len else bucket_len(nat, buckets)
+            mb = docs_to_padded(docs, max_len=L)
+            if stacked:
+                mb = stack_shards(mb, args.shards)
+            # tokens actually processed (docs_to_padded truncates docs
+            # beyond the bucket); the sync runs on the prefetch thread,
+            # never on the dispatch loop
+            yield mb, float(mb.counts.sum())
+
+    return gen
+
+
+def _eval_split(args):
+    from repro.data.batching import docs_to_padded, train_test_split_counts
+    from repro.data.synthetic import lda_corpus_from_phi
+
+    # disjoint from every stream batch seed (those stay < ~minibatches)
+    docs, _ = lda_corpus_from_phi(args.seed * 1_000_003 + 987_654_321,
+                                  args.eval_docs, _true_phi(args),
+                                  doc_len_mean=40)
+    train, test = train_test_split_counts(docs, args.seed)
+    return docs_to_padded(train), docs_to_padded(test)
+
+
+def _make_mesh(args):
+    import jax
+    if args.mesh_shape:
+        dims = _csv_ints(args.mesh_shape)
+        axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+        devices = jax.devices()
+        need = int(np.prod(dims))
+        if len(devices) < need:
+            raise RuntimeError(f"mesh {dims} needs {need} devices, found "
+                               f"{len(devices)}")
+        return jax.sharding.Mesh(np.asarray(devices[:need]).reshape(dims), axes)
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+
+def make_shardmap_train_step(cfg, mesh, sync_mode="power",
+                             sync_dtype=None, donate: bool = True):
+    """The driver step under shard_map on a real mesh: documents over the
+    data (and pod) axes, topics over 'model'.  Same carry/diag contract as
+    `core.pobp.make_train_step`; the per-shard body is the exact function
+    `launch.dryrun.run_lda_cell` compiles (`make_mesh_shard_fn`)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pobp import _delta_weight, shard_map_minibatch_fn
+    from repro.core.types import LDATrainState
+
+    sync_dtype = jnp.float32 if sync_dtype is None else sync_dtype
+    sm, meter = shard_map_minibatch_fn(cfg, mesh, sync_mode, sync_dtype)
+
+    def step(state, word_ids, counts):
+        rng, sub = jax.random.split(state.rng)
+        weight = _delta_weight(cfg, state.m + 1)
+        phi, iters, mean_r = sm(word_ids, counts, state.phi_acc, sub, weight)
+        new_state = LDATrainState(phi_acc=phi, m=state.m + 1, rng=rng)
+        return new_state, dict(iters=iters, mean_r=mean_r, theta=None)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ()), meter
+
+
+def _state_tree(state) -> Dict[str, Any]:
+    """The checkpoint payload: exactly the driver carry, with stable keys."""
+    return {"state": {"phi_acc": state.phi_acc, "m": state.m,
+                      "rng": state.rng}}
+
+
+# every flag that shapes the per-batch trajectory: resuming under ANY other
+# value silently breaks the matching-mean_r guarantee, so all are saved in
+# the checkpoint and validated on restore.  (minibatches / logging /
+# checkpoint cadence / warmup / crash-at only affect when the run stops.)
+_RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
+                "lambda_w", "lambda_k", "inner_iters", "tol", "sync_dtype",
+                "impl", "docs_per_batch", "doc_len_means", "len_buckets",
+                "fixed_len")
+
+
+def _run_signature(args) -> Dict[str, Any]:
+    return {k: getattr(args, k) for k in _RESUME_KEYS}
+
+
+def _compiles(step_fn) -> int:
+    """Compile count via the jitted function's cache (private jax API; -1
+    when absent — BENCH_e2e asserts positivity so a break is loud)."""
+    try:
+        return int(step_fn._cache_size())
+    except AttributeError:
+        return -1
+
+
+class _CompileClock:
+    """Total jax compile seconds, via a process-wide jax.monitoring listener
+    (registered once; train_loop reads before/after snapshots)."""
+
+    def __init__(self):
+        self.total = 0.0
+        self._registered = False
+
+    def ensure_registered(self):
+        if self._registered:
+            return
+        import jax
+
+        def _on_duration(name, dur, **kw):
+            if name.startswith("/jax/core/compile/"):
+                self.total += dur
+
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        self._registered = True
+
+
+_COMPILE_CLOCK = _CompileClock()
+
+
+def train_loop(args, on_batch=None) -> Dict[str, Any]:
+    """Run the streaming driver; returns a result dict (see bottom).
+
+    `on_batch(step_no, state, diag)` is an optional per-batch hook (the
+    example uses it for RSS tracking); `diag` values are device scalars —
+    converting them forces a sync, so hooks should do that sparingly.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import perplexity
+    from repro.core.pobp import DiagBuffer, init_train_state, make_train_step
+    from repro.core.types import LDATrainState
+    from repro.data.batching import prefetched
+    from repro.dist import checkpoint as ckpt
+
+    cfg, buckets = _build_cfg(args)
+    sync_dtype = jnp.bfloat16 if args.sync_dtype == "bfloat16" else jnp.float32
+
+    if args.crash_at and not args.ckpt_dir:
+        raise ValueError("--crash-at needs --ckpt-dir: without a checkpoint "
+                         "the rerun restarts from scratch and hits the same "
+                         "simulated failure forever")
+    if args.crash_at and args.ckpt_dir and args.crash_at <= args.ckpt_every:
+        print(f"[warn] --crash-at {args.crash_at} fires before the first "
+              f"checkpoint (--ckpt-every {args.ckpt_every}); the rerun will "
+              f"restart from scratch and crash again", flush=True)
+
+    state = init_train_state(cfg, args.seed)
+    start_m = 0
+    if args.ckpt_dir:
+        try:
+            got = ckpt.restore_latest(args.ckpt_dir, _state_tree(state))
+        except ValueError as e:
+            raise ValueError(
+                f"cannot restore checkpoint from {args.ckpt_dir} ({e}); it "
+                f"was probably written by an older/other tool — use a fresh "
+                f"--ckpt-dir") from e
+        if got is not None:
+            trees, extra, ck_step = got
+            want = _run_signature(args)
+            for key, saved in extra.get("run", {}).items():
+                if key in want and saved != want[key]:
+                    raise ValueError(
+                        f"checkpoint in {args.ckpt_dir} was written with "
+                        f"{key}={saved!r} but this run has "
+                        f"{key}={want[key]!r}; rerun with matching flags "
+                        f"or a fresh --ckpt-dir")
+            state = LDATrainState(**trees["state"])
+            start_m = int(extra["next_m"])
+            print(f"[restore] resumed from checkpoint step {ck_step} -> "
+                  f"next minibatch {start_m + 1}", flush=True)
+            if start_m >= args.minibatches:
+                print(f"[restore] checkpoint already covers all "
+                      f"{args.minibatches} minibatches — nothing to train "
+                      f"(raise --minibatches or use a fresh --ckpt-dir)",
+                      flush=True)
+
+    if args.backend == "sim":
+        step_fn, meter = make_train_step(cfg, args.shards, args.sync,
+                                         sync_dtype)
+    else:
+        mesh = _make_mesh(args)
+        step_fn, meter = make_shardmap_train_step(cfg, mesh, args.sync,
+                                                  sync_dtype)
+
+    stream = prefetched(
+        synthetic_stream(args, buckets, start_m, stacked=(args.backend == "sim")),
+        args.prefetch)
+
+    _COMPILE_CLOCK.ensure_registered()
+    warmup_s = 0.0
+    if args.warmup_buckets:
+        # AOT warmup: push an all-padding batch of every bucket shape
+        # through the step on a throwaway state, so the stream never stalls
+        # on a mid-run compile (startup cost, not steady-state cost).
+        t0 = time.time()
+        scratch = init_train_state(cfg, args.seed)
+        for L in (buckets[-1:] if args.fixed_len else buckets):
+            if args.backend == "sim" and args.shards > 1:
+                shape = (args.shards, args.docs_per_batch // args.shards, L)
+            else:
+                shape = (args.docs_per_batch, L)
+            scratch, _ = step_fn(scratch, jnp.zeros(shape, jnp.int32),
+                                 jnp.zeros(shape, jnp.float32))
+        jax.block_until_ready(scratch.phi_acc)
+        warmup_s = time.time() - t0
+
+    # per-batch diagnostics: device scalars buffered and flushed to host
+    # values in blocks (DiagBuffer), so the stream stays async while live
+    # device buffers stay bounded on an unbounded stream (§3.2).
+    buf = DiagBuffer(block=max(args.log_every, 64))
+    ppl_trace = []
+    eval_split = None
+
+    def heldout():
+        nonlocal eval_split
+        if eval_split is None:  # built once, reused by every eval
+            eval_split = _eval_split(args)
+        return eval_split
+
+    tokens = 0.0
+    eval_compile_s = 0.0
+    compile_s0 = _COMPILE_CLOCK.total
+    t0 = time.time()
+    for m, (batch, ntok) in enumerate(stream, start=start_m):
+        state, diag = step_fn(state, batch.word_ids, batch.counts)
+        buf.append(diag["mean_r"], diag["iters"])
+        tokens += ntok
+        step_no = m + 1
+        if args.log_every and step_no % args.log_every == 0:
+            # the ONLY recurring host sync, amortized over --log-every batches
+            dt = time.time() - t0
+            print(f"minibatch {step_no:5d}  mean_r={float(diag['mean_r']):.4f}"
+                  f"  iters={int(diag['iters']):3d}"
+                  f"  tokens/s={tokens / max(dt, 1e-9):,.0f}"
+                  f"  compiles={_compiles(step_fn)}", flush=True)
+        if args.eval_every and step_no % args.eval_every == 0:
+            c_eval = _COMPILE_CLOCK.total
+            tr_b, te_b = heldout()
+            ppl = perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
+                                      state.phi_acc, tr_b, te_b, cfg)
+            eval_compile_s += _COMPILE_CLOCK.total - c_eval
+            ppl_trace.append((step_no, float(ppl)))
+            print(f"minibatch {step_no:5d}  held-out ppl={ppl:.2f}", flush=True)
+        if on_batch is not None:
+            on_batch(step_no, state, diag)
+        if args.crash_at and step_no == args.crash_at and start_m == 0:
+            # fresh runs only: a resumed run sails past the simulated
+            # failure, so "rerun the same command" terminates
+            raise SystemExit(f"[simulated crash] after minibatch {step_no}")
+        if args.ckpt_dir and args.ckpt_every and \
+                step_no % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step_no, _state_tree(state),
+                      extra={"next_m": step_no,
+                             "run": _run_signature(args)})
+
+    jax.block_until_ready(state.phi_acc)
+    wall = time.time() - t0
+    # step-function compiles only: eval jits are accounted separately
+    compile_s = _COMPILE_CLOCK.total - compile_s0 - eval_compile_s
+
+    tr_b, te_b = heldout()
+    ppl = float(perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
+                                    state.phi_acc, tr_b, te_b, cfg))
+    rows = buf.rows()
+    mean_r = [float(r) for r, _ in rows]
+    iters = [int(i) for _, i in rows]
+    return {
+        "first_m": start_m,
+        "mean_r": mean_r,
+        "iters": iters,
+        "compiles": _compiles(step_fn),
+        "len_buckets": list(buckets),
+        "tokens": tokens,
+        "wall_s": wall,
+        "warmup_s": warmup_s,
+        "compile_s": compile_s,
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "ppl": ppl,
+        "ppl_trace": ppl_trace,
+        "bytes_by_phase": dict(meter.bytes_by_phase),
+        "per_minibatch_bytes": (meter.per_minibatch_bytes(iters[-1])
+                                if iters else 0),
+        "phi_acc": np.asarray(state.phi_acc),
+    }
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.backend == "shard_map" and "XLA_FLAGS" not in os.environ:
+        # must happen before first jax import (same contract as dryrun.py)
+        n = 512 if not args.mesh_shape else int(np.prod(_csv_ints(args.mesh_shape)))
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n}")
+    res = train_loop(args)
+    done = args.minibatches - res["first_m"]
+    print(f"[done] {done} minibatches  final mean_r="
+          f"{res['mean_r'][-1] if res['mean_r'] else float('nan'):.4f}  "
+          f"held-out ppl={res['ppl']:.2f}")
+    print(f"[perf] tokens/s={res['tokens_per_s']:,.0f}  "
+          f"compiles={res['compiles']} (buckets={res['len_buckets']})  "
+          f"warmup={res['warmup_s']:.1f}s  wall={res['wall_s']:.1f}s "
+          f"(+{res['compile_s']:.1f}s in-stream compile)")
+    print(f"[comm] per-minibatch bytes={res['per_minibatch_bytes']:,} "
+          f"(phases: {res['bytes_by_phase']})")
+    return res
+
+
+if __name__ == "__main__":
+    main()
