@@ -449,6 +449,111 @@ def bench_e2e(quick=False):
 
 
 # ------------------------------------------------------------------
+# this repo's serving trajectory: the fold-in engine (ISSUE 3)
+# (docs/s + p99 latency; token-major early-exit fold-in vs the dense
+# [D, L, K] reference on the same bucket ladder — acceptance: >= 2x
+# docs/s at K >= 64)
+# ------------------------------------------------------------------
+
+def bench_serve(quick=False):
+    from repro.core import infer
+    from repro.core.perplexity import normalize_phi
+    from repro.core.types import LDAConfig, MiniBatch
+    from repro.data import bucket_len, docs_to_padded
+    from repro.data.synthetic import lda_corpus
+    from repro.serve import FoldInEngine
+
+    buckets = (16, 32, 64)
+    batch_docs = 32
+    fold_iters = 30
+    tol = 1e-2
+    n_req = 128 if quick else 256
+    out = {"config": dict(buckets=buckets, batch_docs=batch_docs,
+                          fold_iters=fold_iters, residual_tol=tol,
+                          requests=n_req)}
+
+    def requests(W, K):
+        reqs = []
+        for i, mean in enumerate((12, 24, 40)):
+            d, _, phi_true = lda_corpus(100 + i, -(-n_req // 3), W, K,
+                                        doc_len_mean=mean)
+            reqs.extend(d)
+        return reqs[:n_req], phi_true
+
+    def run_dense(reqs, phi_norm, cfg):
+        """The seed's dense fold-in under the SAME bucket ladder/admission
+        (fixed sweeps — the dense path has no residual carry to exit on)."""
+        fold = jax.jit(lambda key, wid, cnt: infer.fold_in_dense_reference(
+            key, MiniBatch(wid, cnt), phi_norm, cfg, iters=fold_iters))
+        key = jax.random.PRNGKey(0)
+        for b in buckets:                                  # AOT warmup
+            jax.block_until_ready(fold(key, jnp.zeros((batch_docs, b),
+                                                      jnp.int32),
+                                       jnp.zeros((batch_docs, b))))
+        queues = {b: [] for b in buckets}
+        pending, t0 = [], time.time()
+        for doc in reqs:
+            b = bucket_len(len(doc[0]), buckets)
+            queues[b].append((doc, time.time()))
+            if len(queues[b]) == batch_docs:
+                batch, queues[b] = queues[b], []
+                mb = docs_to_padded([d for d, _ in batch], max_len=b)
+                key, sub = jax.random.split(key)
+                pending.append((fold(sub, mb.word_ids, mb.counts),
+                                [t for _, t in batch]))
+        for b in buckets:
+            if queues[b]:
+                mb = docs_to_padded([d for d, _ in queues[b]], max_len=b)
+                key, sub = jax.random.split(key)
+                pending.append((fold(sub, mb.word_ids, mb.counts),
+                                [t for _, t in queues[b]]))
+        lats, t_done = [], t0
+        for theta, subs in pending:
+            jax.block_until_ready(theta)
+            t_done = time.time()
+            lats.extend(t_done - t for t in subs)
+        return {"docs_per_s": len(reqs) / max(t_done - t0, 1e-9),
+                "latency_p99_s": float(np.percentile(lats, 99))}
+
+    for K in ([64] if quick else [64, 128]):
+        W = 1000
+        cfg = LDAConfig(vocab_size=W, num_topics=K)
+        reqs, phi_true = requests(W, K)
+        phi_acc = jnp.asarray(phi_true.T) * 200.0      # converged stand-in
+
+        eng = FoldInEngine(phi_acc, cfg, len_buckets=buckets,
+                           batch_docs=batch_docs, fold_iters=fold_iters,
+                           residual_tol=tol, seed=1)
+        for doc in reqs:
+            eng.submit(doc)
+        eng.drain()
+        tok = eng.stats()
+
+        dense = run_dense(reqs, normalize_phi(phi_acc, cfg.beta), cfg)
+        speedup = tok["docs_per_s"] / max(dense["docs_per_s"], 1e-9)
+        rec = {"token_major": {k: tok[k] for k in
+                               ("docs_per_s", "latency_p50_s",
+                                "latency_p99_s", "mean_fold_iters",
+                                "compiles", "warmup_s")},
+               "dense": dense, "speedup_x": speedup}
+        out[f"K{K}"] = rec
+        _emit(f"serve/K{K}/token_major_docs_per_s",
+              f"{tok['docs_per_s']:.0f}",
+              f"p99={tok['latency_p99_s'] * 1e3:.1f}ms "
+              f"iters={tok['mean_fold_iters']:.1f}")
+        _emit(f"serve/K{K}/dense_docs_per_s", f"{dense['docs_per_s']:.0f}",
+              f"p99={dense['latency_p99_s'] * 1e3:.1f}ms iters={fold_iters}")
+        _emit(f"serve/K{K}/speedup_x", f"{speedup:.2f}",
+              "acceptance: >= 2x at K >= 64")
+        if not quick:
+            # quick mode times sub-second windows — too noisy to gate on
+            assert speedup >= 2.0, rec
+    # quick mode writes a separate file so a smoke run can never clobber
+    # the committed full artifact
+    _save("BENCH_serve_quick" if quick else "BENCH_serve", out)
+
+
+# ------------------------------------------------------------------
 # Fig. 6: power-law (rank-size) structure of residuals
 # ------------------------------------------------------------------
 
@@ -485,8 +590,8 @@ def bench_powerlaw(quick=False):
 # ------------------------------------------------------------------
 
 ALL = [bench_comm_volume, bench_lambda_sweep, bench_accuracy, bench_speed,
-       bench_inner_loop, bench_e2e, bench_scalability, bench_memory,
-       bench_complexity, bench_convergence, bench_powerlaw]
+       bench_inner_loop, bench_e2e, bench_serve, bench_scalability,
+       bench_memory, bench_complexity, bench_convergence, bench_powerlaw]
 
 
 def main() -> None:

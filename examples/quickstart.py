@@ -39,6 +39,25 @@ def main():
     print("power sync sends ~= lambda_w * lambda_k of the dense payload "
           "per iteration (paper Eq. 6 vs Eq. 5) at comparable perplexity.")
 
+    # ---- serve the model you just trained ------------------------------
+    # the paper's deployment story: phi is frozen, incoming documents get
+    # topic mixtures by fold-in.  FoldInEngine batches requests per length
+    # bucket and runs the same token-major inference body eval used above.
+    from repro.serve import FoldInEngine
+
+    engine = FoldInEngine(phi, cfg, len_buckets=(16, 32, 64, 128),
+                          batch_docs=32, residual_tol=0.01)
+    for doc in test:
+        engine.submit(doc)
+    results = engine.drain()
+    s = engine.stats()
+    top = results[0].theta.argsort()[-3:][::-1]
+    print(f"[serve] {s['served']} requests: {s['docs_per_s']:,.0f} docs/s  "
+          f"p50={s['latency_p50_s'] * 1e3:.1f}ms  "
+          f"p99={s['latency_p99_s'] * 1e3:.1f}ms  "
+          f"mean fold iters={s['mean_fold_iters']:.1f}")
+    print(f"[serve] request 0 top topics: {top.tolist()}")
+
 
 if __name__ == "__main__":
     main()

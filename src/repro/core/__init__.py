@@ -14,4 +14,5 @@ from repro.core.pobp import (  # noqa: F401
     make_sim_minibatch_fn,
     run_stream,
 )
-from repro.core import ref, power, residuals, sync, perplexity  # noqa: F401
+from repro.core import (ref, power, residuals, sync,  # noqa: F401
+                        infer, perplexity)

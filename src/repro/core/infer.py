@@ -1,0 +1,272 @@
+"""Fixed-phi inference core — the ONE token-major fold-in body shared by
+serving, evaluation and the training driver's held-out hook (DESIGN.md §11).
+
+The paper's deployment protocol (Eq. 20, §4) estimates theta for incoming
+documents by BP fold-in with phi frozen.  This module is that inner loop as
+a production artifact:
+
+  - **token-major carry** (`TokenLayout`, DESIGN.md §2): messages live as
+    [T, Kl] flat token streams; the fixed phi is gathered to [T, Kl] ONCE
+    per batch (it never changes), so every sweep is pure elementwise work
+    plus one per-doc reduction — no [D, L, K] rewrite per iteration;
+  - **residual-based early exit per document**: each sweep carries the
+    per-doc message residual r_d = sum_l c |mu' - mu|, whose sweep-over-
+    sweep decay rho estimates the document's REMAINING movement as the
+    geometric tail r_d * rho / (1 - rho).  A document freezes once that
+    tail drops below ``residual_tol`` per token (its tokens stop updating,
+    so its theta never moves again — and would have moved at most ~tol had
+    it kept running); the loop ends when every document is frozen or
+    ``iters`` is reached — the serving analogue of Fig. 4 line 26;
+  - **kernel reuse with the phi-update scatter disabled**: the Pallas path
+    feeds the `power_sweep` kernel zero counts (its packed delta/residual
+    outputs are then exactly zero — the training-side phi scatter is dead)
+    and the full vocabulary as the "power" rows, with frozen tokens routed
+    to the guard row so the freeze happens in-kernel;
+  - **topic sharding**: the renormalization and residual reductions go
+    through a `Reducer` ("model"-axis psums, byte-metered), so the same
+    body serves a topic-sharded phi — the init draws the random field at
+    the GLOBAL K and slices the local columns (the K-axis analogue of
+    ``LDAConfig.init_pad_len``), keeping sharded and unsharded fold-ins
+    numerically aligned.
+
+`fold_in_dense_reference` keeps the seed's dense [D, L, K] scan as the
+semantics oracle and the BENCH_serve baseline; no production path calls it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sync import CommMeter, LocalReducer, MeshReducer, Reducer
+from repro.core.types import LDAConfig, MiniBatch
+
+
+@dataclasses.dataclass
+class FoldInResult:
+    """Device-resident fold-in diagnostics (a jax pytree).
+
+    theta:  [D, Kl] normalized topic mixture (local topic shard)
+    iters:  int32 scalar — sweeps actually run (early exit included)
+    mean_r: final mean residual per token (the Fig. 4 line 26 quantity)
+    r_doc:  [D] final per-document residual (the early-exit signal)
+    """
+
+    theta: jnp.ndarray
+    iters: jnp.ndarray
+    mean_r: jnp.ndarray
+    r_doc: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    FoldInResult, data_fields=("theta", "iters", "mean_r", "r_doc"),
+    meta_fields=())
+
+
+def _init_messages(key: jax.Array, batch: MiniBatch, cfg: LDAConfig,
+                   kl: int, model_reducer: Reducer) -> jnp.ndarray:
+    """Random init, invariant to both the L bucket and the topic shard.
+
+    Drawn at [D, max(init_pad_len, L), K_global] and sliced to this batch's
+    L and this shard's topic columns, so the same document produces the
+    same theta whichever bucket admitted it and however phi is sharded.
+    """
+    D, L = batch.word_ids.shape
+    K = cfg.num_topics
+    Lpad = L if cfg.init_pad_len is None else max(cfg.init_pad_len, L)
+    u = jax.random.uniform(key, (D, Lpad, K), minval=0.01, maxval=1.0)[:, :L]
+    if kl != K:
+        idx = jax.lax.axis_index(model_reducer.axis_name)
+        u = jax.lax.dynamic_slice_in_dim(u, idx * kl, kl, axis=2)
+    norm = model_reducer.psum(jnp.sum(u, -1, keepdims=True), "model_norm",
+                              compress=False)
+    return u / norm
+
+
+def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
+                   cfg: LDAConfig, iters: int = 30,
+                   residual_tol: float = 0.0,
+                   model_reducer: Optional[Reducer] = None,
+                   impl: Optional[str] = None) -> FoldInResult:
+    """Token-major BP fold-in with phi fixed (the shared inference body).
+
+    `phi_norm_wk` [W, Kl] is the NORMALIZED topic-word matrix (this shard's
+    topic columns when the model axis is sharded).  ``residual_tol == 0``
+    disables early exit (every document sweeps all `iters` — the protocol
+    `fold_in_dense_reference` implements); a positive tolerance freezes
+    each document once its per-token residual drops below it and ends the
+    loop when all have.  Returns a `FoldInResult` of device values.
+    """
+    model_reducer = model_reducer or LocalReducer()
+    impl = cfg.impl if impl is None else impl
+    D, L = batch.word_ids.shape
+    Kl = phi_norm_wk.shape[1]
+    layout = batch.token_layout()
+    T = layout.num_slots
+    c = layout.counts                                           # [T, 1]
+    tok_d = c.reshape(D, L).sum(axis=1)                         # [D]
+    total = jnp.maximum(jnp.sum(tok_d), 1.0)
+
+    mu_t = _init_messages(key, batch, cfg, Kl, model_reducer).reshape(T, Kl)
+    phi_tok = jnp.take(phi_norm_wk, layout.word_ids, axis=0)    # [T, Kl], once
+    theta0 = (c * mu_t).reshape(D, L, Kl).sum(axis=1)           # [D, Kl]
+
+    use_pallas = impl == "pallas" and isinstance(model_reducer, LocalReducer)
+    if use_pallas:
+        from repro.kernels.power_sweep.ops import power_sweep
+        zero_c = jnp.zeros_like(c)              # disables the phi scatter
+
+    def active_docs(r_doc, r_prev):
+        # geometric-tail bound on the theta movement still to come: with
+        # per-sweep decay rho = r/r_prev, the remaining total is about
+        # r * rho / (1 - rho).  The measured rho is floored at a
+        # pessimistic 0.8 (fold-in decay slows as it converges, so the
+        # instantaneous ratio understates the tail) and capped below 1 so
+        # plateauing documents stay active until the iteration cap.
+        rho = jnp.clip(r_doc / jnp.maximum(r_prev, 1e-30), 0.8, 0.95)
+        tail = r_doc * rho / (1.0 - rho)
+        return tail > residual_tol * tok_d
+
+    def cond(carry):
+        _, _, r_doc, r_prev, t = carry
+        return jnp.logical_and(t < iters,
+                               jnp.any(active_docs(r_doc, r_prev)))
+
+    def body(carry):
+        mu_t, theta, r_doc, r_prev, t = carry
+        act_tok = active_docs(r_doc, r_prev)[layout.doc_ids]    # [T]
+        if use_pallas:
+            # full-vocab "power" rows; frozen tokens hit the guard row, so
+            # the freeze happens in-kernel.  counts == 0 makes the kernel's
+            # packed delta/residual outputs exactly zero (ignored) and the
+            # update pure:  u = (theta - c*mu + alpha) * phi_norm.  With
+            # beta = 0 the packed phi passes through untouched (ph =
+            # phi_norm bit-exactly); the zero pt argument and unit wbeta
+            # make the denominator exactly 1 while keeping the ops-layer
+            # lane padding away from 0/0.
+            p_tok = jnp.where(act_tok, layout.word_ids,
+                              cfg.vocab_size).astype(jnp.int32)
+            th_arg = theta[layout.doc_ids] - c * mu_t
+            mu_new, _, _ = power_sweep(
+                p_tok, zero_c, mu_t, th_arg, jnp.zeros_like(mu_t),
+                phi_norm_wk, alpha=cfg.alpha, beta=0.0, wbeta=1.0)
+        else:
+            th = theta[layout.doc_ids] - c * mu_t + cfg.alpha
+            unnorm = th * phi_tok
+            norm = model_reducer.psum(
+                jnp.sum(unnorm, -1, keepdims=True), "model_norm_loop",
+                compress=False)
+            mu_new = unnorm / jnp.maximum(norm, 1e-30)
+            mu_new = jnp.where(act_tok[:, None], mu_new, mu_t)
+        delta = mu_new - mu_t
+        theta = theta + (c * delta).reshape(D, L, Kl).sum(axis=1)
+        r_local = (c * jnp.abs(delta)).reshape(D, L, Kl).sum(axis=(1, 2))
+        r_new = model_reducer.psum(r_local, "model_rw_loop", compress=False)
+        return mu_new, theta, r_new, r_doc, t + 1
+
+    # r_doc starts at inf (everything active), r_prev at 1 so the first
+    # rho is a clean clipped value rather than inf/inf
+    carry0 = (mu_t, theta0, jnp.full((D,), jnp.inf, jnp.float32),
+              jnp.ones((D,), jnp.float32), jnp.asarray(0, jnp.int32))
+    _, theta, r_doc, _, t = jax.lax.while_loop(cond, body, carry0)
+
+    th = theta + cfg.alpha
+    denom = model_reducer.psum(jnp.sum(th, -1, keepdims=True), "theta_norm",
+                               compress=False)
+    return FoldInResult(theta=th / denom, iters=t,
+                        mean_r=jnp.sum(r_doc) / total, r_doc=r_doc)
+
+
+def make_fold_in_step(cfg: LDAConfig, fold_iters: int = 30,
+                      residual_tol: float = 0.0, topic_shards: int = 1,
+                      sync_dtype=jnp.float32, donate: bool = True,
+                      impl: Optional[str] = None
+                      ) -> Tuple[object, CommMeter]:
+    """The production serving step: one jitted fixed-phi fold-in batch.
+
+    Returns (step, meter) with ``step(phi_norm, key, word_ids, counts) ->
+    (theta [D, K], iters, mean_r)``.  `phi_norm` is an argument (not a
+    closure constant) so the engine keeps ONE device-resident copy across
+    every bucket shape; with ``topic_shards > 1`` it is [N, W, K/N] stacked
+    and the body runs under ``jax.vmap(axis_name="model")`` with psum'd
+    renormalization — bit-identical collectives to a real model-axis mesh,
+    byte-metered per request batch.  The batch buffers (key, word_ids,
+    counts) are donated: per-request device allocations are recycled
+    step-over-step.  Compiles once per distinct (D, L); feed it bucketed
+    shapes (`data/batching.bucket_len`) to bound the compile count.
+    """
+    meter = CommMeter()
+    if topic_shards == 1:
+        reducer: Reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+    else:
+        reducer = MeshReducer("model", meter=meter, sync_dtype=sync_dtype)
+
+    def body(phi_norm, key, word_ids, counts):
+        res = fold_in_tokens(key, MiniBatch(word_ids, counts), phi_norm, cfg,
+                             iters=fold_iters, residual_tol=residual_tol,
+                             model_reducer=reducer, impl=impl)
+        return res.theta, res.iters, res.mean_r
+
+    def step(phi_norm, key, word_ids, counts):
+        if topic_shards == 1:
+            theta, it, mean_r = body(phi_norm, key, word_ids, counts)
+        else:
+            theta, it, mean_r = jax.vmap(
+                body, in_axes=(0, None, None, None), axis_name="model")(
+                    phi_norm, key, word_ids, counts)
+            # [N, D, K/N] local shards -> [D, K] global mixture; the scalar
+            # diagnostics are shard-identical by construction
+            theta = jnp.transpose(theta, (1, 0, 2)).reshape(
+                theta.shape[1], -1)
+            it, mean_r = it[0], mean_r[0]
+        return theta, it, mean_r
+
+    donate_argnums = (1, 2, 3) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums), meter
+
+
+def split_topic_shards(phi_norm_wk: jnp.ndarray, topic_shards: int
+                       ) -> jnp.ndarray:
+    """[W, K] -> [N, W, K/N] contiguous topic shards (the layout
+    `make_fold_in_step`'s vmap simulation consumes)."""
+    if topic_shards == 1:
+        return phi_norm_wk
+    W, K = phi_norm_wk.shape
+    if K % topic_shards:
+        raise ValueError(f"num_topics={K} does not divide over "
+                         f"{topic_shards} topic shards")
+    return jnp.transpose(
+        phi_norm_wk.reshape(W, topic_shards, K // topic_shards), (1, 0, 2))
+
+
+def fold_in_dense_reference(key: jax.Array, batch: MiniBatch,
+                            phi_norm_wk: jnp.ndarray, cfg: LDAConfig,
+                            iters: int = 30) -> jnp.ndarray:
+    """SEED-LAYOUT ORACLE: the dense [D, L, K] fold-in scan.
+
+    Kept only as the semantics oracle for tests/test_serve.py and the
+    BENCH_serve dense baseline — every production path (serve, eval, the
+    driver's held-out hook) routes through `fold_in_tokens`.  Fixed-count
+    scan, no early exit, whole-tensor rewrite per iteration.
+    """
+    D, L = batch.word_ids.shape
+    K = phi_norm_wk.shape[1]
+    Lpad = L if cfg.init_pad_len is None else max(cfg.init_pad_len, L)
+    u = jax.random.uniform(key, (D, Lpad, K), minval=0.01, maxval=1.0)[:, :L]
+    mu = u / jnp.sum(u, -1, keepdims=True)
+    phi_tok = jnp.take(phi_norm_wk, batch.word_ids, axis=0)      # [D, L, K]
+    c = batch.counts[..., None]
+
+    def body(mu, _):
+        theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
+        th = theta[:, None, :] - c * mu + cfg.alpha
+        unnorm = th * phi_tok
+        mu = unnorm / jnp.maximum(jnp.sum(unnorm, -1, keepdims=True), 1e-30)
+        return mu, None
+
+    mu, _ = jax.lax.scan(body, mu, None, length=iters)
+    theta = jnp.einsum("dl,dlk->dk", batch.counts, mu) + cfg.alpha
+    return theta / jnp.sum(theta, -1, keepdims=True)

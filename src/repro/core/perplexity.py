@@ -3,6 +3,10 @@
 Protocol: per document, tokens are split 80/20.  With phi fixed, theta is
 estimated on the 80% split by BP fold-in from a fixed random init; perplexity
 is evaluated on the held-out 20% split.  Lower is better.
+
+Fold-in routes through the shared token-major inference body
+(`core.infer.fold_in_tokens`) — eval, the training driver's held-out hook
+and the serving engine all compile the exact same program (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -10,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import infer
 from repro.core.types import LDAConfig, MiniBatch
 
 
@@ -20,25 +25,16 @@ def normalize_phi(phi_acc_wk: jnp.ndarray, beta: float) -> jnp.ndarray:
 
 
 def fold_in_theta(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
-                  cfg: LDAConfig, iters: int = 30) -> jnp.ndarray:
-    """Estimate theta[D, K] on the training split with phi fixed (BP fold-in)."""
-    D, L = batch.word_ids.shape
-    K = phi_norm_wk.shape[1]
-    u = jax.random.uniform(key, (D, L, K), minval=0.01, maxval=1.0)
-    mu = u / jnp.sum(u, -1, keepdims=True)
-    phi_tok = jnp.take(phi_norm_wk, batch.word_ids, axis=0)      # [D, L, K]
-    c = batch.counts[..., None]
+                  cfg: LDAConfig, iters: int = 30,
+                  residual_tol: float = 0.0) -> jnp.ndarray:
+    """Estimate theta[D, K] on the training split with phi fixed (BP fold-in).
 
-    def body(mu, _):
-        theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
-        th = theta[:, None, :] - c * mu + cfg.alpha
-        unnorm = th * phi_tok
-        mu = unnorm / jnp.maximum(jnp.sum(unnorm, -1, keepdims=True), 1e-30)
-        return mu, None
-
-    mu, _ = jax.lax.scan(body, mu, None, length=iters)
-    theta = jnp.einsum("dl,dlk->dk", batch.counts, mu) + cfg.alpha
-    return theta / jnp.sum(theta, -1, keepdims=True)
+    Thin wrapper over `core.infer.fold_in_tokens` (the one fold-in body);
+    ``residual_tol > 0`` enables the serving engine's per-document early
+    exit, 0 keeps the paper's fixed-sweep eval protocol.
+    """
+    return infer.fold_in_tokens(key, batch, phi_norm_wk, cfg, iters=iters,
+                                residual_tol=residual_tol).theta
 
 
 def predictive_perplexity(theta: jnp.ndarray, phi_norm_wk: jnp.ndarray,

@@ -188,9 +188,14 @@ class SimReducer(Reducer):
 
 class LocalReducer(Reducer):
     """N=1 degenerate reducer (OBP on a single processor) — no communication,
-    so nothing is recorded in the meter."""
+    so nothing is recorded in the meter.  The sync_dtype cast round-trip is
+    still applied under `compress`, so an N=1 run is numerically identical
+    to an N-shard run with the same sync_dtype (the payload precision is a
+    property of the algorithm configuration, not of the shard count)."""
 
     def psum(self, x, phase: str, compress: bool = True):
+        if compress and x.dtype != self.sync_dtype:
+            return x.astype(self.sync_dtype).astype(x.dtype)
         return x
 
     def _sum(self, x):

@@ -111,6 +111,48 @@ def restore_latest(directory: str, template: Dict[str, Any],
     return restore(directory, step, template, shardings)
 
 
+def restore_phi(directory: str, step: Optional[int] = None,
+                leaf: str = "phi_acc", sharding: Optional[Any] = None
+                ) -> Tuple[Any, Dict[str, Any], int]:
+    """Serving entry point: load ONE leaf of a driver checkpoint.
+
+    A serving process needs the trained ``phi_acc`` and nothing else — not
+    the RNG, not the mini-batch cursor, not optimizer state — and it knows
+    no template shapes up front.  This reads the manifest, locates the
+    single leaf whose key path ends in `leaf`, and materializes just its
+    bytes; shape and dtype come from the manifest.  `sharding` (e.g. a
+    ``NamedSharding`` built from ``dist.sharding.phi_serving_spec``) routes
+    the array through ``jax.device_put`` for a topic-sharded serving mesh.
+    Returns (array, extra, step); raises ``FileNotFoundError`` when the
+    directory holds no complete checkpoint and ``ValueError`` when `leaf`
+    is missing or ambiguous.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {directory!r} — train one "
+                f"first (launch.lda_train --ckpt-dir)")
+    path = _step_dir(directory, step)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    hits = [(i, rec) for i, rec in enumerate(manifest["leaves"])
+            if rec["key"].endswith(f"['{leaf}']")]
+    if len(hits) != 1:
+        raise ValueError(
+            f"checkpoint at {path} has {len(hits)} leaves matching "
+            f"{leaf!r}: {[r['key'] for _, r in hits]}")
+    i, rec = hits[0]
+    data = np.load(os.path.join(path, "data.npz"))
+    arr = np.frombuffer(data[f"leaf_{i}"].tobytes(),
+                        np.dtype(rec["dtype"])).reshape(tuple(rec["shape"]))
+    if sharding is not None:
+        arr = jax.device_put(arr, sharding)
+    else:
+        arr = jax.numpy.asarray(arr)
+    return arr, manifest.get("extra", {}), int(manifest["step"])
+
+
 def restore(directory: str, step: int, template: Dict[str, Any],
             shardings: Optional[Dict[str, Any]] = None
             ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:

@@ -130,6 +130,15 @@ def cache_pspecs(cache, mesh, cfg=None) -> Any:
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def phi_serving_spec(mesh, phi) -> P:
+    """Serving-time spec for a [W, K] topic-word matrix: topics shard over
+    the ``model`` axis when the mesh has one and K divides it, words stay
+    replicated (every shard folds in the full vocabulary of its documents —
+    the same split the training inner loop uses, DESIGN.md §2/§11)."""
+    spec = P(None, "model" if "model" in mesh.axis_names else None)
+    return validate_specs(spec, phi, mesh)
+
+
 def _axis_size(mesh, entry) -> int:
     axes = (entry,) if isinstance(entry, str) else tuple(entry)
     return int(np.prod([mesh.shape[a] for a in axes]))

@@ -18,7 +18,10 @@ consumes the stream with:
     resumed one), so rerunning the same command continues from the
     latest checkpoint with a matching mean_r trajectory.  Resuming
     validates the checkpoint's seed/sync/backend against the flags.
-  - **periodic held-out perplexity** every ``--eval-every`` batches.
+  - **periodic held-out perplexity** every ``--eval-every`` batches,
+    through ``perplexity.evaluate`` — i.e. the shared token-major
+    fold-in body in `repro.core.infer`, the same program the serving
+    engine runs (DESIGN.md §11).
   - execution either as the vmap N-shard simulation (``--backend sim``,
     CPU tests/benchmarks) or under ``shard_map`` on the production mesh
     (``--backend shard_map`` — the dryrun cell's per-shard body, shared

@@ -1,13 +1,20 @@
 """Serving drivers.
 
-LDA mode (the paper's kind): load a trained phi, fold-in batched incoming
-documents (theta estimation with phi fixed) and return topic mixtures —
-the standard production use of a topic model.
+LDA mode (the paper's kind, DESIGN.md §11): load a trained phi from a
+streaming-driver checkpoint and serve topic mixtures for an incoming
+document stream through `repro.serve.FoldInEngine` — shape-bucketed
+admission, AOT-warmed jitted fold-in (the SAME inference body eval and
+training use), asynchronous dispatch, p50/p99 latency + docs/s report.
+
+  # 1. train + checkpoint
+  PYTHONPATH=src python -m repro.launch.lda_train --ckpt-dir /tmp/lda_ck
+  # 2. serve from the checkpoint
+  PYTHONPATH=src python -m repro.launch.serve --mode lda \
+      --ckpt-dir /tmp/lda_ck --requests 256
 
 LM mode: batched prefill + greedy decode with KV caches (exercises the same
 decode_step the decode_32k/long_500k dry-run cells lower).
 
-  PYTHONPATH=src python -m repro.launch.serve --mode lda
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch smollm-360m \
       --reduced --gen 16
 """
@@ -22,34 +29,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import LDAConfig, perplexity, run_stream
-from repro.data import docs_to_padded, lda_corpus, minibatch_stream
 from repro.models import registry
 
 
 def serve_lda(args):
-    cfg = LDAConfig(vocab_size=500, num_topics=20, lambda_w=0.2,
-                    lambda_k_abs=8, inner_iters=10, residual_tol=0.02)
-    docs, stats, _ = lda_corpus(0, 400, cfg.vocab_size, cfg.num_topics)
-    print(f"[train] {stats}")
-    phi, hist, _ = run_stream(minibatch_stream(docs, 100), cfg, num_shards=1)
-    phi_norm = perplexity.normalize_phi(phi, cfg.beta)
+    from repro.serve import FoldInEngine
 
-    # batched serving: fold-in incoming requests with phi fixed
-    reqs, _, _ = lda_corpus(7, args.requests, cfg.vocab_size, cfg.num_topics)
-    fold = jax.jit(lambda b_ids, b_cnt: perplexity.fold_in_theta(
-        jax.random.PRNGKey(1),
-        type(docs_to_padded(reqs[:1]))(b_ids, b_cnt), phi_norm, cfg, 20))
-    t0 = time.time()
-    done = 0
-    for i in range(0, len(reqs), args.batch):
-        b = docs_to_padded(reqs[i:i + args.batch], max_len=64)
-        theta = fold(b.word_ids, b.counts)
-        done += theta.shape[0]
-    dt = time.time() - t0
-    print(f"[serve] {done} docs in {dt:.2f}s "
-          f"({done / max(dt, 1e-9):.0f} docs/s); "
-          f"theta shape per batch: {theta.shape}")
+    engine = FoldInEngine.from_checkpoint(
+        args.ckpt_dir,
+        len_buckets=tuple(int(b) for b in args.len_buckets.split(",")),
+        batch_docs=args.batch, fold_iters=args.fold_iters,
+        residual_tol=args.tol, topic_shards=args.topic_shards,
+        seed=args.seed)
+    cfg = engine.cfg
+    print(f"[load] phi[{cfg.vocab_size}, {cfg.num_topics}] from "
+          f"{args.ckpt_dir}  (warmup {engine.warmup_s:.2f}s, "
+          f"buckets {engine.len_buckets})")
+
+    # synthetic request stream with variable document lengths — stands in
+    # for the production ingress; every submit is non-blocking
+    from repro.data.synthetic import lda_corpus
+
+    means = [int(x) for x in args.doc_len_means.split(",")]
+    reqs = []
+    for i, mean in enumerate(means):
+        d, _, _ = lda_corpus(args.seed + 100 + i,
+                             -(-args.requests // len(means)),
+                             cfg.vocab_size, cfg.num_topics,
+                             doc_len_mean=mean)
+        reqs.extend(d)
+    reqs = reqs[:args.requests]
+
+    for doc in reqs:
+        engine.submit(doc)
+    results = engine.drain()
+    s = engine.stats()
+    print(f"[serve] {s['served']} docs in {s['dispatches']} batches: "
+          f"{s['docs_per_s']:,.0f} docs/s  "
+          f"p50={s['latency_p50_s'] * 1e3:.1f}ms  "
+          f"p99={s['latency_p99_s'] * 1e3:.1f}ms  "
+          f"mean fold iters={s['mean_fold_iters']:.1f}  "
+          f"compiles={s['compiles']} (<= {len(s['len_buckets'])} buckets)")
+    if s["bytes_by_phase"]:
+        print(f"[comm] per-request bytes={s['per_request_bytes']:,.0f} "
+              f"(phases: {s['bytes_by_phase']})")
+    top = np.asarray(results[0].theta).argsort()[-3:][::-1]
+    print(f"[sample] req 0: top topics {top.tolist()} "
+          f"(theta {np.asarray(results[0].theta)[top].round(3).tolist()})")
+    return results, s
 
 
 def serve_lm(args):
@@ -75,9 +102,8 @@ def serve_lm(args):
         if i + 1 < S:
             tok = prompt[:, i + 1:i + 2]
         else:
-            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)[..., 0][:, None] \
-                if logits.ndim == 3 else jnp.argmax(logits, -1)
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            last = logits[:, -1] if logits.ndim == 3 else logits
+            tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
             out_toks.append(np.asarray(tok[:, 0]))
     dt = time.time() - t0
     print(f"[serve-lm] {B} streams x {args.gen} new tokens in {dt:.2f}s "
@@ -85,17 +111,37 @@ def serve_lm(args):
           f"sample: {[int(t[0]) for t in out_toks[:8]]}")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="lda", choices=["lda", "lm"])
+    # lda serving
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="streaming-driver checkpoint to serve from "
+                         "(required for --mode lda)")
+    ap.add_argument("--len-buckets", default="16,32,64",
+                    help="admission L buckets (multiples of 8)")
+    ap.add_argument("--fold-iters", type=int, default=30)
+    ap.add_argument("--tol", type=float, default=1e-2,
+                    help="per-document early-exit residual tolerance")
+    ap.add_argument("--topic-shards", type=int, default=1)
+    ap.add_argument("--doc-len-means", default="12,24,40")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    # shared / lm
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="lda: docs per fold-in batch (default 32); "
+                         "lm: decode streams (default 8)")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=8)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    if args.batch is None:
+        args.batch = 32 if args.mode == "lda" else 8
     if args.mode == "lda":
+        if not args.ckpt_dir:
+            ap.error("--mode lda needs --ckpt-dir (train one with "
+                     "`python -m repro.launch.lda_train --ckpt-dir ...`)")
         serve_lda(args)
     else:
         serve_lm(args)

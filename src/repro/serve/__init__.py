@@ -1,0 +1,9 @@
+"""Production serving layer for trained LDA models (DESIGN.md §11).
+
+`engine.FoldInEngine` wraps the shared fixed-phi inference body
+(`core.infer.fold_in_tokens`) in a request queue with shape-bucketed
+admission, AOT-warmed jitted fold-in steps, asynchronous dispatch and
+per-request latency / communication-byte accounting.
+"""
+
+from repro.serve.engine import FoldInEngine, ServeResult  # noqa: F401

@@ -1,0 +1,257 @@
+"""Fold-in serving engine: the paper's train-once / fold-in-forever
+deployment (Eq. 20 protocol) as a production request loop (DESIGN.md §11).
+
+Architecture — every piece reuses the training stack, none forks it:
+
+  - **one inference body**: the jitted step is
+    `core.infer.make_fold_in_step` — the exact program `perplexity.evaluate`
+    and the streaming driver's held-out hook compile;
+  - **shape-bucketed admission**: requests queue per length bucket
+    (`data/batching.bucket_len` on the same ladder the training driver
+    uses); a bucket dispatches when `batch_docs` requests accumulate (or on
+    `flush`, padded with empty documents so D never varies).  The step
+    therefore compiles at most ``len(len_buckets)`` times, all of them at
+    construction (AOT warmup) — a serving process never stalls a request
+    on a compile;
+  - **asynchronous dispatch**: `submit` never blocks on device work;
+    dispatched batches park as device futures (theta + diagnostics stay
+    device-resident) and are materialized in `drain`, where per-request
+    latency is measured at the moment the batch's result is actually ready;
+  - **accounting**: the `CommMeter` threaded through the fold-in reducers
+    bills the per-iteration renormalization/residual psums of a
+    topic-sharded phi, so `stats()` reports bytes-per-request next to
+    p50/p99 latency and docs/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import infer, perplexity
+from repro.core.types import LDAConfig
+from repro.data.batching import bucket_len, docs_to_padded
+
+_EMPTY_DOC = (np.zeros(1, np.int32), np.zeros(1, np.float32))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One served request: the topic mixture plus serving diagnostics."""
+
+    req_id: int
+    theta: np.ndarray              # [K] normalized topic mixture
+    latency_s: float               # submit -> batch result ready
+    bucket: int                    # L bucket that admitted the request
+    iters: int                     # fold-in sweeps the batch ran
+    mean_r: float                  # batch residual at exit
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    bucket: int
+    reqs: List[Tuple[int, float]]           # (req_id, t_submit) real docs only
+    theta: jnp.ndarray                      # device future [D, K]
+    iters: jnp.ndarray                      # device scalar
+    mean_r: jnp.ndarray                     # device scalar
+
+
+class FoldInEngine:
+    """Serve topic mixtures for incoming documents with phi fixed.
+
+    `phi_acc` is the trained sufficient statistic ([W, K], as checkpointed
+    by the streaming driver); pass ``normalized=True`` when handing an
+    already-normalized topic-word matrix.  ``topic_shards > 1`` serves a
+    topic-sharded phi ([N, W, K/N] internally) with psum'd renormalization
+    under the vmap simulation — bit-identical collectives to a model-axis
+    mesh, metered per batch.
+    """
+
+    def __init__(self, phi_acc, cfg: LDAConfig, *,
+                 len_buckets: Sequence[int] = (16, 32, 64, 128),
+                 batch_docs: int = 32, fold_iters: int = 30,
+                 residual_tol: float = 1e-2, topic_shards: int = 1,
+                 sync_dtype=None, normalized: bool = False,
+                 impl: Optional[str] = None, seed: int = 0,
+                 warmup: bool = True):
+        self.len_buckets = tuple(sorted(int(b) for b in len_buckets))
+        if any(b % 8 for b in self.len_buckets):
+            raise ValueError(f"len_buckets must be multiples of 8 "
+                             f"(docs_to_padded pads L to 8): "
+                             f"{self.len_buckets}")
+        # the driver's L-invariant init contract carries over to serving:
+        # the random field is drawn at the largest bucket and sliced, so a
+        # document's theta does not depend on which bucket admitted it
+        self.cfg = cfg = dataclasses.replace(
+            cfg, init_pad_len=max(self.len_buckets[-1],
+                                  cfg.init_pad_len or 0))
+        if sync_dtype is None:
+            sync_dtype = (jnp.bfloat16 if cfg.sync_dtype == "bfloat16"
+                          else jnp.float32)
+        self.batch_docs = int(batch_docs)
+        self.fold_iters = int(fold_iters)
+        self.residual_tol = float(residual_tol)
+        phi_norm = (jnp.asarray(phi_acc) if normalized
+                    else perplexity.normalize_phi(jnp.asarray(phi_acc),
+                                                  cfg.beta))
+        self._phi = infer.split_topic_shards(phi_norm, topic_shards)
+        self._step, self.meter = infer.make_fold_in_step(
+            cfg, fold_iters=self.fold_iters, residual_tol=self.residual_tol,
+            topic_shards=topic_shards, sync_dtype=sync_dtype, impl=impl)
+        self._key = jax.random.PRNGKey(seed)
+        self._queues: Dict[int, List[Tuple[int, tuple, float]]] = {
+            b: [] for b in self.len_buckets}
+        self._pending: List[_Dispatch] = []
+        self._next_id = 0
+        self._dispatches = 0
+        self._iters_sum = 0
+        self._latencies: List[float] = []
+        self._served = 0
+        self._t_first: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+        self.warmup_s = 0.0
+        if warmup:
+            self._warmup()
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, cfg: Optional[LDAConfig] = None,
+                        step: Optional[int] = None, sharding=None,
+                        **kw) -> "FoldInEngine":
+        """Checkpoint-to-serve: load phi (and, when `cfg` is omitted, the
+        model geometry from the driver's saved run signature) and build an
+        engine — no training carry ever touches the serving process."""
+        from repro.dist import checkpoint as ckpt
+
+        phi_acc, extra, _ = ckpt.restore_phi(ckpt_dir, step=step,
+                                             sharding=sharding)
+        if cfg is None:
+            run = extra.get("run", {})
+            if "vocab" not in run or "topics" not in run:
+                raise ValueError(
+                    f"checkpoint extra carries no run signature "
+                    f"({sorted(run)}); pass cfg= explicitly")
+            # carry every saved knob the fold-in body reads: impl routes
+            # the jnp vs Pallas path, sync_dtype the reducer payload width
+            cfg = LDAConfig(vocab_size=int(run["vocab"]),
+                            num_topics=int(run["topics"]),
+                            impl=str(run.get("impl", "jnp")),
+                            sync_dtype=str(run.get("sync_dtype",
+                                                   "float32")))
+        return cls(phi_acc, cfg, **kw)
+
+    # ---------------------------------------------------------- admission
+
+    def submit(self, doc: Tuple[np.ndarray, np.ndarray],
+               req_id: Optional[int] = None) -> int:
+        """Enqueue one document (word_ids, counts); never blocks on device
+        work.  Returns the request id its `ServeResult` will carry."""
+        if req_id is None:
+            req_id = self._next_id
+        self._next_id = max(self._next_id, req_id) + 1
+        now = time.time()
+        if self._t_first is None:
+            self._t_first = now
+        b = bucket_len(len(doc[0]), self.len_buckets)
+        q = self._queues[b]
+        q.append((req_id, doc, now))
+        if len(q) >= self.batch_docs:
+            self._dispatch(b)
+        return req_id
+
+    def flush(self) -> None:
+        """Dispatch every partially-filled bucket (padded with empty docs,
+        so D — and therefore the compiled shapes — never varies)."""
+        for b in self.len_buckets:
+            while self._queues[b]:
+                self._dispatch(b)
+
+    def _dispatch(self, bucket: int) -> None:
+        q = self._queues[bucket]
+        take, self._queues[bucket] = q[:self.batch_docs], q[self.batch_docs:]
+        docs = [doc for _, doc, _ in take]
+        docs += [_EMPTY_DOC] * (self.batch_docs - len(docs))
+        mb = docs_to_padded(docs, max_len=bucket)
+        self._key, sub = jax.random.split(self._key)
+        theta, iters, mean_r = self._step(self._phi, sub,
+                                          mb.word_ids, mb.counts)
+        self._pending.append(_Dispatch(
+            bucket=bucket, reqs=[(rid, t) for rid, _, t in take],
+            theta=theta, iters=iters, mean_r=mean_r))
+        self._dispatches += 1
+
+    def _warmup(self) -> None:
+        """AOT-compile the step for every bucket shape before any request
+        arrives (the driver's --warmup-buckets contract carries over)."""
+        t0 = time.time()
+        key = jax.random.PRNGKey(0)
+        out = None
+        for b in self.len_buckets:
+            out = self._step(self._phi, key,
+                             jnp.zeros((self.batch_docs, b), jnp.int32),
+                             jnp.zeros((self.batch_docs, b), jnp.float32))
+            key = jax.random.PRNGKey(0)
+        if out is not None:
+            jax.block_until_ready(out[0])
+        self.warmup_s = time.time() - t0
+
+    # ------------------------------------------------------------ harvest
+
+    def drain(self) -> List[ServeResult]:
+        """Flush partial buckets, then materialize every pending batch in
+        dispatch order.  Per-request latency is measured when the batch's
+        theta is actually ready — the first host sync any request pays."""
+        self.flush()
+        results: List[ServeResult] = []
+        for d in self._pending:
+            theta = np.asarray(jax.block_until_ready(d.theta))
+            t_done = time.time()
+            iters, mean_r = int(d.iters), float(d.mean_r)
+            self._iters_sum += iters
+            for row, (rid, t_sub) in enumerate(d.reqs):
+                lat = t_done - t_sub
+                self._latencies.append(lat)
+                results.append(ServeResult(
+                    req_id=rid, theta=theta[row], latency_s=lat,
+                    bucket=d.bucket, iters=iters, mean_r=mean_r))
+            self._t_last_done = t_done
+        self._served += len(results)
+        self._pending.clear()
+        return results
+
+    # -------------------------------------------------------------- stats
+
+    def _compiles(self) -> int:
+        try:
+            return int(self._step._cache_size())
+        except AttributeError:
+            return -1
+
+    def stats(self) -> Dict[str, object]:
+        """Serving scorecard: docs/s, latency percentiles, compile bound,
+        and the per-request communication bytes of a sharded phi."""
+        lats = np.asarray(self._latencies, np.float64)
+        span = ((self._t_last_done - self._t_first)
+                if self._latencies and self._t_first is not None else 0.0)
+        mean_iters = (self._iters_sum / self._dispatches
+                      if self._dispatches else 0.0)
+        per_batch_bytes = self.meter.per_minibatch_bytes(max(mean_iters, 1))
+        return {
+            "served": self._served,
+            "dispatches": self._dispatches,
+            "docs_per_s": self._served / span if span > 0 else float("nan"),
+            "latency_p50_s": float(np.percentile(lats, 50)) if lats.size else
+            float("nan"),
+            "latency_p99_s": float(np.percentile(lats, 99)) if lats.size else
+            float("nan"),
+            "mean_fold_iters": mean_iters,
+            "compiles": self._compiles(),
+            "len_buckets": list(self.len_buckets),
+            "warmup_s": self.warmup_s,
+            "bytes_by_phase": dict(self.meter.bytes_by_phase),
+            "per_request_bytes": per_batch_bytes / max(self.batch_docs, 1),
+        }

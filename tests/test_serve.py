@@ -1,0 +1,311 @@
+"""Fold-in serving engine (ISSUE 3): the token-major inference core vs the
+dense oracle, the early-exit theta guarantee, a pure-numpy perplexity
+oracle, engine admission/latency/accounting, the checkpoint-to-serve path,
+and the LocalReducer sync_dtype cast satellite."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import infer, perplexity
+from repro.core.types import LDAConfig, MiniBatch
+from repro.data import docs_to_padded, lda_corpus, train_test_split_counts
+
+W, K = 150, 16
+CFG = LDAConfig(vocab_size=W, num_topics=K)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A converged-ish phi (the true topics as sufficient statistics) plus
+    held-in/held-out documents drawn from it."""
+    docs, _, true_phi = lda_corpus(0, 48, W, K, doc_len_mean=40)
+    phi_acc = jnp.asarray(true_phi.T) * 200.0          # [W, K] statistic
+    phi_norm = perplexity.normalize_phi(phi_acc, CFG.beta)
+    return docs, phi_acc, phi_norm
+
+
+# ------------------------------------------------ fold-in core vs oracle
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_token_major_fold_in_matches_dense_reference(trained, impl):
+    """fold_in_tokens (tol=0: fixed sweeps) must match the seed's dense
+    [D, L, K] scan on random corpora — same key, same init, same theta."""
+    docs, _, phi_norm = trained
+    for seed in (1, 2):
+        d, _, _ = lda_corpus(seed, 24, W, K, doc_len_mean=30)
+        b = docs_to_padded(d)
+        key = jax.random.PRNGKey(seed)
+        ref = infer.fold_in_dense_reference(key, b, phi_norm, CFG, iters=12)
+        res = infer.fold_in_tokens(key, b, phi_norm, CFG, iters=12,
+                                   residual_tol=0.0, impl=impl)
+        assert int(res.iters) == 12
+        np.testing.assert_allclose(np.asarray(res.theta), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_perplexity_fold_in_theta_routes_through_infer(trained):
+    """The eval wrapper is the same program as the inference core."""
+    docs, _, phi_norm = trained
+    b = docs_to_padded(docs[:16])
+    key = jax.random.PRNGKey(9)
+    via_wrapper = perplexity.fold_in_theta(key, b, phi_norm, CFG, iters=10)
+    direct = infer.fold_in_tokens(key, b, phi_norm, CFG, iters=10).theta
+    np.testing.assert_array_equal(np.asarray(via_wrapper),
+                                  np.asarray(direct))
+
+
+def test_early_exit_never_changes_theta_beyond_tol(trained):
+    """A document freezes once its per-token residual drops below
+    residual_tol; the theta it serves may differ from the run-to-the-end
+    theta by at most residual_tol (per-document L1)."""
+    docs, _, phi_norm = trained
+    b = docs_to_padded(docs[:32])
+    key = jax.random.PRNGKey(4)
+    tol = 0.02
+    full = infer.fold_in_tokens(key, b, phi_norm, CFG, iters=40,
+                                residual_tol=0.0)
+    early = infer.fold_in_tokens(key, b, phi_norm, CFG, iters=40,
+                                 residual_tol=tol)
+    assert int(early.iters) < int(full.iters)
+    per_doc_l1 = np.abs(np.asarray(early.theta)
+                        - np.asarray(full.theta)).sum(axis=1)
+    assert per_doc_l1.max() <= tol, per_doc_l1.max()
+
+
+def test_predictive_perplexity_matches_numpy_oracle(trained):
+    docs, _, phi_norm = trained
+    train, test = train_test_split_counts(docs, 0)
+    tr_b, te_b = docs_to_padded(train), docs_to_padded(test)
+    key = jax.random.PRNGKey(5)
+    theta = perplexity.fold_in_theta(key, tr_b, phi_norm, CFG, iters=20)
+    got = float(perplexity.predictive_perplexity(theta, phi_norm, te_b))
+
+    th, ph = np.asarray(theta), np.asarray(phi_norm)
+    wid, cnt = np.asarray(te_b.word_ids), np.asarray(te_b.counts)
+    logp_sum, n = 0.0, 0.0
+    for d in range(wid.shape[0]):
+        for l in range(wid.shape[1]):
+            c = cnt[d, l]
+            if c > 0:
+                p = float(th[d] @ ph[wid[d, l]])
+                logp_sum += c * np.log(max(p, 1e-30))
+                n += c
+    expect = float(np.exp(-logp_sum / max(n, 1.0)))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_topic_sharded_fold_in_matches_unsharded(trained):
+    """The model-axis simulation (psum'd renormalization, K-invariant init)
+    reproduces the unsharded mixture and meters the per-iteration psums."""
+    docs, _, phi_norm = trained
+    b = docs_to_padded(docs[:16])
+    key = jax.random.PRNGKey(6)
+    base = infer.fold_in_tokens(key, b, phi_norm, CFG, iters=10).theta
+    step, meter = infer.make_fold_in_step(CFG, fold_iters=10,
+                                          topic_shards=4, donate=False)
+    theta, iters, _ = step(infer.split_topic_shards(phi_norm, 4), key,
+                           b.word_ids, b.counts)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(base),
+                               rtol=1e-4, atol=1e-6)
+    by = meter.bytes_by_phase
+    D, L = b.word_ids.shape
+    # the per-iteration renorm psum is the [T, 1] norm vector
+    assert by["model_norm_loop"] == D * L * 4
+    assert by["model_rw_loop"] == D * 4
+    assert meter.per_minibatch_bytes(int(iters)) == (
+        sum(v for p, v in by.items() if not p.endswith("_loop"))
+        + (int(iters) - 1) * (D * L * 4 + D * 4))
+
+
+# ------------------------------------------------------------ the engine
+
+def _submit_all(engine, docs):
+    for d in docs:
+        engine.submit(d)
+    return engine.drain()
+
+
+def test_engine_results_match_direct_fold_in(trained):
+    """Bucketed admission + async dispatch must not change the math: each
+    batch's theta equals a direct fold_in_tokens call on the same padded
+    batch (the engine is a scheduler, not a second implementation)."""
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, phi_norm = trained
+    short = [(ids[:10], cnt[:10]) for ids, cnt in docs[:8]]
+    eng = FoldInEngine(phi_acc, CFG, len_buckets=(16, 32), batch_docs=4,
+                       fold_iters=15, residual_tol=0.0, seed=11,
+                       warmup=False)
+    results = _submit_all(eng, short)
+    assert len(results) == 8 and sorted(r.req_id for r in results) == \
+        list(range(8))
+
+    key = jax.random.PRNGKey(11)
+    for batch_no in range(2):
+        key, sub = jax.random.split(key)
+        mb = docs_to_padded(short[batch_no * 4:(batch_no + 1) * 4],
+                            max_len=16)
+        # eng.cfg carries the engine's init_pad_len (largest bucket)
+        want = infer.fold_in_tokens(sub, mb, phi_norm, eng.cfg, iters=15,
+                                    residual_tol=0.0).theta
+        got = np.stack([r.theta for r in results[batch_no * 4:
+                                                 (batch_no + 1) * 4]])
+        np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_engine_bucketed_admission_and_partial_flush(trained):
+    """Requests land in ladder buckets; a partial bucket only dispatches on
+    drain (padded with empty docs, D constant) and compiles stay bounded by
+    the bucket count."""
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, _ = trained
+    eng = FoldInEngine(phi_acc, CFG, len_buckets=(16, 32, 64), batch_docs=8,
+                       fold_iters=5, warmup=False)
+    sizes = [5, 20, 50, 9, 30, 3]          # -> buckets 16, 32, 64
+    for n in sizes:
+        for _ in range(3):
+            ids = np.arange(1, n + 1, dtype=np.int32) % W
+            eng.submit((ids, np.ones(n, np.float32)))
+    assert eng._dispatches == 1            # one bucket filled (32: 9 subs)
+    res = eng.drain()
+    assert len(res) == 3 * len(sizes)
+    assert {r.bucket for r in res} == {16, 32, 64}
+    s = eng.stats()
+    assert s["served"] == 18 and s["dispatches"] == 4
+    assert 0 < s["compiles"] <= 3
+    assert np.isfinite(s["latency_p50_s"]) and np.isfinite(s["docs_per_s"])
+    assert s["latency_p99_s"] >= s["latency_p50_s"]
+    # every mixture is a distribution
+    th = np.stack([r.theta for r in res])
+    np.testing.assert_allclose(th.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_engine_theta_invariant_to_bucket_ladder(trained):
+    """The driver's L-invariant init carries over to serving: the same
+    document returns the same theta whichever ladder admitted it (the
+    engine draws the init at the largest bucket and slices)."""
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, _ = trained
+    doc = (docs[0][0][:10], docs[0][1][:10])       # lands in bucket 16 / 64
+    thetas = []
+    for ladder in ((16, 64), (64,)):
+        eng = FoldInEngine(phi_acc, CFG, len_buckets=ladder, batch_docs=1,
+                           fold_iters=10, residual_tol=0.0, seed=5,
+                           warmup=False)
+        eng.submit(doc)
+        (res,) = eng.drain()
+        thetas.append(res.theta)
+    np.testing.assert_allclose(thetas[0], thetas[1], rtol=1e-5, atol=1e-6)
+
+
+def test_engine_sharded_phi_bytes_accounted(trained):
+    """Serving a topic-sharded phi meters the per-iteration model psums and
+    reports per-request bytes."""
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, _ = trained
+    eng = FoldInEngine(phi_acc, CFG, len_buckets=(32,), batch_docs=8,
+                       topic_shards=4, fold_iters=8, residual_tol=0.0,
+                       warmup=False)
+    _submit_all(eng, docs[:8])
+    s = eng.stats()
+    assert s["bytes_by_phase"].get("model_norm_loop", 0) == 8 * 32 * 4
+    assert s["per_request_bytes"] > 0
+
+
+def test_engine_checkpoint_roundtrip(tmp_path, trained):
+    """Checkpoint-to-serve: a driver-style checkpoint (state tree + run
+    signature) serves without any training carry; restore_phi rejects
+    missing/ambiguous leaves."""
+    from repro.dist import checkpoint as ckpt
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, _ = trained
+    state = {"state": {"phi_acc": phi_acc, "m": jnp.asarray(7, jnp.int32),
+                       "rng": jax.random.PRNGKey(0)}}
+    ckpt.save(str(tmp_path), 7, state,
+              extra={"next_m": 7, "run": {"vocab": W, "topics": K}})
+
+    phi, extra, step = ckpt.restore_phi(str(tmp_path))
+    assert step == 7 and extra["run"]["topics"] == K
+    np.testing.assert_array_equal(np.asarray(phi), np.asarray(phi_acc))
+    with pytest.raises(ValueError, match="0 leaves"):
+        ckpt.restore_phi(str(tmp_path), leaf="nope")
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_phi(str(tmp_path / "empty"))
+
+    eng = FoldInEngine.from_checkpoint(str(tmp_path), len_buckets=(32,),
+                                       batch_docs=4, fold_iters=5,
+                                       warmup=False)
+    assert eng.cfg.vocab_size == W and eng.cfg.num_topics == K
+    res = _submit_all(eng, docs[:4])
+    assert len(res) == 4
+
+
+def test_serve_cli_reports_latency(tmp_path, capsys, trained):
+    """The serve CLI end-to-end: checkpoint in, p50/p99 + docs/s out."""
+    from repro.dist import checkpoint as ckpt
+    from repro.launch import serve as serve_mod
+
+    docs, phi_acc, _ = trained
+    ckpt.save(str(tmp_path), 3,
+              {"state": {"phi_acc": phi_acc, "m": jnp.asarray(3, jnp.int32),
+                         "rng": jax.random.PRNGKey(0)}},
+              extra={"next_m": 3, "run": {"vocab": W, "topics": K}})
+    serve_mod.main(["--mode", "lda", "--ckpt-dir", str(tmp_path),
+                    "--requests", "24", "--batch", "8",
+                    "--len-buckets", "16,32"])
+    out = capsys.readouterr().out
+    assert "docs/s" in out and "p99=" in out and "compiles=" in out
+
+
+def test_restore_phi_with_serving_spec(tmp_path, trained):
+    """restore_phi routes through device_put under the dist.sharding
+    serving spec (topics over 'model' when present and divisible)."""
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import checkpoint as ckpt
+    from repro.dist.sharding import phi_serving_spec
+
+    docs, phi_acc, _ = trained
+    ckpt.save(str(tmp_path), 1,
+              {"state": {"phi_acc": phi_acc, "m": jnp.asarray(1, jnp.int32),
+                         "rng": jax.random.PRNGKey(0)}},
+              extra={"next_m": 1})
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    spec = phi_serving_spec(mesh, phi_acc)
+    assert spec == P(None, "model")
+    phi, _, _ = ckpt.restore_phi(str(tmp_path),
+                                 sharding=NamedSharding(mesh, spec))
+    np.testing.assert_array_equal(np.asarray(phi), np.asarray(phi_acc))
+    # a mesh without a model axis replicates
+    mesh1 = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert phi_serving_spec(mesh1, phi_acc) == P(None, None)
+
+
+# ------------------------------------------------- LocalReducer satellite
+
+def test_local_reducer_applies_sync_dtype_cast():
+    """N=1 must take the same numeric path as N-shard runs: the bf16
+    payload cast round-trip applies under compress even though no bytes
+    move (the seed skipped it, forking N=1 numerics)."""
+    from repro.core.sync import LocalReducer, SimReducer
+
+    x = jnp.linspace(0.0, 1.0, 7, dtype=jnp.float32) + 1e-4
+    local = LocalReducer(sync_dtype=jnp.bfloat16)
+    sim = SimReducer(sync_dtype=jnp.bfloat16)
+    got = local.psum(x, "power")
+    want = sim.psum(x[None], "power")[0]      # N=1 stacked all-reduce
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # compress=False and matching dtypes stay exact no-ops
+    np.testing.assert_array_equal(
+        np.asarray(local.psum(x, "p", compress=False)), np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(LocalReducer().psum(x, "p")), np.asarray(x))
