@@ -58,6 +58,29 @@ def main():
           f"mean fold iters={s['mean_fold_iters']:.1f}")
     print(f"[serve] request 0 top topics: {top.tolist()}")
 
+    # ---- vocabulary growth (DESIGN.md §12) -----------------------------
+    # Real streams grow their vocabulary after step 0.  A VocabMap assigns
+    # external token keys to phi rows append-only (deterministic
+    # first-seen order); training grows phi along a geometric capacity
+    # ladder (see `python -m repro.launch.lda_train --dynamic-vocab`), and
+    # serving never crashes on an unseen word — it folds OOV tokens in
+    # through a guard row carrying the beta-prior mass.
+    import numpy as np
+
+    from repro.data import VocabMap, next_capacity
+
+    vocab = VocabMap()
+    rows = vocab.rows(["jax", "pallas", "topic", "jax"])     # admit, dense
+    print(f"[vocab] {len(vocab)} live words at rows {rows.tolist()}, "
+          f"first capacity rung W_cap={next_capacity(len(vocab))}")
+    oov_doc = (np.asarray([0, 1, 399, 1_000_000]),           # last id: OOV
+               np.ones(4, np.float32))
+    engine.submit(oov_doc)
+    (res,) = engine.drain()
+    print(f"[vocab] OOV request served finite theta "
+          f"(sum={res.theta.sum():.3f}, oov tokens={res.oov_tokens:.0f}, "
+          f"engine oov rate={engine.stats()['oov_rate']:.4f})")
+
 
 if __name__ == "__main__":
     main()

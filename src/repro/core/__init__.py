@@ -8,6 +8,7 @@ from repro.core.pobp import (  # noqa: F401
     selective_sweep,
     pobp_minibatch,
     pobp_shard_body,
+    grow_state,
     init_train_state,
     make_train_step,
     make_mesh_shard_fn,

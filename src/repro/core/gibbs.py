@@ -21,17 +21,20 @@ from repro.core.types import LDAConfig, MiniBatch
 
 
 def tokens_from_batch(batch: MiniBatch) -> Tuple[np.ndarray, np.ndarray]:
-    """Expand padded-CSR counts into flat (doc_id, word_id) token arrays."""
-    wid = np.asarray(batch.word_ids)
-    cnt = np.asarray(batch.counts).astype(np.int64)
-    docs, words = [], []
-    for d in range(wid.shape[0]):
-        for l in range(wid.shape[1]):
-            c = int(cnt[d, l])
-            if c > 0:
-                docs.extend([d] * c)
-                words.extend([int(wid[d, l])] * c)
-    return np.asarray(docs, np.int32), np.asarray(words, np.int32)
+    """Expand padded-CSR counts into flat (doc_id, word_id) token arrays.
+
+    Vectorized with ``np.repeat`` over the row-major [D*L] slot grid —
+    order-identical to the per-token double loop it replaces (slots emit
+    in (d, l) order, each repeated count times), which was the setup
+    bottleneck of the accuracy benchmark.
+    """
+    wid = np.asarray(batch.word_ids).reshape(-1).astype(np.int32)
+    cnt = np.asarray(batch.counts).reshape(-1).astype(np.int64)
+    D, L = batch.word_ids.shape
+    doc = np.repeat(np.arange(D, dtype=np.int32), L)
+    keep = cnt > 0
+    return (np.repeat(doc[keep], cnt[keep]),
+            np.repeat(wid[keep], cnt[keep]))
 
 
 def gibbs_init(key: jax.Array, doc_ids, word_ids, D: int, cfg: LDAConfig):

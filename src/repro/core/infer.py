@@ -31,6 +31,15 @@ a production artifact:
 
 `fold_in_dense_reference` keeps the seed's dense [D, L, K] scan as the
 semantics oracle and the BENCH_serve baseline; no production path calls it.
+
+**W-capacity note** (DESIGN.md §12): the body is W-shape-agnostic — phi
+arrives as an argument and tokens only ever gather their own rows — so a
+capacity-laddered phi (guard rows above the live vocabulary) folds in
+unchanged.  The live-W masking lives entirely in how phi_norm is built
+(``perplexity.normalize_phi(..., live_w=...)``): guard rows carry the
+beta-prior mass, which is what makes serving's OOV admission exact.
+``cfg.vocab_size`` here is the number of phi rows the step compiles for
+(the serving capacity), used only as the Pallas guard-row index.
 """
 
 from __future__ import annotations

@@ -18,10 +18,24 @@ from repro.core import infer
 from repro.core.types import LDAConfig, MiniBatch
 
 
-def normalize_phi(phi_acc_wk: jnp.ndarray, beta: float) -> jnp.ndarray:
-    """phi[w, k] = (phi_hat + beta) / sum_w (phi_hat + beta)  — per-topic normalize."""
+def normalize_phi(phi_acc_wk: jnp.ndarray, beta: float,
+                  live_w=None) -> jnp.ndarray:
+    """phi[w, k] = (phi_hat + beta) / sum_w (phi_hat + beta)  — per-topic normalize.
+
+    `live_w` switches to capacity-ladder semantics (DESIGN.md §12): rows in
+    [live_w, W_cap) are guard rows, EXCLUDED from the per-topic denominator
+    (their statistic is structurally zero, and W_cap*beta smoothing mass
+    would otherwise jump every time the rung grows) and assigned the
+    beta-prior value beta/denom — the posterior mass of one unseen word,
+    which is exactly what serving's OOV admission folds in.  With
+    ``live_w == W_cap`` (or None) this reduces to the fixed-W formula.
+    """
     sm = phi_acc_wk + beta
-    return sm / jnp.sum(sm, axis=0, keepdims=True)
+    if live_w is None:
+        return sm / jnp.sum(sm, axis=0, keepdims=True)
+    live = jnp.arange(phi_acc_wk.shape[0])[:, None] < live_w
+    denom = jnp.sum(jnp.where(live, sm, 0.0), axis=0, keepdims=True)
+    return jnp.where(live, sm, beta) / jnp.maximum(denom, 1e-30)
 
 
 def fold_in_theta(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
@@ -48,8 +62,14 @@ def predictive_perplexity(theta: jnp.ndarray, phi_norm_wk: jnp.ndarray,
 
 
 def evaluate(key: jax.Array, phi_acc_wk: jnp.ndarray, train: MiniBatch,
-             test: MiniBatch, cfg: LDAConfig, fold_iters: int = 30) -> float:
-    """End-to-end: normalize phi, fold in theta, score the 20% split."""
-    phi_norm = normalize_phi(phi_acc_wk, cfg.beta)
+             test: MiniBatch, cfg: LDAConfig, fold_iters: int = 30,
+             live_w=None) -> float:
+    """End-to-end: normalize phi, fold in theta, score the 20% split.
+
+    `live_w` evaluates a capacity-laddered phi at its live vocabulary:
+    guard rows get the beta-prior mass, so held-out documents whose words
+    were mapped to a guard/OOV row still score finitely (DESIGN.md §12).
+    """
+    phi_norm = normalize_phi(phi_acc_wk, cfg.beta, live_w=live_w)
     theta = fold_in_theta(key, train, phi_norm, cfg, iters=fold_iters)
     return float(predictive_perplexity(theta, phi_norm, test))

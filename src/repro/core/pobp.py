@@ -62,6 +62,7 @@ def dense_sweep(
     cfg: LDAConfig,
     model_reducer: Reducer,
     norm_phase: str = "model_norm",
+    wbeta=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One synchronous full update of all messages (Eq. 1).
 
@@ -71,14 +72,18 @@ def dense_sweep(
     `norm_phase` labels the cross-topic-shard normalization psum — callers
     inside the inner while loop pass the per-iteration "model_norm_loop"
     so the byte meter can bill it per iteration (sync.LOOP_PHASES).
+    `wbeta` overrides the W*beta smoothing mass — a capacity-laddered run
+    passes the traced live_w*beta so guard rows never inflate the
+    denominator (DESIGN.md §12); None keeps the static cfg value.
     """
     W = cfg.vocab_size
+    wb = W * cfg.beta if wbeta is None else wbeta
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)           # Eq. (2), local topics
     c = batch.counts[..., None]
     self_c = c * mu
     th = theta[:, None, :] - self_c + cfg.alpha
     ph = jnp.take(phi_eff_wk, batch.word_ids, axis=0) - self_c + cfg.beta
-    pt = phi_tot[None, None, :] - self_c + W * cfg.beta
+    pt = phi_tot[None, None, :] - self_c + wb
     unnorm = th * ph / pt
     norm = model_reducer.psum(jnp.sum(unnorm, axis=-1, keepdims=True),
                               norm_phase, compress=False)
@@ -216,16 +221,19 @@ def selective_sweep_tokens(
     sel_w: jnp.ndarray,           # [P]
     sel_k: jnp.ndarray,           # [P, Pk]
     cfg: LDAConfig,
+    wbeta=None,
 ):
     """Token-major selective sweep (jnp reference path, DESIGN.md §2).
 
     Same math as `selective_sweep` restricted to flat [T, Pk] streams:
     mass-conserving renormalization within the selected coordinates, packed
     [P, Pk] delta/residual outputs, untouched entries bit-identical.
+    `wbeta` overrides the W*beta smoothing mass (live-W runs, §12).
 
     Returns (mu_t_new, theta_new, delta_phi_packed, r_packed).
     """
     P, Pk = sel_k.shape
+    wb = cfg.vocab_size * cfg.beta if wbeta is None else wbeta
     p_tok = pw.token_power_rows(layout.word_ids, sel_w, cfg.vocab_size)
     k_tok, mu_sel, theta_sel, pt_sel = _gather_selection(
         layout, mu_t, theta, phi_tot, sel_k, p_tok, P)
@@ -237,7 +245,7 @@ def selective_sweep_tokens(
     sel_mass = jnp.sum(mu_sel, axis=-1, keepdims=True)           # conserved
     th = theta_sel - self_c + cfg.alpha
     ph = phi_sel - self_c + cfg.beta
-    pt = pt_sel - self_c + cfg.vocab_size * cfg.beta
+    pt = pt_sel - self_c + wb
     u = th * ph / pt
     mu_new_sel = u * sel_mass / jnp.maximum(
         jnp.sum(u, axis=-1, keepdims=True), 1e-30)
@@ -267,14 +275,17 @@ def selective_sweep_tokens(
 
 def selective_sweep_tokens_pallas(
     layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
-    cfg: LDAConfig,
+    cfg: LDAConfig, wbeta=None,
 ):
     """Fused-kernel selective sweep: Pallas power_pack gather + power_sweep.
 
     The packed phi gather runs on the scalar-prefetch power_pack kernel;
     update, renormalization and the packed delta/residual scatter fuse into
     one power_sweep pass (kernels/power_sweep).  Same contract as
-    `selective_sweep_tokens`.
+    `selective_sweep_tokens`.  A traced `wbeta` (live-W runs) folds into
+    the pre-gathered pt argument with the kernel's static wbeta pinned at
+    1.0 — the kernel needs no new code, and the unit offset keeps the
+    ops-layer lane padding away from 0/0 (same trick as core/infer).
     """
     from repro.kernels.power_pack import ops as pp_ops
     from repro.kernels.power_sweep.ops import power_sweep
@@ -284,9 +295,13 @@ def selective_sweep_tokens_pallas(
     k_tok, mu_sel, theta_sel, pt_sel = _gather_selection(
         layout, mu_t, theta, phi_tot, sel_k, p_tok, P)
     phi_pack = pp_ops.pack_rows(phi_eff_wk, sel_w, sel_k)        # Pallas
+    if wbeta is None:
+        pt_arg, wb_static = pt_sel, cfg.vocab_size * cfg.beta
+    else:
+        pt_arg, wb_static = pt_sel + (wbeta - 1.0), 1.0
     mu_new_sel, delta_phi_packed, r_packed = power_sweep(
-        p_tok, layout.counts, mu_sel, theta_sel, pt_sel, phi_pack,
-        alpha=cfg.alpha, beta=cfg.beta, wbeta=cfg.vocab_size * cfg.beta)
+        p_tok, layout.counts, mu_sel, theta_sel, pt_arg, phi_pack,
+        alpha=cfg.alpha, beta=cfg.beta, wbeta=wb_static)
     mu_t_new, theta_new, _ = _apply_token_update(
         layout, mu_t, theta, k_tok, mu_sel, mu_new_sel)
     return mu_t_new, theta_new, delta_phi_packed, r_packed
@@ -315,6 +330,7 @@ def pobp_minibatch(
     data_reducer: Reducer,
     model_reducer: Optional[Reducer] = None,
     sync_mode: str = "power",
+    live_w=None,
 ) -> MinibatchResult:
     """Run one mini-batch to convergence on this shard (all Fig. 4 lines).
 
@@ -322,11 +338,22 @@ def pobp_minibatch(
     synchronized accumulated statistic (identical on all data shards);
     `total_tokens` is the *global* mini-batch token count (psum'd once by the
     caller); `delta_weight` scales the accumulated gradient (Eq. 11).
+
+    `live_w` (a traced int32 scalar) switches the W axis to capacity-ladder
+    semantics (DESIGN.md §12): phi_acc_wk is [W_cap, Kl] with rows in
+    [live_w, W_cap) as guard rows — every batch word id is < live_w, the
+    W*beta smoothing uses live_w, power selection masks guard rows and
+    caps the power-word count at the live lambda_w fraction.  Because all
+    of this depends only on live_w (never on the rung), a run that grew
+    across rungs and a fresh run allocated at the final rung compute
+    identical trajectories.  None keeps the static fixed-W behavior.
     """
     model_reducer = model_reducer or LocalReducer(meter=data_reducer.meter)
     W = cfg.vocab_size
     Kl = phi_acc_wk.shape[1]
     P, Pk = cfg.num_power_words, min(cfg.num_power_topics, Kl)
+    wbeta = (None if live_w is None
+             else jnp.asarray(live_w, jnp.float32) * cfg.beta)
     layout = batch.token_layout()    # persistent token-major view (§2)
 
     # ---- lines 3-8: random init, local stats, first dense update ----
@@ -345,19 +372,21 @@ def pobp_minibatch(
         # fused Pallas kernel (normalization in-kernel => K must be unsharded)
         from repro.kernels.bp_update.ops import dense_sweep_pallas
         mu1, r_wk_local = dense_sweep_pallas(batch, mu0, phi_eff, phi_tot, cfg,
-                                             layout)
+                                             layout, wbeta=wbeta)
     else:
         mu1, r_wk_local = dense_sweep(batch, mu0, phi_eff, phi_tot, cfg,
-                                      model_reducer)
+                                      model_reducer, wbeta=wbeta)
 
     # ---- lines 9-10: dense synchronization of phi and r ----
     delta_glob = data_reducer.psum(
-        token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu1, W), "dense")
+        token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu1, W),
+        "dense", w_rows=W)
     phi_eff = phi_acc_wk + delta_glob
     phi_tot = jnp.sum(phi_eff, axis=0)
-    r_glob = data_reducer.psum(r_wk_local, "dense")
+    r_glob = data_reducer.psum(r_wk_local, "dense", w_rows=W)
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu1)
-    r_w = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw", compress=False)
+    r_w = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw",
+                             compress=False, w_rows=W)
 
     if sync_mode == "power":
         # Token-major persistent inner loop (DESIGN.md §2): messages are
@@ -384,20 +413,30 @@ def pobp_minibatch(
             mu_t, theta, phi_eff, phi_tot, r_glob, r_w_c, t = carry
             # lines 12-13 / 27-28: two-step power selection (identical on
             # every data shard -- computed from synchronized residuals).
-            sel_w = pw.select_power_words(r_w_c, P)
+            # Live-W runs mask guard rows out and cap the selection at the
+            # live lambda_w fraction; dead slots point at the first guard
+            # row, whose packed values are exact zeros (§12).
+            if live_w is None:
+                sel_w = pw.select_power_words(r_w_c, P)
+            else:
+                sel_w = pw.select_power_words_live(r_w_c, P, live_w,
+                                                   cfg.lambda_w)
             sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
             mu_t, theta, d_phi_pack, r_pack = sweep_fn(
-                layout, mu_t, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
-            # lines 23-24: communicate only the power submatrices
-            d_phi_pack = data_reducer.psum(d_phi_pack, "power")
-            r_pack = data_reducer.psum(r_pack, "power")
+                layout, mu_t, theta, phi_eff, phi_tot, sel_w, sel_k, cfg,
+                wbeta=wbeta)
+            # lines 23-24: communicate only the power submatrices (the [P,
+            # Pk] buffers scale with W through P = lambda_w*W: live-W
+            # accounting bills only the live fraction of their rows)
+            d_phi_pack = data_reducer.psum(d_phi_pack, "power", w_rows=W)
+            r_pack = data_reducer.psum(r_pack, "power", w_rows=W)
             # packed-carry refresh: O(P*Pk) state updates, Eq. 9
             rw_delta = packed_rw_delta(r_glob, sel_w, sel_k, r_pack)
             phi_eff = phi_scatter(phi_eff, sel_w, sel_k, d_phi_pack)
             phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_phi_pack)
             r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
             rw_delta = model_reducer.psum(rw_delta, "model_rw_loop",
-                                          compress=False)
+                                          compress=False, w_rows=W)
             r_w_c = r_w_c.at[sel_w].add(rw_delta)
             return (mu_t, theta, phi_eff, phi_tot, r_glob, r_w_c, t + 1)
 
@@ -415,16 +454,18 @@ def pobp_minibatch(
         def body(carry):
             mu, theta, phi_eff, phi_tot, _, t = carry
             mu, r_wk = dense_sweep(batch, mu, phi_eff, phi_tot, cfg,
-                                   model_reducer, norm_phase="model_norm_loop")
+                                   model_reducer, norm_phase="model_norm_loop",
+                                   wbeta=wbeta)
             delta = data_reducer.psum(
                 token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu, W),
-                "dense_loop")
+                "dense_loop", w_rows=W)
             phi_eff = phi_acc_wk + delta
             phi_tot = jnp.sum(phi_eff, axis=0)
             theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
             r_w_c = model_reducer.psum(
-                jnp.sum(data_reducer.psum(r_wk, "dense_loop"), axis=1),
-                "model_rw_loop", compress=False)
+                jnp.sum(data_reducer.psum(r_wk, "dense_loop", w_rows=W),
+                        axis=1),
+                "model_rw_loop", compress=False, w_rows=W)
             return (mu, theta, phi_eff, phi_tot, r_w_c, t + 1)
 
         mu, theta, phi_eff, phi_tot, r_w, t = jax.lax.while_loop(cond, body, carry0)
@@ -456,18 +497,20 @@ def pobp_minibatch(
 def pobp_shard_body(word_ids, counts, phi_acc, key, delta_weight,
                     cfg: LDAConfig, data_reducer: Reducer,
                     model_reducer: Optional[Reducer] = None,
-                    sync_mode: str = "power"):
+                    sync_mode: str = "power", live_w=None):
     """One shard's complete mini-batch routine (Fig. 4, one m).
 
     `word_ids`/`counts` are THIS shard's [Dl, L] slice; `phi_acc` is the
     synchronized accumulated statistic.  The global token count is psum'd
     here ("tokens" phase), so callers never pre-reduce anything.
+    `live_w` (traced) enables capacity-ladder W semantics (§12).
     Returns (phi_acc_new, iters, mean_r, mu, theta).
     """
     batch = MiniBatch(word_ids=word_ids, counts=counts)
     total = data_reducer.psum(jnp.sum(counts), "tokens", compress=False)
     res = pobp_minibatch(batch, phi_acc, key, total, delta_weight, cfg,
-                         data_reducer, model_reducer, sync_mode=sync_mode)
+                         data_reducer, model_reducer, sync_mode=sync_mode,
+                         live_w=live_w)
     return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
 
 
@@ -486,6 +529,27 @@ def init_train_state(cfg: LDAConfig, seed: int = 0) -> LDATrainState:
         rng=jax.random.PRNGKey(seed))
 
 
+def grow_state(state: LDATrainState, new_vocab_cap: int) -> LDATrainState:
+    """Pure-functional W-capacity growth: pad phi_acc to the next rung.
+
+    The appended rows are guard rows — zero counts that no live word maps
+    to yet — so growing is trajectory-neutral: the padded carry computes
+    the same updates as the unpadded one (DESIGN.md §12).  m and the RNG
+    are untouched; the caller re-derives its step function for the new
+    capacity (one compile per (rung, bucket) pair).
+    """
+    W, K = state.phi_acc.shape
+    if new_vocab_cap < W:
+        raise ValueError(f"cannot shrink phi capacity {W} -> {new_vocab_cap} "
+                         f"(vocab eviction/compaction is not supported)")
+    if new_vocab_cap == W:
+        return state
+    phi = jnp.concatenate(
+        [state.phi_acc,
+         jnp.zeros((new_vocab_cap - W, K), state.phi_acc.dtype)], axis=0)
+    return LDATrainState(phi_acc=phi, m=state.m, rng=state.rng)
+
+
 def make_train_step(cfg: LDAConfig, num_shards: int = 1,
                     sync_mode: str = "power", sync_dtype=jnp.float32,
                     donate: bool = True):
@@ -502,6 +566,12 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
     The step recompiles once per distinct (Dl, L) input shape; feed it
     through `repro.data.batching.bucketed_minibatch_stream` to bound the
     compile count.  Compiles so far: ``step._cache_size()``.
+
+    ``step`` also accepts an optional trailing ``live_w`` (int32 scalar):
+    the live vocabulary size of a capacity-laddered run whose cfg
+    ``vocab_size`` is the current rung.  live_w is *traced*, so vocabulary
+    growth within a rung never recompiles — only crossing a rung does
+    (``grow_state`` + a fresh step; compiles <= #rungs x #buckets).
     """
     meter = CommMeter()
     if num_shards == 1:
@@ -509,21 +579,23 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
     else:
         reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
 
-    def body(wid, cnt, phi_acc, key, weight):
+    def body(wid, cnt, phi_acc, key, weight, live_w):
         return pobp_shard_body(wid, cnt, phi_acc, key, weight, cfg, reducer,
-                               sync_mode=sync_mode)
+                               sync_mode=sync_mode, live_w=live_w)
 
-    def step(state: LDATrainState, word_ids, counts):
+    def step(state: LDATrainState, word_ids, counts, live_w=None):
         rng, sub = jax.random.split(state.rng)
         weight = _delta_weight(cfg, state.m + 1)
         if num_shards == 1:
             phi, iters, mean_r, _mu, theta = body(word_ids, counts,
-                                                  state.phi_acc, sub, weight)
+                                                  state.phi_acc, sub, weight,
+                                                  live_w)
         else:
             keys = jax.random.split(sub, num_shards)
             phi, iters, mean_r, _mu, theta = jax.vmap(
-                body, in_axes=(0, 0, None, 0, None), axis_name="shards")(
-                    word_ids, counts, state.phi_acc, keys, weight)
+                body, in_axes=(0, 0, None, 0, None, None),
+                axis_name="shards")(
+                    word_ids, counts, state.phi_acc, keys, weight, live_w)
             # shard-identical by construction: carry shard 0's copy
             phi, iters, mean_r = phi[0], iters[0], mean_r[0]
         new_state = LDATrainState(phi_acc=phi, m=state.m + 1, rng=rng)

@@ -28,6 +28,36 @@ def select_power_words(r_w: jnp.ndarray, num_power_words: int) -> jnp.ndarray:
     return idx.astype(jnp.int32)
 
 
+def select_power_words_live(r_w: jnp.ndarray, num_power_words: int,
+                            live_w: jnp.ndarray,
+                            lambda_w: float) -> jnp.ndarray:
+    """Live-W-masked power-word selection on a capacity-laddered run.
+
+    ``r_w`` is [W_cap]-shaped; rows in [live_w, W_cap) are guard rows and
+    must never be selected, and the *number* of power words must track
+    the live vocabulary — ``P_live = max(1, floor(lambda_w * live_w))``
+    — so the selection (and therefore the whole trajectory) depends only
+    on the live vocabulary, never on which rung W_cap happens to be.
+    ``floor`` guarantees ``P_live <= num_power_words`` for every
+    ``live_w < W_cap`` (`num_power_words` rounds at capacity).
+
+    The returned vector still has the static shape [num_power_words]:
+    slots past P_live point at row ``live_w`` — the first guard row, a
+    row no token maps to and whose residual/phi entries are identically
+    zero — so the packed buffers they feed transmit exact zeros and every
+    downstream scatter is a no-op (the W-axis analogue of the power_sweep
+    kernel's guard-row token routing).
+    """
+    W = r_w.shape[0]
+    live_w = jnp.asarray(live_w, jnp.int32)
+    masked = jnp.where(jnp.arange(W) < live_w, r_w, -jnp.inf)
+    _, idx = jax.lax.top_k(masked, num_power_words)
+    p_live = jnp.maximum(
+        1, jnp.floor(lambda_w * live_w.astype(jnp.float32))).astype(jnp.int32)
+    slot = jnp.arange(num_power_words, dtype=jnp.int32)
+    return jnp.where(slot < p_live, idx.astype(jnp.int32), live_w)
+
+
 def select_power_topics(r_wk: jnp.ndarray, word_idx: jnp.ndarray,
                         num_power_topics: int) -> jnp.ndarray:
     """Per power word, top-`num_power_topics` topic indices (Fig. 4 lines 13/28).

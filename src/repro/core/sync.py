@@ -64,13 +64,26 @@ class CommMeter:
         self.calls: List[str] = []                 # every record ever (debug)
         self._archived: List[Tuple[Tuple, ...]] = []   # frozen trace logs
         # live trace id -> [weakref-to-trace (or the trace itself when it
-        # rejects weakrefs), ordered (phase, shape, dtype, nbytes) records]
+        # rejects weakrefs), ordered (phase, shape, dtype, nbytes, w_rows)
+        # records]
         self._live: Dict[int, list] = {}
         self._eager: List[Tuple] = []
 
-    def record(self, phase: str, arr: jnp.ndarray) -> None:
+    def record(self, phase: str, arr: jnp.ndarray,
+               w_rows: Optional[int] = None) -> None:
+        """Register one psum payload.
+
+        ``w_rows`` marks a payload whose size is proportional to the
+        vocabulary capacity: it is recorded at the full W_cap = ``w_rows``
+        shape (what the compiled program allocates), but only the live
+        fraction logically crosses the interconnect — guard rows are
+        identically zero on every shard, so a deployment transmits
+        ``live_w`` rows (DESIGN.md §12).  ``bytes_by_phase_at(live_w)``
+        scales marked records by ``live_w / w_rows``.
+        """
         nbytes = int(arr.size) * arr.dtype.itemsize
-        sig = (phase, tuple(arr.shape), str(arr.dtype), nbytes)
+        sig = (phase, tuple(arr.shape), str(arr.dtype), nbytes,
+               int(w_rows) if w_rows else 0)
         self.calls.append(f"{phase}:{tuple(arr.shape)}:{arr.dtype}:{nbytes}")
         trace = getattr(arr, "_trace", None)
         if trace is None:
@@ -96,25 +109,41 @@ class CommMeter:
     def _logs(self) -> List[Tuple[Tuple, ...]]:
         return self._archived + [tuple(log) for _, log in self._live.values()]
 
-    @property
-    def bytes_by_phase(self) -> Dict[str, int]:
+    def _merged(self, live_w: Optional[int] = None) -> Dict[str, int]:
         # group deduplicated logs by phase sequence; max-merge within a
         # group (shape-bucket variants), sum across groups and eager records
+
+        def scaled(nbytes: int, w_rows: int) -> int:
+            if live_w is None or not w_rows:
+                return nbytes
+            return int(nbytes * min(int(live_w), w_rows) // w_rows)
+
         groups: Dict[Tuple[str, ...], Dict[str, int]] = {}
         for log in set(self._logs()):
             per: Dict[str, int] = {}
-            for phase, _, _, nbytes in log:
-                per[phase] = per.get(phase, 0) + nbytes
+            for phase, _, _, nbytes, w_rows in log:
+                per[phase] = per.get(phase, 0) + scaled(nbytes, w_rows)
             g = groups.setdefault(tuple(s[0] for s in log), {})
             for phase, nbytes in per.items():
                 g[phase] = max(g.get(phase, 0), nbytes)
         out: Dict[str, int] = {}
-        for phase, _, _, nbytes in self._eager:
-            out[phase] = out.get(phase, 0) + nbytes
+        for phase, _, _, nbytes, w_rows in self._eager:
+            out[phase] = out.get(phase, 0) + scaled(nbytes, w_rows)
         for g in groups.values():
             for phase, nbytes in g.items():
                 out[phase] = out.get(phase, 0) + nbytes
         return out
+
+    @property
+    def bytes_by_phase(self) -> Dict[str, int]:
+        return self._merged()
+
+    def bytes_by_phase_at(self, live_w: int) -> Dict[str, int]:
+        """Per-phase bytes with W-proportional payloads (``record``'s
+        ``w_rows`` mark) scaled to the live vocabulary — the honest
+        Eq. 5/6 accounting of a capacity-laddered run: guard rows are
+        structurally zero, so they never cross the interconnect."""
+        return self._merged(live_w)
 
     def phase_bytes(self, phase: str) -> int:
         return self.bytes_by_phase.get(phase, 0)
@@ -124,15 +153,18 @@ class CommMeter:
         return sum(self.bytes_by_phase.values())
 
     def per_minibatch_bytes(self, iters,
-                            loop_phases: Sequence[str] = LOOP_PHASES) -> int:
+                            loop_phases: Sequence[str] = LOOP_PHASES,
+                            live_w: Optional[int] = None) -> int:
         """The documented ``dense + (iters-1) * sparse`` mini-batch total.
 
         `loop_phases` payloads cross the interconnect once per inner
         iteration (their psums live in a trace-once while body); every
         other phase is paid once per mini-batch.  `iters` includes the
         first dense iteration, mirroring ``MinibatchResult.iters``.
+        `live_w` scales W-proportional payloads to the live vocabulary
+        (capacity-laddered runs; see ``bytes_by_phase_at``).
         """
-        by = self.bytes_by_phase
+        by = self._merged(live_w)
         once = sum(v for p, v in by.items() if p not in loop_phases)
         loop = sum(v for p, v in by.items() if p in loop_phases)
         return int(once + max(int(iters) - 1, 0) * loop)
@@ -154,12 +186,16 @@ class Reducer:
     def _sum(self, x: jnp.ndarray) -> jnp.ndarray:
         raise NotImplementedError
 
-    def psum(self, x: jnp.ndarray, phase: str, compress: bool = True) -> jnp.ndarray:
-        """All-reduce `x`; payload cast to sync_dtype when `compress`."""
+    def psum(self, x: jnp.ndarray, phase: str, compress: bool = True,
+             w_rows: Optional[int] = None) -> jnp.ndarray:
+        """All-reduce `x`; payload cast to sync_dtype when `compress`.
+
+        ``w_rows`` marks a vocabulary-proportional payload (recorded at
+        capacity, billed at live W by ``CommMeter.bytes_by_phase_at``)."""
         orig = x.dtype
         if compress and x.dtype != self.sync_dtype:
             x = x.astype(self.sync_dtype)
-        self.meter.record(phase, x)
+        self.meter.record(phase, x, w_rows=w_rows)
         out = self._sum(x)
         return out.astype(orig)
 
@@ -193,7 +229,8 @@ class LocalReducer(Reducer):
     to an N-shard run with the same sync_dtype (the payload precision is a
     property of the algorithm configuration, not of the shard count)."""
 
-    def psum(self, x, phase: str, compress: bool = True):
+    def psum(self, x, phase: str, compress: bool = True,
+             w_rows: Optional[int] = None):
         if compress and x.dtype != self.sync_dtype:
             return x.astype(self.sync_dtype).astype(x.dtype)
         return x
@@ -203,7 +240,12 @@ class LocalReducer(Reducer):
 
 
 def dense_sync_bytes(W: int, K: int, itemsize: int = 4) -> int:
-    """Eq. (5) per-iteration payload of the MPA baseline: the full phi matrix."""
+    """Eq. (5) per-iteration payload of the MPA baseline: the full phi matrix.
+
+    ``W`` is the LIVE vocabulary: on a capacity-laddered run the guard
+    rows above live W are identically zero on every shard and never need
+    to travel (DESIGN.md §12) — pass live W here, not the rung capacity.
+    """
     return W * K * itemsize
 
 
@@ -217,5 +259,10 @@ def power_sync_bytes(P: int, Pk: int, W: int, itemsize: int = 4,
     with ``compress=False`` — those psums always travel at float32 width
     regardless of sync_dtype.  Pass ``rw_itemsize=itemsize`` only for a
     deployment that compresses the r_w sync too.
+
+    ``W`` (and a ``P`` derived from it) is the LIVE vocabulary on a
+    capacity-laddered run — guard rows carry zero residual and zero
+    packed mass, so the honest Eq. 6 payload scales with live W, not
+    with the rung capacity (DESIGN.md §12).
     """
     return 2 * P * Pk * itemsize + W * rw_itemsize

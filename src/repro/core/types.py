@@ -27,9 +27,17 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class LDAConfig:
-    """Static configuration of an LDA/POBP run (hashable; safe to close over jit)."""
+    """Static configuration of an LDA/POBP run (hashable; safe to close over jit).
 
-    vocab_size: int                 # W
+    ``vocab_size`` is the *allocated* W — on a dynamic-vocabulary run it
+    is the current capacity-ladder rung W_cap (DESIGN.md §12): phi/r
+    buffers are [W_cap, K]-shaped, rows in [live_w, W_cap) are guard rows,
+    and the traced live_w that flows through ``core.pobp`` carries the
+    actual vocabulary size (smoothing, selection, byte accounting).  On a
+    fixed-vocabulary run the two coincide and live_w stays None.
+    """
+
+    vocab_size: int                 # W (capacity rung W_cap when dynamic)
     num_topics: int                 # K
     alpha: float = 0.1              # Dirichlet prior on theta (paper: 2/K)
     beta: float = 0.01              # Dirichlet prior on phi   (paper: 0.01)
@@ -161,7 +169,10 @@ class LDATrainState:
     cursor and the RNG together make a crash-resumed run bit-identical to
     an uninterrupted one.
 
-    phi_acc[W, K]  accumulated topic-word sufficient statistics (Eq. 11)
+    phi_acc[W, K]  accumulated topic-word sufficient statistics (Eq. 11);
+                   W is the capacity rung on a dynamic-vocabulary run —
+                   ``core.pobp.grow_state`` pads it to the next rung
+                   (guard rows stay exactly zero, DESIGN.md §12)
     m              int32 scalar: mini-batches consumed so far (0-indexed
                    cursor; batch m+1 is the next one, matching Eq. 11's m)
     rng            PRNG key split once per mini-batch

@@ -1,4 +1,5 @@
 from repro.data.synthetic import (  # noqa: F401
+    drifting_vocab_docs,
     lda_corpus,
     zipf_corpus,
     CorpusStats,
@@ -14,4 +15,6 @@ from repro.data.batching import (  # noqa: F401
     stack_shards,
     train_test_split_counts,
     shard_docs,
+    vocab_mapped_minibatch_stream,
 )
+from repro.data.vocab import VocabMap, next_capacity  # noqa: F401

@@ -247,6 +247,55 @@ def bucketed_minibatch_stream(
     yield from prefetched(slices, prefetch)
 
 
+def vocab_mapped_minibatch_stream(
+    docs: Sequence[Doc],
+    vocab,
+    batch_docs: int,
+    num_shards: int = 1,
+    len_buckets: Sequence[int] = (16, 32, 64, 128),
+    prefetch: int = 2,
+    admit: bool = True,
+    oov_row: int | None = None,
+) -> Iterator[Tuple[MiniBatch, int]]:
+    """Shape-bucketed streaming over raw external-id docs (DESIGN.md §12).
+
+    Each chunk's word keys pass through ``vocab`` (a
+    ``data.vocab.VocabMap``) *before* padding, so batches carry dense phi
+    rows; yields ``(MiniBatch, live_w)`` pairs where ``live_w`` is the
+    live vocabulary size after this batch's admissions — the per-batch
+    snapshot the dynamic-W training step consumes.  The snapshot is taken
+    in generation order on the prefetch thread, so the value is
+    deterministic however far prefetch runs ahead.
+
+    This is the admission contract for an in-memory corpus; the streaming
+    driver's ``launch.lda_train.drifting_stream`` applies the same
+    map->snapshot->bucket->pad sequence to batches it generates lazily
+    per (seed, m) (resumable from a cursor, no materialized doc list) —
+    keep the two in step.
+    """
+    len_buckets = tuple(sorted(int(b) for b in len_buckets))
+    if any(b % 8 for b in len_buckets):
+        raise ValueError(f"len_buckets must be multiples of 8: {len_buckets}")
+    if batch_docs % max(num_shards, 1):
+        raise ValueError(f"batch_docs={batch_docs} must divide over "
+                         f"num_shards={num_shards}")
+    n_batches = -(-len(docs) // batch_docs)
+
+    def slices():
+        for m in range(n_batches):
+            chunk = vocab.map_docs(docs[m * batch_docs: (m + 1) * batch_docs],
+                                   admit=admit, oov_row=oov_row)
+            live = vocab.live
+            nat = max((len(ids) for ids, _ in chunk), default=1)
+            if len(chunk) < batch_docs:
+                chunk += [(np.zeros(1, np.int32), np.zeros(1, np.float32))
+                          ] * (batch_docs - len(chunk))
+            mb = docs_to_padded(chunk, max_len=bucket_len(nat, len_buckets))
+            yield stack_shards(mb, num_shards), live
+
+    yield from prefetched(slices, prefetch)
+
+
 def train_test_split_counts(docs: Sequence[Doc], seed: int, test_frac: float = 0.2
                             ) -> Tuple[List[Doc], List[Doc]]:
     """Per-document 80/20 token split for predictive perplexity (paper §4, Eq. 20).

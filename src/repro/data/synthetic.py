@@ -95,6 +95,59 @@ def lda_corpus_from_phi(seed: int, num_docs: int, phi: np.ndarray,
     return _docs_from_token_lists(token_lists, W)
 
 
+def drifting_vocab_docs(
+    seed: int,
+    m: int,
+    num_docs: int,
+    active_vocab: int,
+    num_topics: int,
+    doc_len_mean: int = 40,
+    alpha: float = 0.1,
+    score_cache: dict | None = None,
+):
+    """Batch ``m`` of a drifting-vocabulary stream (DESIGN.md §12).
+
+    The external vocabulary grows over time: batch m draws only from the
+    first ``active_vocab`` external word ids, with per-word topic scores
+    generated *counter-based* (one rng per (seed, word)), so
+
+      - extending the active prefix never changes earlier words'
+        distributions (prefix stability), and
+      - batch m is a pure function of (seed, m, active_vocab) — no
+        stream state to persist across a crash-resume, and any two runs
+        (grown-capacity or fresh-at-final-rung) see identical documents.
+
+    Returns docs with EXTERNAL word ids in [0, active_vocab); feed them
+    through ``data.vocab.VocabMap`` for dense phi rows.  ``score_cache``
+    (a dict) memoizes the per-word score matrix across batches.
+    """
+    cache = score_cache if score_cache is not None else {}
+    scores = cache.get("scores")
+    have = 0 if scores is None else scores.shape[0]
+    if have < active_vocab:
+        new = np.stack([
+            np.random.default_rng([seed, 104_729, w]).gamma(0.5,
+                                                            size=num_topics)
+            for w in range(have, active_vocab)])
+        scores = new if scores is None else np.vstack([scores, new])
+        cache["scores"] = scores
+    act = scores[:active_vocab] + 1e-6                  # [W_act, K]
+    p_wk = act / act.sum(axis=0, keepdims=True)         # per-topic word dist
+
+    rng = np.random.default_rng([seed, 7, m])
+    token_lists = []
+    for _ in range(num_docs):
+        n = max(4, int(rng.poisson(doc_len_mean)))
+        theta = rng.dirichlet(np.full(num_topics, alpha + 0.05))
+        z = rng.choice(num_topics, size=n, p=theta)
+        toks = np.empty(n, np.int64)
+        for k in np.unique(z):
+            idx = np.nonzero(z == k)[0]
+            toks[idx] = rng.choice(active_vocab, size=idx.size, p=p_wk[:, k])
+        token_lists.append(toks)
+    return _docs_from_token_lists(token_lists, active_vocab)
+
+
 def zipf_corpus(
     seed: int,
     num_docs: int,

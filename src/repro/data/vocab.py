@@ -1,0 +1,124 @@
+"""Dynamic vocabulary: deterministic token->row assignment + the W
+capacity ladder (DESIGN.md §12).
+
+The paper fixes W before step 0; every real stream grows its vocabulary
+over time.  This module makes W a *managed runtime dimension* with the
+same philosophy the repo already applies to L (shape bucketing, §10):
+
+  - ``VocabMap`` assigns each external token key its phi row in strict
+    first-seen order (append-only, never reassigned), so any two runs
+    that consume the same batch sequence build bit-identical maps —
+    the property that makes grown-run vs fresh-run trajectories and
+    crash-resume replay exact.  The map round-trips through the
+    checkpoint manifest as a plain key list (row i -> keys[i]).
+  - ``next_capacity`` is the geometric W rung ladder: phi_acc/r_glob are
+    allocated at the rung, rows in [live_w, W_cap) are *guard rows*
+    (zero counts, masked out of power selection, excluded from the
+    W*beta smoothing), and a step recompiles only when the live
+    vocabulary crosses a rung — compiles stay bounded by
+    #W rungs x #L buckets.  Rungs are chosen STRICTLY above live_w so a
+    guard row always exists (serving uses the first one as the OOV row).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import Doc
+
+
+def next_capacity(live_w: int, current_cap: int = 0, min_cap: int = 64,
+                  growth: float = 2.0, multiple: int = 8) -> int:
+    """Smallest ladder rung strictly greater than ``live_w``.
+
+    Rungs start at ``min_cap`` (rounded up to ``multiple``) and grow
+    geometrically; ``current_cap`` (if already on the ladder) is reused
+    as the starting point so repeated calls walk the same rung sequence.
+    Strictly greater: the invariant ``live_w < W_cap`` guarantees at
+    least one guard row, which doubles as the dead-selection row of the
+    masked power selection and the serving OOV row.
+    """
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+    cap = max(1, -(-int(min_cap) // multiple) * multiple)
+    cap = max(cap, int(current_cap))
+    while cap <= live_w:
+        cap = max(cap + multiple,
+                  -(-int(round(cap * growth)) // multiple) * multiple)
+    return cap
+
+
+class VocabMap:
+    """Append-only external-token -> dense-row map.
+
+    Keys may be any hashable JSON-able value (ints for the synthetic
+    streams, strings for real corpora).  Admission order IS the row
+    order; rows are never reassigned or reused, so the first ``n`` keys
+    always describe the exact vocabulary after the n-th admission —
+    which is what lets the async driver checkpoint a consistent prefix
+    (``keys_upto``) while a prefetch thread keeps admitting ahead.
+    """
+
+    def __init__(self, keys: Iterable = ()):
+        self._keys: List = list(keys)
+        self._rows: Dict = {k: i for i, k in enumerate(self._keys)}
+        if len(self._rows) != len(self._keys):
+            raise ValueError("VocabMap keys must be unique")
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    @property
+    def live(self) -> int:
+        """Current live vocabulary size (== the next row to be assigned)."""
+        return len(self._keys)
+
+    def lookup(self, key) -> Optional[int]:
+        return self._rows.get(key)
+
+    def admit(self, key) -> int:
+        """Row of ``key``, appending it if unseen."""
+        row = self._rows.get(key)
+        if row is None:
+            row = len(self._keys)
+            self._rows[key] = row
+            self._keys.append(key)
+        return row
+
+    def rows(self, keys: Sequence, admit: bool = True,
+             oov_row: Optional[int] = None) -> np.ndarray:
+        """Vectorized key -> row translation.
+
+        ``admit=True`` appends unseen keys (training admission);
+        ``admit=False`` maps them to ``oov_row`` instead (serving /
+        eval: the vocabulary must not move under a lookup).
+        """
+        if admit:
+            return np.asarray([self.admit(k) for k in keys], np.int32)
+        if oov_row is None:
+            raise ValueError("admit=False needs an oov_row")
+        get = self._rows.get
+        return np.asarray([get(k, oov_row) for k in keys], np.int32)
+
+    def map_docs(self, docs: Sequence[Doc], admit: bool = True,
+                 oov_row: Optional[int] = None) -> List[Doc]:
+        """Translate a list of (word_keys, counts) docs to row-space docs."""
+        return [(self.rows(ids.tolist() if hasattr(ids, "tolist") else ids,
+                           admit=admit, oov_row=oov_row), counts)
+                for ids, counts in docs]
+
+    def keys_upto(self, n: int) -> List:
+        """The first ``n`` keys — the vocabulary as of the admission that
+        produced live size ``n`` (safe to call while another thread
+        appends: the prefix of an append-only list is immutable)."""
+        return list(self._keys[:n])
+
+    def to_state(self) -> List:
+        """JSON-able payload for the checkpoint manifest."""
+        return list(self._keys)
+
+    @classmethod
+    def from_state(cls, keys: Iterable) -> "VocabMap":
+        return cls(keys)

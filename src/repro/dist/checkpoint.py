@@ -33,6 +33,24 @@ def _step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"{_PREFIX}{step:07d}")
 
 
+def _pad_rows(arr: np.ndarray, rows: int, what: str) -> np.ndarray:
+    """Elastic W-reshard: zero-pad axis 0 up to `rows` (guard rows).
+
+    Shrinking is refused everywhere (vocab eviction/compaction is not
+    supported — ROADMAP backlog); the host-side mirror of
+    ``core.pobp.grow_state``.
+    """
+    if rows < arr.shape[0]:
+        raise ValueError(
+            f"cannot shrink {what} from {arr.shape[0]} to {rows} rows "
+            f"(vocab eviction/compaction is not supported)")
+    if rows == arr.shape[0]:
+        return arr
+    return np.concatenate(
+        [arr, np.zeros((rows - arr.shape[0],) + arr.shape[1:], arr.dtype)],
+        axis=0)
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return ([(jax.tree_util.keystr(path), leaf) for path, leaf in leaves],
@@ -97,22 +115,43 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def peek_extra(directory: str, step: Optional[int] = None
+               ) -> Optional[Tuple[Dict[str, Any], int]]:
+    """Read only the manifest `extra` dict (no array bytes), or None.
+
+    The dynamic-vocabulary driver needs the saved capacity rung BEFORE it
+    can build a restore template of the right shape (DESIGN.md §12) —
+    this is the cheap first half of that handshake.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest.get("extra", {}), int(manifest["step"])
+
+
 def restore_latest(directory: str, template: Dict[str, Any],
-                   shardings: Optional[Dict[str, Any]] = None
+                   shardings: Optional[Dict[str, Any]] = None,
+                   grow_rows: Tuple[str, ...] = ()
                    ) -> Optional[Tuple[Dict[str, Any], Dict[str, Any], int]]:
     """Restore the newest complete checkpoint, or return None.
 
     The cold-start branch of a crash-resume driver collapses to
     ``got = restore_latest(dir, template)`` followed by an ``if got:``.
+    `grow_rows` enables the elastic W-reshard for the named leaves
+    (see ``restore``).
     """
     step = latest_step(directory)
     if step is None:
         return None
-    return restore(directory, step, template, shardings)
+    return restore(directory, step, template, shardings, grow_rows=grow_rows)
 
 
 def restore_phi(directory: str, step: Optional[int] = None,
-                leaf: str = "phi_acc", sharding: Optional[Any] = None
+                leaf: str = "phi_acc", sharding: Optional[Any] = None,
+                w_cap: Optional[int] = None
                 ) -> Tuple[Any, Dict[str, Any], int]:
     """Serving entry point: load ONE leaf of a driver checkpoint.
 
@@ -123,6 +162,9 @@ def restore_phi(directory: str, step: Optional[int] = None,
     bytes; shape and dtype come from the manifest.  `sharding` (e.g. a
     ``NamedSharding`` built from ``dist.sharding.phi_serving_spec``) routes
     the array through ``jax.device_put`` for a topic-sharded serving mesh.
+    `w_cap` resizes the vocabulary axis across capacity rungs (elastic
+    W-reshard, DESIGN.md §12): a phi saved at a smaller rung is zero-padded
+    to `w_cap` rows (the pad rows are guard rows); shrinking raises.
     Returns (array, extra, step); raises ``FileNotFoundError`` when the
     directory holds no complete checkpoint and ``ValueError`` when `leaf`
     is missing or ambiguous.
@@ -146,6 +188,8 @@ def restore_phi(directory: str, step: Optional[int] = None,
     data = np.load(os.path.join(path, "data.npz"))
     arr = np.frombuffer(data[f"leaf_{i}"].tobytes(),
                         np.dtype(rec["dtype"])).reshape(tuple(rec["shape"]))
+    if w_cap is not None:
+        arr = _pad_rows(arr, w_cap, repr(leaf))
     if sharding is not None:
         arr = jax.device_put(arr, sharding)
     else:
@@ -154,13 +198,19 @@ def restore_phi(directory: str, step: Optional[int] = None,
 
 
 def restore(directory: str, step: int, template: Dict[str, Any],
-            shardings: Optional[Dict[str, Any]] = None
+            shardings: Optional[Dict[str, Any]] = None,
+            grow_rows: Tuple[str, ...] = ()
             ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:
     """Load the checkpoint at `step` into the structure of `template`.
 
     `template` leaves only provide structure/shape/dtype for validation —
     their values are never read.  `shardings` (same structure) routes each
     restored leaf through ``jax.device_put`` for the elastic-remesh path.
+    `grow_rows` names leaves (by key-path suffix, e.g. ``"phi_acc"``) whose
+    axis-0 size may be SMALLER in the checkpoint than in the template: the
+    saved rows are zero-padded up to the template (elastic W-reshard across
+    capacity rungs, DESIGN.md §12 — pad rows are guard rows).  Any other
+    mismatch, including shrinking, still raises.
     Returns (trees, extra, step).
     """
     path = _step_dir(directory, step)
@@ -183,9 +233,13 @@ def restore(directory: str, step: int, template: Dict[str, Any],
             raise ValueError(f"checkpoint key mismatch at leaf {i}: "
                              f"saved {rec['key']!r} != template {key!r}")
         shape = tuple(rec["shape"])
-        if shape != tuple(np.shape(leaf)):
+        want = tuple(np.shape(leaf))
+        growable = (any(key.endswith(f"['{name}']") for name in grow_rows)
+                    and len(shape) == len(want) and shape[1:] == want[1:]
+                    and shape[0] <= want[0])
+        if shape != want and not growable:
             raise ValueError(f"shape mismatch for {key}: saved {shape} != "
-                             f"template {tuple(np.shape(leaf))}")
+                             f"template {want}")
         want_dtype = getattr(leaf, "dtype", None)
         if want_dtype is not None and np.dtype(rec["dtype"]) != np.dtype(want_dtype):
             raise ValueError(f"dtype mismatch for {key}: saved "
@@ -193,6 +247,8 @@ def restore(directory: str, step: int, template: Dict[str, Any],
         raw = data[f"leaf_{i}"]
         arr = np.frombuffer(raw.tobytes(), np.dtype(rec["dtype"]))
         arr = arr.reshape(shape)
+        if shape != want:        # growable: pad rows up to the template rung
+            arr = _pad_rows(arr, want[0], key)
         if sh_flat is not None:
             arr = jax.device_put(arr, sh_flat[i][1])
         else:

@@ -134,7 +134,12 @@ def phi_serving_spec(mesh, phi) -> P:
     """Serving-time spec for a [W, K] topic-word matrix: topics shard over
     the ``model`` axis when the mesh has one and K divides it, words stay
     replicated (every shard folds in the full vocabulary of its documents —
-    the same split the training inner loop uses, DESIGN.md §2/§11)."""
+    the same split the training inner loop uses, DESIGN.md §2/§11).
+
+    The W axis is never sharded, so the spec stays valid under dynamic
+    vocabulary growth (§12): a phi grown to any capacity rung — including
+    the +1 guard/OOV row the serving engine appends — resolves to the same
+    ``P(None, 'model')`` with no divisibility constraint on W."""
     spec = P(None, "model" if "model" in mesh.axis_names else None)
     return validate_specs(spec, phi, mesh)
 

@@ -23,17 +23,26 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int):
 
 def dense_sweep_pallas(batch: MiniBatch, mu: jnp.ndarray,
                        phi_eff_wk: jnp.ndarray, phi_tot: jnp.ndarray,
-                       cfg: LDAConfig, layout: TokenLayout = None):
+                       cfg: LDAConfig, layout: TokenLayout = None,
+                       wbeta=None):
     """Fused-kernel version of core.pobp.dense_sweep (K unsharded).
 
     Accepts an optional precomputed TokenLayout so callers that already
     run token-major (core.pobp's persistent inner loop) don't rebuild it.
     Returns (mu_new [D, L, K], r_wk [W, K]) — bitwise-compatible contract.
+    A traced `wbeta` (the live_w*beta smoothing of a capacity-laddered
+    run, DESIGN.md §12) folds into the phi_tot argument with the kernel's
+    static wbeta pinned at 1.0 (the unit offset keeps padded lanes'
+    denominator nonzero); the kernel itself needs no new code.
     """
     D, L = batch.word_ids.shape
     K = mu.shape[-1]
     layout = layout or batch.token_layout()
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
+    if wbeta is None:
+        wb_static = cfg.vocab_size * cfg.beta
+    else:
+        phi_tot, wb_static = phi_tot + (wbeta - 1.0), 1.0
 
     counts_t = layout.counts                                       # [T, 1]
     mu_t = mu.reshape(-1, K)
@@ -60,7 +69,7 @@ def dense_sweep_pallas(batch: MiniBatch, mu: jnp.ndarray,
 
     mu_new_t, r_t = bp_update_tokens(
         counts_t, mu_t, theta_t, phi_t, phi_tot_p,
-        alpha=cfg.alpha, beta=cfg.beta, wbeta=cfg.vocab_size * cfg.beta)
+        alpha=cfg.alpha, beta=cfg.beta, wbeta=wb_static)
 
     mu_new = mu_new_t[:T0, :K].reshape(D, L, K)
     r_tok = r_t[:T0, :K].reshape(D, L, K)

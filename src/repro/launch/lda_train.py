@@ -26,6 +26,13 @@ consumes the stream with:
     CPU tests/benchmarks) or under ``shard_map`` on the production mesh
     (``--backend shard_map`` — the dryrun cell's per-shard body, shared
     via `make_mesh_shard_fn`, not forked).
+  - **dynamic vocabulary** (``--dynamic-vocab``, DESIGN.md §12): the
+    stream's vocabulary drifts; external word keys map to phi rows
+    through an append-only ``VocabMap``, phi_acc is allocated on a
+    geometric W capacity ladder and grows (``grow_state``) when the live
+    vocabulary crosses a rung — compiles stay bounded by
+    #rungs x #buckets, growth events are checkpoint-fenced, and
+    crash-resume reproduces the grown trajectory exactly.
 
   PYTHONPATH=src python -m repro.launch.lda_train --shards 4 --sync power \
       --minibatches 24 --ckpt-dir /tmp/lda_ck --crash-at 10
@@ -59,8 +66,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "(single-compile baseline for BENCH_e2e)")
     ap.add_argument("--prefetch", type=int, default=2)
     # model
-    ap.add_argument("--vocab", type=int, default=500)
+    ap.add_argument("--vocab", type=int, default=500,
+                    help="vocabulary size (dynamic mode: the INITIAL "
+                         "external vocabulary of the drifting stream)")
     ap.add_argument("--topics", type=int, default=16)
+    # dynamic vocabulary (DESIGN.md §12)
+    ap.add_argument("--dynamic-vocab", action="store_true",
+                    help="treat W as a managed runtime dimension: the "
+                         "stream's vocabulary drifts, rows are assigned "
+                         "through a VocabMap, and phi grows along the "
+                         "capacity ladder (--backend sim only)")
+    ap.add_argument("--vocab-growth-per-batch", type=int, default=24,
+                    help="external words entering circulation per "
+                         "mini-batch (drifting synthetic stream)")
+    ap.add_argument("--w-cap-min", type=int, default=64,
+                    help="first W capacity rung")
+    ap.add_argument("--w-growth", type=float, default=2.0,
+                    help="geometric W ladder factor")
     ap.add_argument("--lambda-w", type=float, default=0.1)
     ap.add_argument("--lambda-k", type=int, default=8)
     ap.add_argument("--inner-iters", type=int, default=12)
@@ -109,7 +131,7 @@ def _csv_ints(s: str):
     return tuple(int(x) for x in str(s).split(",") if str(x).strip())
 
 
-def _build_cfg(args):
+def _build_cfg(args, vocab_size=None):
     from repro.core.types import LDAConfig
     buckets = tuple(sorted(_csv_ints(args.len_buckets)))
     if any(b % 8 for b in buckets):
@@ -117,7 +139,8 @@ def _build_cfg(args):
         # would warm up a shape the stream never produces and break the
         # compiles <= #buckets contract
         raise ValueError(f"--len-buckets must be multiples of 8: {buckets}")
-    return LDAConfig(vocab_size=args.vocab, num_topics=args.topics,
+    return LDAConfig(vocab_size=vocab_size or args.vocab,
+                     num_topics=args.topics,
                      lambda_w=args.lambda_w, lambda_k_abs=args.lambda_k,
                      inner_iters=args.inner_iters, residual_tol=args.tol,
                      sync_dtype=args.sync_dtype, impl=args.impl,
@@ -163,6 +186,42 @@ def synthetic_stream(args, buckets, start_m: int, stacked: bool):
     return gen
 
 
+def drifting_stream(args, buckets, start_m: int, stacked: bool, vocab):
+    """Deterministic drifting-vocabulary stream (DESIGN.md §12).
+
+    Batch m draws from the first ``vocab + growth*m`` EXTERNAL word ids
+    (counter-based per-word topic scores — a pure function of (seed, m)),
+    then admits them through `vocab` in generation order; the per-batch
+    live_w snapshot is taken right after admission, so it is deterministic
+    however far the prefetch thread runs ahead.  Resume replays: a vocab
+    restored from the checkpoint prefix re-admits known words as no-ops,
+    and new admissions continue at the same rows.
+    Yields (MiniBatch, host_token_count, live_w).
+    """
+    from repro.data.batching import bucket_len, docs_to_padded, stack_shards
+    from repro.data.synthetic import drifting_vocab_docs
+
+    means = _csv_ints(args.doc_len_means)
+    cache: Dict[str, Any] = {}
+
+    def gen():
+        for m in range(start_m, args.minibatches):
+            active = args.vocab + args.vocab_growth_per_batch * m
+            docs, _ = drifting_vocab_docs(
+                args.seed, m, args.docs_per_batch, active, args.topics,
+                doc_len_mean=means[m % len(means)], score_cache=cache)
+            docs = vocab.map_docs(docs, admit=True)
+            live = vocab.live
+            nat = max(len(ids) for ids, _ in docs)
+            L = buckets[-1] if args.fixed_len else bucket_len(nat, buckets)
+            mb = docs_to_padded(docs, max_len=L)
+            if stacked:
+                mb = stack_shards(mb, args.shards)
+            yield mb, float(mb.counts.sum()), live
+
+    return gen
+
+
 def _eval_split(args):
     from repro.data.batching import docs_to_padded, train_test_split_counts
     from repro.data.synthetic import lda_corpus_from_phi
@@ -173,6 +232,22 @@ def _eval_split(args):
                                   doc_len_mean=40)
     train, test = train_test_split_counts(docs, args.seed)
     return docs_to_padded(train), docs_to_padded(test)
+
+
+def _eval_split_dynamic(args):
+    """Held-out docs for the drifting stream, in EXTERNAL id space.
+
+    Drawn from the batch-0 active prefix with a disjoint batch counter, so
+    the split never mutates the training vocabulary; each eval call remaps
+    through the vocab with OOV words routed to the first guard row, where
+    the live-masked phi normalization gives them the beta-prior mass.
+    """
+    from repro.data.batching import train_test_split_counts
+    from repro.data.synthetic import drifting_vocab_docs
+
+    docs, _ = drifting_vocab_docs(args.seed, 987_654_321, args.eval_docs,
+                                  args.vocab, args.topics, doc_len_mean=40)
+    return train_test_split_counts(docs, args.seed)
 
 
 def _make_mesh(args):
@@ -227,7 +302,8 @@ def _state_tree(state) -> Dict[str, Any]:
 _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
                 "lambda_w", "lambda_k", "inner_iters", "tol", "sync_dtype",
                 "impl", "docs_per_batch", "doc_len_means", "len_buckets",
-                "fixed_len")
+                "fixed_len", "dynamic_vocab", "vocab_growth_per_batch",
+                "w_cap_min", "w_growth")
 
 
 def _run_signature(args) -> Dict[str, Any]:
@@ -274,15 +350,22 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     example uses it for RSS tracking); `diag` values are device scalars —
     converting them forces a sync, so hooks should do that sparingly.
     """
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
     from repro.core import perplexity
-    from repro.core.pobp import DiagBuffer, init_train_state, make_train_step
+    from repro.core.pobp import (DiagBuffer, grow_state, init_train_state,
+                                 make_train_step)
     from repro.core.types import LDATrainState
     from repro.data.batching import prefetched
+    from repro.data.vocab import VocabMap, next_capacity
     from repro.dist import checkpoint as ckpt
 
-    cfg, buckets = _build_cfg(args)
+    dynamic = bool(getattr(args, "dynamic_vocab", False))
+    if dynamic and args.backend != "sim":
+        raise ValueError("--dynamic-vocab currently requires --backend sim "
+                         "(shard_map growth is on the ROADMAP backlog)")
     sync_dtype = jnp.bfloat16 if args.sync_dtype == "bfloat16" else jnp.float32
 
     if args.crash_at and not args.ckpt_dir:
@@ -294,11 +377,26 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
               f"checkpoint (--ckpt-every {args.ckpt_every}); the rerun will "
               f"restart from scratch and crash again", flush=True)
 
+    # dynamic mode: the capacity rung must be known BEFORE the restore
+    # template can be built, so peek at the manifest extra first (§12).
+    vocab = VocabMap()
+    live_done = 0            # live vocab as of the last CONSUMED batch
+    w_cap = next_capacity(0, 0, args.w_cap_min, args.w_growth)
+    if dynamic and args.ckpt_dir:
+        peeked = ckpt.peek_extra(args.ckpt_dir)
+        if peeked is not None and "dyn" in peeked[0]:
+            dyn = peeked[0]["dyn"]
+            w_cap = int(dyn["w_cap"])
+            live_done = int(dyn["live_w"])
+            vocab = VocabMap(dyn["vocab_keys"])
+
+    cfg, buckets = _build_cfg(args, vocab_size=w_cap if dynamic else None)
     state = init_train_state(cfg, args.seed)
     start_m = 0
     if args.ckpt_dir:
         try:
-            got = ckpt.restore_latest(args.ckpt_dir, _state_tree(state))
+            got = ckpt.restore_latest(args.ckpt_dir, _state_tree(state),
+                                      grow_rows=("phi_acc",))
         except ValueError as e:
             raise ValueError(
                 f"cannot restore checkpoint from {args.ckpt_dir} ({e}); it "
@@ -324,34 +422,50 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                       f"(raise --minibatches or use a fresh --ckpt-dir)",
                       flush=True)
 
-    if args.backend == "sim":
-        step_fn, meter = make_train_step(cfg, args.shards, args.sync,
-                                         sync_dtype)
-    else:
+    def build_step(cfg):
+        if args.backend == "sim":
+            return make_train_step(cfg, args.shards, args.sync, sync_dtype)
         mesh = _make_mesh(args)
-        step_fn, meter = make_shardmap_train_step(cfg, mesh, args.sync,
-                                                  sync_dtype)
+        return make_shardmap_train_step(cfg, mesh, args.sync, sync_dtype)
 
-    stream = prefetched(
-        synthetic_stream(args, buckets, start_m, stacked=(args.backend == "sim")),
-        args.prefetch)
-
-    _COMPILE_CLOCK.ensure_registered()
-    warmup_s = 0.0
-    if args.warmup_buckets:
+    def warm_buckets(step_fn, cfg):
         # AOT warmup: push an all-padding batch of every bucket shape
         # through the step on a throwaway state, so the stream never stalls
-        # on a mid-run compile (startup cost, not steady-state cost).
-        t0 = time.time()
+        # on a mid-run compile (startup cost, not steady-state cost).  The
+        # dynamic variant warms with a live_w argument so the compiled
+        # program is the one the stream will actually run.
         scratch = init_train_state(cfg, args.seed)
         for L in (buckets[-1:] if args.fixed_len else buckets):
             if args.backend == "sim" and args.shards > 1:
                 shape = (args.shards, args.docs_per_batch // args.shards, L)
             else:
                 shape = (args.docs_per_batch, L)
-            scratch, _ = step_fn(scratch, jnp.zeros(shape, jnp.int32),
-                                 jnp.zeros(shape, jnp.float32))
+            zargs = (jnp.zeros(shape, jnp.int32), jnp.zeros(shape, jnp.float32))
+            if dynamic:
+                scratch, _ = step_fn(scratch, *zargs,
+                                     jnp.asarray(1, jnp.int32))
+            else:
+                scratch, _ = step_fn(scratch, *zargs)
         jax.block_until_ready(scratch.phi_acc)
+
+    step_fn, meter = build_step(cfg)
+
+    if dynamic:
+        stream = prefetched(
+            drifting_stream(args, buckets, start_m,
+                            stacked=(args.backend == "sim"), vocab=vocab),
+            args.prefetch)
+    else:
+        stream = prefetched(
+            synthetic_stream(args, buckets, start_m,
+                             stacked=(args.backend == "sim")),
+            args.prefetch)
+
+    _COMPILE_CLOCK.ensure_registered()
+    warmup_s = 0.0
+    if args.warmup_buckets:
+        t0 = time.time()
+        warm_buckets(step_fn, cfg)
         warmup_s = time.time() - t0
 
     # per-batch diagnostics: device scalars buffered and flushed to host
@@ -364,17 +478,79 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     def heldout():
         nonlocal eval_split
         if eval_split is None:  # built once, reused by every eval
-            eval_split = _eval_split(args)
+            eval_split = (_eval_split_dynamic(args) if dynamic
+                          else _eval_split(args))
         return eval_split
+
+    def eval_ppl():
+        from repro.data.batching import docs_to_padded
+        tr, te = heldout()
+        if not dynamic:
+            return perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
+                                       state.phi_acc, tr, te, cfg)
+        # dynamic: the raw split lives in external-id space — remap it at
+        # the CURRENT vocabulary (lookup only, OOV -> first guard row,
+        # where the live-masked phi gives the beta-prior mass)
+        tr_b = docs_to_padded(vocab.map_docs(tr, admit=False,
+                                             oov_row=live_done))
+        te_b = docs_to_padded(vocab.map_docs(te, admit=False,
+                                             oov_row=live_done))
+        return perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
+                                   state.phi_acc, tr_b, te_b, cfg,
+                                   live_w=live_done)
+
+    def dyn_extra(next_m: int, live: int) -> Dict[str, Any]:
+        extra = {"next_m": next_m, "run": _run_signature(args)}
+        if dynamic:
+            extra["dyn"] = {"w_cap": cfg.vocab_size, "live_w": live,
+                            "vocab_keys": vocab.keys_upto(live)}
+        return extra
 
     tokens = 0.0
     eval_compile_s = 0.0
+    growth_s = 0.0
+    growth_events = []
+    compiles_prev = 0
     compile_s0 = _COMPILE_CLOCK.total
     t0 = time.time()
-    for m, (batch, ntok) in enumerate(stream, start=start_m):
-        state, diag = step_fn(state, batch.word_ids, batch.counts)
+    for m, item in enumerate(stream, start=start_m):
+        if dynamic:
+            batch, ntok, live_b = item
+        else:
+            (batch, ntok), live_b = item, None
+        if dynamic and live_b >= cfg.vocab_size:
+            # capacity-rung crossing: fence the async pipeline, pad the
+            # carry to the next rung (guard rows), rebuild + rewarm the
+            # step, and checkpoint the grown state so a crash right here
+            # resumes cleanly on the new rung (§12).  live_done (the
+            # pre-growth prefix) is what the fence persists — this batch
+            # has not been consumed yet.
+            jax.block_until_ready(state.phi_acc)
+            t_g = time.time()
+            new_cap = next_capacity(live_b, cfg.vocab_size,
+                                    args.w_cap_min, args.w_growth)
+            state = grow_state(state, new_cap)
+            compiles_prev += max(_compiles(step_fn), 0)
+            cfg = dataclasses.replace(cfg, vocab_size=new_cap)
+            step_fn, meter = build_step(cfg)
+            if args.warmup_buckets:
+                warm_buckets(step_fn, cfg)
+            if args.ckpt_dir:
+                ckpt.save(args.ckpt_dir, m, _state_tree(state),
+                          extra=dyn_extra(m, live_done))
+            growth_s += time.time() - t_g
+            growth_events.append({"m": m, "w_cap": new_cap, "live_w": live_b})
+            print(f"minibatch {m + 1:5d}  [grow] live_w={live_b} -> "
+                  f"W_cap={new_cap}", flush=True)
+        if dynamic:
+            state, diag = step_fn(state, batch.word_ids, batch.counts,
+                                  jnp.asarray(live_b, jnp.int32))
+        else:
+            state, diag = step_fn(state, batch.word_ids, batch.counts)
         buf.append(diag["mean_r"], diag["iters"])
         tokens += ntok
+        if live_b is not None:
+            live_done = live_b
         step_no = m + 1
         if args.log_every and step_no % args.log_every == 0:
             # the ONLY recurring host sync, amortized over --log-every batches
@@ -382,12 +558,11 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             print(f"minibatch {step_no:5d}  mean_r={float(diag['mean_r']):.4f}"
                   f"  iters={int(diag['iters']):3d}"
                   f"  tokens/s={tokens / max(dt, 1e-9):,.0f}"
-                  f"  compiles={_compiles(step_fn)}", flush=True)
+                  f"  compiles={compiles_prev + _compiles(step_fn)}",
+                  flush=True)
         if args.eval_every and step_no % args.eval_every == 0:
             c_eval = _COMPILE_CLOCK.total
-            tr_b, te_b = heldout()
-            ppl = perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
-                                      state.phi_acc, tr_b, te_b, cfg)
+            ppl = eval_ppl()
             eval_compile_s += _COMPILE_CLOCK.total - c_eval
             ppl_trace.append((step_no, float(ppl)))
             print(f"minibatch {step_no:5d}  held-out ppl={ppl:.2f}", flush=True)
@@ -400,31 +575,32 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
         if args.ckpt_dir and args.ckpt_every and \
                 step_no % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, step_no, _state_tree(state),
-                      extra={"next_m": step_no,
-                             "run": _run_signature(args)})
+                      extra=dyn_extra(step_no, live_done))
 
     jax.block_until_ready(state.phi_acc)
     wall = time.time() - t0
     # step-function compiles only: eval jits are accounted separately
     compile_s = _COMPILE_CLOCK.total - compile_s0 - eval_compile_s
 
-    tr_b, te_b = heldout()
-    ppl = float(perplexity.evaluate(jax.random.PRNGKey(args.seed + 1),
-                                    state.phi_acc, tr_b, te_b, cfg))
+    ppl = float(eval_ppl())
     rows = buf.rows()
     mean_r = [float(r) for r, _ in rows]
     iters = [int(i) for _, i in rows]
-    return {
+    # steady-state throughput: mid-stream rung growth (compile + rewarm +
+    # fence) is a bounded startup-like cost, excluded the same way the
+    # pre-loop warmup is; wall_s still reports the inclusive time.
+    steady_s = max(wall - growth_s, 1e-9)
+    result = {
         "first_m": start_m,
         "mean_r": mean_r,
         "iters": iters,
-        "compiles": _compiles(step_fn),
+        "compiles": compiles_prev + _compiles(step_fn),
         "len_buckets": list(buckets),
         "tokens": tokens,
         "wall_s": wall,
         "warmup_s": warmup_s,
         "compile_s": compile_s,
-        "tokens_per_s": tokens / max(wall, 1e-9),
+        "tokens_per_s": tokens / steady_s,
         "ppl": ppl,
         "ppl_trace": ppl_trace,
         "bytes_by_phase": dict(meter.bytes_by_phase),
@@ -432,6 +608,18 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                                 if iters else 0),
         "phi_acc": np.asarray(state.phi_acc),
     }
+    if dynamic:
+        result.update(
+            w_cap=cfg.vocab_size,
+            live_w=live_done,
+            growth_s=growth_s,
+            growth_events=growth_events,
+            vocab_keys=vocab.keys_upto(live_done),
+            bytes_by_phase_live=dict(meter.bytes_by_phase_at(live_done)),
+            per_minibatch_bytes_live=(
+                meter.per_minibatch_bytes(iters[-1], live_w=live_done)
+                if iters else 0))
+    return result
 
 
 def main(argv=None):
@@ -452,6 +640,11 @@ def main(argv=None):
           f"(+{res['compile_s']:.1f}s in-stream compile)")
     print(f"[comm] per-minibatch bytes={res['per_minibatch_bytes']:,} "
           f"(phases: {res['bytes_by_phase']})")
+    if args.dynamic_vocab:
+        print(f"[vocab] live_w={res['live_w']}  W_cap={res['w_cap']}  "
+              f"growths={len(res['growth_events'])} "
+              f"({res['growth_s']:.1f}s)  per-minibatch bytes at live W="
+              f"{res['per_minibatch_bytes_live']:,}")
     return res
 
 

@@ -43,8 +43,8 @@ def serve_lda(args):
         seed=args.seed)
     cfg = engine.cfg
     print(f"[load] phi[{cfg.vocab_size}, {cfg.num_topics}] from "
-          f"{args.ckpt_dir}  (warmup {engine.warmup_s:.2f}s, "
-          f"buckets {engine.len_buckets})")
+          f"{args.ckpt_dir}  (live vocab {engine.live_words}, "
+          f"warmup {engine.warmup_s:.2f}s, buckets {engine.len_buckets})")
 
     # synthetic request stream with variable document lengths — stands in
     # for the production ingress; every submit is non-blocking
@@ -69,6 +69,7 @@ def serve_lda(args):
           f"p50={s['latency_p50_s'] * 1e3:.1f}ms  "
           f"p99={s['latency_p99_s'] * 1e3:.1f}ms  "
           f"mean fold iters={s['mean_fold_iters']:.1f}  "
+          f"oov rate={s['oov_rate']:.3f}  "
           f"compiles={s['compiles']} (<= {len(s['len_buckets'])} buckets)")
     if s["bytes_by_phase"]:
         print(f"[comm] per-request bytes={s['per_request_bytes']:,.0f} "

@@ -20,7 +20,13 @@ Architecture — every piece reuses the training stack, none forks it:
   - **accounting**: the `CommMeter` threaded through the fold-in reducers
     bills the per-iteration renormalization/residual psums of a
     topic-sharded phi, so `stats()` reports bytes-per-request next to
-    p50/p99 latency and docs/s.
+    p50/p99 latency and docs/s;
+  - **OOV admission** (DESIGN.md §12): unknown or out-of-range words are
+    folded in through a guard row carrying the beta-prior mass — a
+    request containing words the model never trained on returns a finite
+    theta (never an exception), with the OOV token rate reported in
+    `stats()` and per result.  ``from_checkpoint`` picks up the vocab
+    table and live size a dynamic-vocabulary driver checkpoint carries.
 """
 
 from __future__ import annotations
@@ -50,12 +56,13 @@ class ServeResult:
     bucket: int                    # L bucket that admitted the request
     iters: int                     # fold-in sweeps the batch ran
     mean_r: float                  # batch residual at exit
+    oov_tokens: float = 0.0        # token mass folded in via the OOV row
 
 
 @dataclasses.dataclass
 class _Dispatch:
     bucket: int
-    reqs: List[Tuple[int, float]]           # (req_id, t_submit) real docs only
+    reqs: List[Tuple[int, float, float]]    # (req_id, t_submit, oov_tokens)
     theta: jnp.ndarray                      # device future [D, K]
     iters: jnp.ndarray                      # device scalar
     mean_r: jnp.ndarray                     # device scalar
@@ -70,6 +77,19 @@ class FoldInEngine:
     topic-sharded phi ([N, W, K/N] internally) with psum'd renormalization
     under the vmap simulation — bit-identical collectives to a model-axis
     mesh, metered per batch.
+
+    **OOV admission** (DESIGN.md §12): a serving process must never crash
+    or silently corrupt on an unseen word.  `live_words` marks rows
+    [live_words, W) of phi as guard rows (a dynamic-vocabulary
+    checkpoint); when absent, one guard row is appended.  phi is
+    normalized over the live rows only and every guard row carries the
+    beta-prior mass beta/denom — the posterior of one unseen word — so
+    folding an OOV token in is exact smoothed-LDA math, not a clamp.
+    Incoming word ids are translated through `vocab` (an external-key
+    ``data.vocab.VocabMap``, lookup only) when given, else range-checked;
+    unknown/out-of-range words route to the first guard row and their
+    token mass is reported as ``oov_rate`` in ``stats()`` and
+    ``oov_tokens`` per result.
     """
 
     def __init__(self, phi_acc, cfg: LDAConfig, *,
@@ -78,7 +98,8 @@ class FoldInEngine:
                  residual_tol: float = 1e-2, topic_shards: int = 1,
                  sync_dtype=None, normalized: bool = False,
                  impl: Optional[str] = None, seed: int = 0,
-                 warmup: bool = True):
+                 warmup: bool = True, vocab=None,
+                 live_words: Optional[int] = None):
         self.len_buckets = tuple(sorted(int(b) for b in len_buckets))
         if any(b % 8 for b in self.len_buckets):
             raise ValueError(f"len_buckets must be multiples of 8 "
@@ -96,15 +117,39 @@ class FoldInEngine:
         self.batch_docs = int(batch_docs)
         self.fold_iters = int(fold_iters)
         self.residual_tol = float(residual_tol)
-        phi_norm = (jnp.asarray(phi_acc) if normalized
-                    else perplexity.normalize_phi(jnp.asarray(phi_acc),
-                                                  cfg.beta))
+        phi_in = jnp.asarray(phi_acc)
+        self.live_words = (int(live_words) if live_words is not None
+                           else int(phi_in.shape[0]))
+        if not 0 < self.live_words <= phi_in.shape[0]:
+            # live_words=0 (a checkpoint fenced before any admission) is
+            # rejected too: there is no trained row to serve from
+            raise ValueError(f"live_words={live_words} outside phi's "
+                             f"{phi_in.shape[0]} rows")
+        if self.live_words == phi_in.shape[0]:
+            # guarantee a guard row to serve OOV words from (appended rows
+            # are zero statistic == pure beta prior after normalization)
+            phi_in = jnp.concatenate(
+                [phi_in, jnp.zeros((1, phi_in.shape[1]), phi_in.dtype)])
+        self._oov_row = self.live_words
+        self._vocab = vocab
+        if normalized:
+            # caller-normalized phi: guard rows fall back to the uniform
+            # topic prior (no statistic left to derive beta/denom from)
+            guard = jnp.arange(phi_in.shape[0])[:, None] >= self.live_words
+            phi_norm = jnp.where(guard, 1.0 / phi_in.shape[1], phi_in)
+        else:
+            phi_norm = perplexity.normalize_phi(phi_in, cfg.beta,
+                                                live_w=self.live_words)
+        # the step's compiled W (and the Pallas guard-row index) is the
+        # padded serving capacity, not the user-visible cfg.vocab_size
+        self._cfg = dataclasses.replace(cfg, vocab_size=phi_norm.shape[0])
         self._phi = infer.split_topic_shards(phi_norm, topic_shards)
         self._step, self.meter = infer.make_fold_in_step(
-            cfg, fold_iters=self.fold_iters, residual_tol=self.residual_tol,
-            topic_shards=topic_shards, sync_dtype=sync_dtype, impl=impl)
+            self._cfg, fold_iters=self.fold_iters,
+            residual_tol=self.residual_tol, topic_shards=topic_shards,
+            sync_dtype=sync_dtype, impl=impl)
         self._key = jax.random.PRNGKey(seed)
-        self._queues: Dict[int, List[Tuple[int, tuple, float]]] = {
+        self._queues: Dict[int, List[Tuple[int, tuple, float, float]]] = {
             b: [] for b in self.len_buckets}
         self._pending: List[_Dispatch] = []
         self._next_id = 0
@@ -112,6 +157,8 @@ class FoldInEngine:
         self._iters_sum = 0
         self._latencies: List[float] = []
         self._served = 0
+        self._oov_tokens = 0.0
+        self._total_tokens = 0.0
         self._t_first: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self.warmup_s = 0.0
@@ -125,26 +172,65 @@ class FoldInEngine:
         """Checkpoint-to-serve: load phi (and, when `cfg` is omitted, the
         model geometry from the driver's saved run signature) and build an
         engine — no training carry ever touches the serving process."""
+        from repro.data.vocab import VocabMap
         from repro.dist import checkpoint as ckpt
 
         phi_acc, extra, _ = ckpt.restore_phi(ckpt_dir, step=step,
                                              sharding=sharding)
+        dyn = extra.get("dyn")
+        if dyn is not None:
+            # dynamic-vocabulary checkpoint: pick up the vocab table and
+            # live size saved with phi — rows above live_w are guard rows
+            kw.setdefault("live_words", int(dyn["live_w"]))
+            if dyn.get("vocab_keys") is not None:
+                kw.setdefault("vocab", VocabMap(dyn["vocab_keys"]))
         if cfg is None:
             run = extra.get("run", {})
-            if "vocab" not in run or "topics" not in run:
-                raise ValueError(
-                    f"checkpoint extra carries no run signature "
-                    f"({sorted(run)}); pass cfg= explicitly")
-            # carry every saved knob the fold-in body reads: impl routes
-            # the jnp vs Pallas path, sync_dtype the reducer payload width
-            cfg = LDAConfig(vocab_size=int(run["vocab"]),
-                            num_topics=int(run["topics"]),
+            # geometry comes from phi itself (always right, including the
+            # capacity rung of a dynamic checkpoint); the saved run
+            # signature only routes the knobs the fold-in body reads —
+            # impl (jnp vs Pallas) and sync_dtype (reducer payload width)
+            if not run:
+                import warnings
+                warnings.warn(
+                    f"checkpoint in {ckpt_dir!r} carries no run signature; "
+                    f"serving with impl='jnp' sync_dtype='float32' — pass "
+                    f"cfg= if the model was trained with other knobs",
+                    stacklevel=2)
+            cfg = LDAConfig(vocab_size=int(phi_acc.shape[0]),
+                            num_topics=int(phi_acc.shape[1]),
                             impl=str(run.get("impl", "jnp")),
                             sync_dtype=str(run.get("sync_dtype",
                                                    "float32")))
         return cls(phi_acc, cfg, **kw)
 
     # ---------------------------------------------------------- admission
+
+    def _admit_doc(self, doc: Tuple[np.ndarray, np.ndarray]
+                   ) -> Tuple[tuple, float]:
+        """Translate a document into live phi rows; never raises on OOV.
+
+        With a vocab table the ids are EXTERNAL keys (lookup only — a
+        serving process must not move the vocabulary); without one they
+        are raw rows, range-checked against the live vocabulary.  Either
+        way unknown words land on the first guard row, whose normalized
+        phi value is the beta-prior mass (finite theta by construction).
+        Returns ((rows, counts), oov_token_mass).
+        """
+        ids, counts = doc
+        counts = np.asarray(counts, np.float32)
+        if self._vocab is not None:
+            rows = self._vocab.rows(
+                ids.tolist() if hasattr(ids, "tolist") else ids,
+                admit=False, oov_row=self._oov_row)
+        else:
+            ids = np.asarray(ids)
+            rows = np.where((ids >= 0) & (ids < self.live_words),
+                            ids, self._oov_row).astype(np.int32)
+        oov = float(counts[rows == self._oov_row].sum())
+        self._oov_tokens += oov
+        self._total_tokens += float(counts.sum())
+        return (rows, counts), oov
 
     def submit(self, doc: Tuple[np.ndarray, np.ndarray],
                req_id: Optional[int] = None) -> int:
@@ -156,9 +242,10 @@ class FoldInEngine:
         now = time.time()
         if self._t_first is None:
             self._t_first = now
+        doc, oov = self._admit_doc(doc)
         b = bucket_len(len(doc[0]), self.len_buckets)
         q = self._queues[b]
-        q.append((req_id, doc, now))
+        q.append((req_id, doc, now, oov))
         if len(q) >= self.batch_docs:
             self._dispatch(b)
         return req_id
@@ -173,14 +260,14 @@ class FoldInEngine:
     def _dispatch(self, bucket: int) -> None:
         q = self._queues[bucket]
         take, self._queues[bucket] = q[:self.batch_docs], q[self.batch_docs:]
-        docs = [doc for _, doc, _ in take]
+        docs = [doc for _, doc, _, _ in take]
         docs += [_EMPTY_DOC] * (self.batch_docs - len(docs))
         mb = docs_to_padded(docs, max_len=bucket)
         self._key, sub = jax.random.split(self._key)
         theta, iters, mean_r = self._step(self._phi, sub,
                                           mb.word_ids, mb.counts)
         self._pending.append(_Dispatch(
-            bucket=bucket, reqs=[(rid, t) for rid, _, t in take],
+            bucket=bucket, reqs=[(rid, t, oov) for rid, _, t, oov in take],
             theta=theta, iters=iters, mean_r=mean_r))
         self._dispatches += 1
 
@@ -212,12 +299,13 @@ class FoldInEngine:
             t_done = time.time()
             iters, mean_r = int(d.iters), float(d.mean_r)
             self._iters_sum += iters
-            for row, (rid, t_sub) in enumerate(d.reqs):
+            for row, (rid, t_sub, oov) in enumerate(d.reqs):
                 lat = t_done - t_sub
                 self._latencies.append(lat)
                 results.append(ServeResult(
                     req_id=rid, theta=theta[row], latency_s=lat,
-                    bucket=d.bucket, iters=iters, mean_r=mean_r))
+                    bucket=d.bucket, iters=iters, mean_r=mean_r,
+                    oov_tokens=oov))
             self._t_last_done = t_done
         self._served += len(results)
         self._pending.clear()
@@ -254,4 +342,7 @@ class FoldInEngine:
             "warmup_s": self.warmup_s,
             "bytes_by_phase": dict(self.meter.bytes_by_phase),
             "per_request_bytes": per_batch_bytes / max(self.batch_docs, 1),
+            "live_words": self.live_words,
+            "oov_rate": (self._oov_tokens / self._total_tokens
+                         if self._total_tokens else 0.0),
         }

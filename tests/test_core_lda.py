@@ -148,6 +148,36 @@ def test_pack_scatter_roundtrip():
                                np.asarray(packed) * 2, rtol=1e-6)
 
 
+def test_tokens_from_batch_matches_loop_reference(corpus):
+    """The np.repeat vectorization of gibbs.tokens_from_batch must emit
+    token arrays identical (order included) to the per-token double loop
+    it replaced — the setup bottleneck of the accuracy benchmark."""
+    from repro.core.gibbs import tokens_from_batch
+
+    def reference(batch):
+        wid = np.asarray(batch.word_ids)
+        cnt = np.asarray(batch.counts).astype(np.int64)
+        docs, words = [], []
+        for d in range(wid.shape[0]):
+            for l in range(wid.shape[1]):
+                c = int(cnt[d, l])
+                if c > 0:
+                    docs.extend([d] * c)
+                    words.extend([int(wid[d, l])] * c)
+        return np.asarray(docs, np.int32), np.asarray(words, np.int32)
+
+    docs, _ = corpus
+    for batch in (docs_to_padded(docs),
+                  docs_to_padded(docs[:3], max_len=8),
+                  MiniBatch(jnp.zeros((2, 4), jnp.int32),
+                            jnp.zeros((2, 4), jnp.float32))):
+        got_d, got_w = tokens_from_batch(batch)
+        ref_d, ref_w = reference(batch)
+        np.testing.assert_array_equal(got_d, ref_d)
+        np.testing.assert_array_equal(got_w, ref_w)
+        assert got_d.dtype == np.int32 and got_w.dtype == np.int32
+
+
 # ----------------------------------------------------- communication claims
 
 def test_comm_bytes_follow_eq5_and_eq6(corpus):

@@ -218,6 +218,46 @@ def test_engine_sharded_phi_bytes_accounted(trained):
     assert s["per_request_bytes"] > 0
 
 
+def test_engine_meter_lifecycle_across_requests_and_reset(trained):
+    """CommMeter lifecycle at the engine layer (guards the PR 2
+    retrace-dedup fix): per-request bytes are identical after one batch
+    and after many — repeated dispatches of an already-compiled shape are
+    cache hits, not retraces, so they must not inflate the totals — and
+    ``reset()`` clears the byte ledger without touching latency stats,
+    with only genuinely new shapes re-recording afterwards."""
+    from repro.serve import FoldInEngine
+
+    docs, phi_acc, _ = trained
+    eng = FoldInEngine(phi_acc, CFG, len_buckets=(32, 64), batch_docs=4,
+                       topic_shards=4, fold_iters=8, residual_tol=0.0,
+                       warmup=False)
+    _submit_all(eng, docs[:4])
+    first = eng.stats()
+    assert first["per_request_bytes"] > 0
+    for _ in range(4):                     # 16 more requests, same bucket
+        _submit_all(eng, docs[:4])
+    many = eng.stats()
+    assert many["served"] == 20
+    assert many["bytes_by_phase"] == first["bytes_by_phase"]
+    assert many["per_request_bytes"] == pytest.approx(
+        first["per_request_bytes"])
+
+    eng.meter.reset()
+    _submit_all(eng, docs[:4])             # cache hit: no trace, no bytes
+    after = eng.stats()
+    assert after["bytes_by_phase"] == {}
+    assert after["served"] == 24           # serving stats keep accumulating
+    assert np.isfinite(after["latency_p50_s"])
+    # a NEW bucket shape compiles -> exactly that section's bytes reappear
+    long_doc = (np.arange(40, dtype=np.int32) % W, np.ones(40, np.float32))
+    _submit_all(eng, [long_doc])
+    rebuilt = eng.stats()["bytes_by_phase"]
+    assert rebuilt and set(rebuilt) == set(first["bytes_by_phase"])
+    # the 64-bucket renorm payload is 2x the 32-bucket one ([T, 1] norm)
+    assert rebuilt["model_norm_loop"] == 2 * first["bytes_by_phase"][
+        "model_norm_loop"]
+
+
 def test_engine_checkpoint_roundtrip(tmp_path, trained):
     """Checkpoint-to-serve: a driver-style checkpoint (state tree + run
     signature) serves without any training carry; restore_phi rejects

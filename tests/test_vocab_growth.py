@@ -1,0 +1,366 @@
+"""Dynamic-vocabulary runtime (ISSUE 4): VocabMap determinism, the W
+capacity ladder, live-W-masked POBP parity, growth-parity of the driver
+(grown-across-rungs == fresh-at-final-rung), crash-resume across a growth
+event, elastic W-reshard on restore, live-W byte accounting, and OOV
+serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LDAConfig, grow_state, init_train_state,
+                        make_train_step, perplexity)
+from repro.data import docs_to_padded, lda_corpus
+from repro.data.vocab import VocabMap, next_capacity
+
+W, K = 120, 8
+
+
+# ------------------------------------------------------------- vocab layer
+
+def test_vocab_map_append_only_and_roundtrip():
+    v = VocabMap()
+    assert v.admit("cat") == 0 and v.admit("dog") == 1
+    assert v.admit("cat") == 0                      # re-admission is a no-op
+    assert v.lookup("dog") == 1 and v.lookup("fox") is None
+    rows = v.rows(["dog", "fox", "cat"], admit=True)
+    np.testing.assert_array_equal(rows, [1, 2, 0])  # first-seen order
+    assert v.keys_upto(2) == ["cat", "dog"]
+    again = VocabMap.from_state(v.to_state())
+    assert again.lookup("fox") == 2 and len(again) == 3
+    # lookup-only mode routes unknowns to the oov row, vocabulary frozen
+    np.testing.assert_array_equal(
+        again.rows(["cat", "wolf"], admit=False, oov_row=99), [0, 99])
+    assert len(again) == 3
+    with pytest.raises(ValueError):
+        VocabMap(["a", "a"])
+
+
+def test_vocab_map_deterministic_across_runs():
+    """Two consumers of the same doc sequence build identical maps — the
+    property growth parity and crash-resume replay stand on."""
+    docs, _, _ = lda_corpus(0, 16, W, K, doc_len_mean=30)
+    ext = [(ids + 1000, cnt) for ids, cnt in docs]   # external-id space
+    a, b = VocabMap(), VocabMap()
+    mapped_a = a.map_docs(ext)
+    mapped_b = b.map_docs(ext)
+    assert a.to_state() == b.to_state()
+    for (ia, ca), (ib, cb) in zip(mapped_a, mapped_b):
+        np.testing.assert_array_equal(ia, ib)
+
+
+def test_next_capacity_ladder():
+    assert next_capacity(0) == 64
+    assert next_capacity(63) == 64
+    assert next_capacity(64) == 128            # strictly greater: guard row
+    assert next_capacity(64, current_cap=64) == 128
+    assert next_capacity(500, current_cap=128) == 512
+    assert next_capacity(10, min_cap=20, multiple=8) == 24
+    with pytest.raises(ValueError):
+        next_capacity(10, growth=1.0)
+
+
+# -------------------------------------------------- live-W core semantics
+
+@pytest.fixture(scope="module")
+def corpus_batch():
+    docs, _, _ = lda_corpus(0, 32, W, K, doc_len_mean=30)
+    return docs_to_padded(docs)
+
+
+@pytest.mark.parametrize("sync_mode", ["power", "dense"])
+def test_live_w_step_matches_fixed_w_step(corpus_batch, sync_mode):
+    """A capacity-laddered step (W_cap > live) with live_w == W must agree
+    with the legacy fixed-W step on the live rows, leave guard rows at
+    exactly zero, and report the same mean_r (lambda_w chosen so the
+    legacy round() and the live floor() power-word counts coincide)."""
+    b = corpus_batch
+    kw = dict(num_topics=K, lambda_w=0.25, lambda_k_abs=4, inner_iters=6,
+              residual_tol=1e-9)
+    cfg_fix = LDAConfig(vocab_size=W, **kw)
+    cfg_dyn = LDAConfig(vocab_size=next_capacity(W), **kw)
+    step_f, _ = make_train_step(cfg_fix, 1, sync_mode, donate=False)
+    step_d, _ = make_train_step(cfg_dyn, 1, sync_mode, donate=False)
+    s_f, d_f = step_f(init_train_state(cfg_fix, 0), b.word_ids, b.counts)
+    s_d, d_d = step_d(init_train_state(cfg_dyn, 0), b.word_ids, b.counts,
+                      jnp.asarray(W, jnp.int32))
+    assert int(d_f["iters"]) == int(d_d["iters"])
+    np.testing.assert_allclose(float(d_f["mean_r"]), float(d_d["mean_r"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_d.phi_acc[:W]),
+                               np.asarray(s_f.phi_acc), rtol=1e-5, atol=1e-6)
+    assert float(jnp.abs(s_d.phi_acc[W:]).max()) == 0.0
+
+
+def test_grow_state_pads_guard_rows(corpus_batch):
+    cfg = LDAConfig(vocab_size=64, num_topics=K)
+    s = init_train_state(cfg, 0)
+    g = grow_state(s, 128)
+    assert g.phi_acc.shape == (128, K)
+    assert int(g.m) == int(s.m)
+    np.testing.assert_array_equal(np.asarray(g.rng), np.asarray(s.rng))
+    assert grow_state(g, 128) is g                 # same rung: no-op
+    with pytest.raises(ValueError):
+        grow_state(g, 64)                          # no eviction/compaction
+
+
+def test_normalize_phi_live_masks_guard_rows():
+    """Guard rows get the beta-prior mass and stay out of the denominator;
+    live_w == W reduces to the legacy formula exactly."""
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.gamma(1.0, size=(20, 4)).astype(np.float32))
+    beta = 0.01
+    legacy = perplexity.normalize_phi(phi, beta)
+    full = perplexity.normalize_phi(phi, beta, live_w=20)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(legacy),
+                               rtol=1e-6)
+    live = 12
+    masked = perplexity.normalize_phi(phi, beta, live_w=live)
+    denom = np.asarray(phi[:live] + beta).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(masked[:live]),
+                               np.asarray(phi[:live] + beta) / denom,
+                               rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(masked[live:]),
+        np.broadcast_to(beta / denom, (phi.shape[0] - live, phi.shape[1])),
+        rtol=1e-5)
+    # live columns normalize to 1 over the live vocabulary
+    np.testing.assert_allclose(np.asarray(masked[:live]).sum(axis=0), 1.0,
+                               atol=1e-5)
+
+
+def test_comm_meter_bills_live_w(corpus_batch):
+    """W-proportional payloads scale to live W in the live accounting —
+    per-minibatch sync bytes follow the vocabulary, not the rung."""
+    b = corpus_batch
+    cap = 512
+    cfg = LDAConfig(vocab_size=cap, num_topics=K, lambda_w=0.25,
+                    lambda_k_abs=4, inner_iters=6, residual_tol=1e-9)
+    step, meter = make_train_step(cfg, 2, donate=False)
+    D, L = b.word_ids.shape
+    wid = b.word_ids.reshape(2, D // 2, L)
+    cnt = b.counts.reshape(2, D // 2, L)
+    _, diag = step(init_train_state(cfg, 0), wid, cnt,
+                   jnp.asarray(W, jnp.int32))
+    by_cap = meter.bytes_by_phase
+    by_live = meter.bytes_by_phase_at(W)
+    # dense phase (full phi + full r) scales exactly with live rows
+    assert by_live["dense"] == by_cap["dense"] * W // cap
+    # packed power buffers scale with W through P = lambda_w * W
+    assert by_live["power"] == by_cap["power"] * W // cap
+    # scalar token-count psum is W-independent
+    assert by_live["tokens"] == by_cap["tokens"]
+    iters = int(diag["iters"])
+    assert meter.per_minibatch_bytes(iters, live_w=W) < \
+        meter.per_minibatch_bytes(iters)
+
+
+# ------------------------------------------------------- driver + parity
+
+def _dyn_args(**over):
+    from repro.launch.lda_train import default_args
+    base = dict(dynamic_vocab=True, minibatches=6, docs_per_batch=16,
+                shards=2, vocab=48, vocab_growth_per_batch=24, w_cap_min=64,
+                w_growth=2.0, topics=K, lambda_k=4, inner_iters=4, tol=1e-9,
+                log_every=0, eval_every=0, len_buckets="16,32",
+                doc_len_means="10,20,30", seed=3)
+    base.update(over)
+    return default_args(**base)
+
+
+@pytest.fixture(scope="module")
+def grown_run():
+    from repro.launch.lda_train import train_loop
+    return train_loop(_dyn_args())
+
+
+def test_growth_parity_with_fresh_run_at_final_rung(grown_run):
+    """ACCEPTANCE (ISSUE 4): a stream that grows W across >= 2 ladder
+    rungs produces the same mean_r trajectory and per-word phi rows (on
+    the shared vocab) as a fresh run started at the final rung — the
+    trajectory depends only on live_w, never on the capacity."""
+    from repro.launch.lda_train import train_loop
+
+    assert len(grown_run["growth_events"]) >= 2, grown_run["growth_events"]
+    fresh = train_loop(_dyn_args(w_cap_min=grown_run["w_cap"]))
+    assert fresh["growth_events"] == []
+    assert fresh["live_w"] == grown_run["live_w"]
+    assert fresh["vocab_keys"] == grown_run["vocab_keys"]
+    np.testing.assert_allclose(fresh["mean_r"], grown_run["mean_r"],
+                               rtol=1e-6, atol=1e-9)
+    lw = grown_run["live_w"]
+    np.testing.assert_allclose(fresh["phi_acc"][:lw],
+                               grown_run["phi_acc"][:lw],
+                               rtol=1e-6, atol=1e-7)
+    # everything above live W is guard rows in both runs
+    assert np.abs(grown_run["phi_acc"][lw:]).max() == 0.0
+
+
+def test_crash_resume_across_growth_event(tmp_path, grown_run):
+    """ACCEPTANCE (ISSUE 4): a --crash-at rerun spanning a growth event
+    reproduces the uninterrupted grown trajectory (vocab table + capacity
+    rung + carry all round-trip through the checkpoint-fenced growth)."""
+    from repro.launch.lda_train import train_loop
+
+    ckdir = str(tmp_path / "ck")
+    # crash after batch 6 of 6: both growth events (m=1, m=4 rungs) and a
+    # regular checkpoint (every 2) land before the failure
+    with pytest.raises(SystemExit):
+        train_loop(_dyn_args(ckpt_dir=ckdir, ckpt_every=2, crash_at=6))
+    resumed = train_loop(_dyn_args(ckpt_dir=ckdir, ckpt_every=2, crash_at=6))
+    assert resumed["first_m"] > 0
+    np.testing.assert_allclose(resumed["mean_r"],
+                               grown_run["mean_r"][resumed["first_m"]:],
+                               rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(resumed["phi_acc"], grown_run["phi_acc"],
+                               rtol=1e-6, atol=1e-7)
+    assert resumed["w_cap"] == grown_run["w_cap"]
+    assert resumed["vocab_keys"] == grown_run["vocab_keys"]
+
+
+def test_vocab_mapped_stream_yields_live_snapshots():
+    from repro.data import vocab_mapped_minibatch_stream
+
+    docs, _, _ = lda_corpus(1, 24, W, K, doc_len_mean=20)
+    ext = [(ids + 7000, cnt) for ids, cnt in docs]
+    v = VocabMap()
+    lives = []
+    for mb, live in vocab_mapped_minibatch_stream(ext, v, 8,
+                                                  len_buckets=(16, 32)):
+        lives.append(live)
+        assert int(mb.word_ids.max()) < live
+    assert lives == sorted(lives)                  # monotone admission
+    assert lives[-1] == len(v)
+
+
+# ------------------------------------------------- elastic W-reshard
+
+def test_restore_grows_phi_rows_across_rungs(tmp_path):
+    from repro.dist import checkpoint as ckpt
+
+    rng = np.random.default_rng(0)
+    phi = rng.normal(size=(64, K)).astype(np.float32)
+    state = {"state": {"phi_acc": jnp.asarray(phi),
+                       "m": jnp.asarray(5, jnp.int32),
+                       "rng": jax.random.PRNGKey(0)}}
+    ckpt.save(str(tmp_path), 5, state,
+              extra={"next_m": 5, "dyn": {"w_cap": 64, "live_w": 50,
+                                          "vocab_keys": list(range(50))}})
+
+    extra, step = ckpt.peek_extra(str(tmp_path))
+    assert step == 5 and extra["dyn"]["w_cap"] == 64
+
+    # restore into a larger rung: rows pad with zeros (guard rows)
+    tmpl = {"state": {"phi_acc": jnp.zeros((128, K)),
+                      "m": jnp.asarray(0, jnp.int32),
+                      "rng": jax.random.PRNGKey(0)}}
+    trees, _, _ = ckpt.restore_latest(str(tmp_path), tmpl,
+                                      grow_rows=("phi_acc",))
+    got = np.asarray(trees["state"]["phi_acc"])
+    np.testing.assert_array_equal(got[:64], phi)
+    assert np.abs(got[64:]).max() == 0.0
+    # without the grow marker the strict shape contract still holds
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_latest(str(tmp_path), tmpl)
+    # shrinking is never allowed
+    small = {"state": {"phi_acc": jnp.zeros((32, K)),
+                       "m": jnp.asarray(0, jnp.int32),
+                       "rng": jax.random.PRNGKey(0)}}
+    with pytest.raises(ValueError):
+        ckpt.restore_latest(str(tmp_path), small, grow_rows=("phi_acc",))
+
+    # the single-leaf serving load resizes too
+    arr, _, _ = ckpt.restore_phi(str(tmp_path), w_cap=256)
+    assert arr.shape == (256, K)
+    np.testing.assert_array_equal(np.asarray(arr[:64]), phi)
+    with pytest.raises(ValueError, match="shrink"):
+        ckpt.restore_phi(str(tmp_path), w_cap=32)
+
+
+def test_phi_serving_spec_valid_under_growth():
+    """The serving spec never shards W, so any capacity rung — including
+    the engine's appended +1 guard row (odd W) — resolves cleanly."""
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import phi_serving_spec
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    for rows in (64, 128, 129):                    # 129: capacity + guard
+        assert phi_serving_spec(mesh, jnp.zeros((rows, K))) == \
+            P(None, "model")
+
+
+# ------------------------------------------------------------ OOV serving
+
+def test_engine_serves_oov_words_finite_theta(grown_run):
+    """ACCEPTANCE (ISSUE 4): a request containing OOV words returns finite
+    theta with the OOV rate reported — never an exception."""
+    from repro.serve import FoldInEngine
+
+    lw, cap = grown_run["live_w"], grown_run["w_cap"]
+    cfg = LDAConfig(vocab_size=cap, num_topics=K)
+    eng = FoldInEngine(jnp.asarray(grown_run["phi_acc"]), cfg,
+                       len_buckets=(16,), batch_docs=2, fold_iters=8,
+                       live_words=lw, warmup=False)
+    assert eng._oov_row == lw
+    eng.submit((np.asarray([0, 3, lw + 5, cap + 999]),
+                np.asarray([1.0, 2.0, 1.0, 1.0], np.float32)))
+    eng.submit((np.asarray([1, 2]), np.ones(2, np.float32)))
+    res = sorted(eng.drain(), key=lambda r: r.req_id)
+    for r in res:
+        assert np.all(np.isfinite(r.theta))
+        np.testing.assert_allclose(r.theta.sum(), 1.0, atol=1e-5)
+    assert res[0].oov_tokens == 2.0 and res[1].oov_tokens == 0.0
+    s = eng.stats()
+    assert s["live_words"] == lw
+    np.testing.assert_allclose(s["oov_rate"], 2.0 / 7.0, rtol=1e-6)
+    # a checkpoint fenced before any admission has nothing to serve from:
+    # live_words=0 must be rejected loudly, not treated as "all rows live"
+    with pytest.raises(ValueError, match="live_words"):
+        FoldInEngine(jnp.asarray(grown_run["phi_acc"]), cfg,
+                     len_buckets=(16,), live_words=0, warmup=False)
+
+
+def test_engine_from_dynamic_checkpoint_picks_up_vocab(tmp_path, grown_run):
+    """from_checkpoint reads the dyn manifest: capacity geometry from phi,
+    live size + vocab table for external-key admission."""
+    from repro.dist import checkpoint as ckpt
+    from repro.serve import FoldInEngine
+
+    lw = grown_run["live_w"]
+    ckpt.save(str(tmp_path), 9,
+              {"state": {"phi_acc": jnp.asarray(grown_run["phi_acc"]),
+                         "m": jnp.asarray(9, jnp.int32),
+                         "rng": jax.random.PRNGKey(0)}},
+              extra={"next_m": 9, "run": {"impl": "jnp"},
+                     "dyn": {"w_cap": grown_run["w_cap"], "live_w": lw,
+                             "vocab_keys": grown_run["vocab_keys"]}})
+    eng = FoldInEngine.from_checkpoint(str(tmp_path), len_buckets=(16,),
+                                       batch_docs=2, fold_iters=6,
+                                       warmup=False)
+    assert eng.cfg.vocab_size == grown_run["w_cap"]
+    assert eng.live_words == lw and eng._vocab is not None
+    known = grown_run["vocab_keys"][:3]
+    eng.submit((np.asarray(known + [10 ** 9]), np.ones(4, np.float32)))
+    (r,) = eng.drain()
+    assert np.all(np.isfinite(r.theta)) and r.oov_tokens == 1.0
+    assert eng.stats()["oov_rate"] == 0.25
+
+
+def test_legacy_engine_clamps_out_of_range_ids(trained_phi=None):
+    """Even without a vocab table or live_words, an id >= W must fold in
+    through the appended guard row instead of corrupting a gather."""
+    from repro.serve import FoldInEngine
+
+    docs, _, true_phi = lda_corpus(0, 8, W, K, doc_len_mean=20)
+    phi_acc = jnp.asarray(true_phi.T) * 100.0
+    eng = FoldInEngine(phi_acc, LDAConfig(vocab_size=W, num_topics=K),
+                       len_buckets=(16,), batch_docs=1, fold_iters=6,
+                       warmup=False)
+    assert eng.live_words == W and eng.cfg.vocab_size == W
+    eng.submit((np.asarray([0, 1, W + 50]), np.ones(3, np.float32)))
+    (r,) = eng.drain()
+    assert np.all(np.isfinite(r.theta)) and r.oov_tokens == 1.0
+    assert eng.stats()["oov_rate"] == pytest.approx(1.0 / 3.0)
