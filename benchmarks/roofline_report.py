@@ -107,6 +107,55 @@ def compare_table(base_recs, opt_recs):
     return "\n".join(rows)
 
 
+def sweep_intensity_rows(T=17280, K=64, Pk=50, P=40, D=216, W=400):
+    """Arithmetic intensity (flop/byte) of one POBP inner iteration per
+    formulation — analytic flop and HBM-byte counts at the given shape
+    (defaults: the BENCH_inner_loop K64_Pk50 cell).
+
+    The point of the table: the carry-resident ``power_sweep_carry``
+    megakernel touches HBM exactly twice per iteration for the [T, K]
+    carry (one read, one write — everything else is VMEM-resident), so
+    its intensity is ~3x the jnp dense-layout formulation and ~4x the
+    dense sweep, i.e. the selective update leaves the memory-bound regime
+    the dense baseline lives in.  Returns [(name, flops, bytes, flop/byte)].
+    """
+    P1, f = P + 1, 4  # guard row; f32 bytes
+    rows = []
+
+    # dense sweep (Eq. 4/5 baseline): full [T, K] update + theta einsum +
+    # two [T, K] -> [W, K] scatters (phi rebuild, residual matrix)
+    flops = 12 * T * K
+    bts = f * (6 * T * K + 2 * W * K)
+    rows.append(("dense sweep", flops, bts))
+
+    # packed formulation: [T, Pk] streams + Pk-term fold-back chain
+    flops = 10 * T * Pk + 2 * T * K * Pk + 2 * T * K
+    bts = f * (3 * T * K + 6 * T * Pk)
+    rows.append(("selective packed (jnp)", flops, bts))
+
+    # dense-layout formulation: masked one-pass [T, K] update, complex-
+    # merged delta/residual scatter
+    flops = 12 * T * K
+    bts = f * (7 * T * K + 2 * P1 * K)
+    rows.append(("selective dense-layout (jnp)", flops, bts))
+
+    # carry-resident megakernel: one HBM read + one write of the carry;
+    # gathers/accumulations are MXU one-hots on VMEM-resident tables
+    flops = 12 * T * K + 2 * T * (P1 + D) * K   # update + one-hot MACs
+    bts = f * (2 * T * K + T * 2 + (2 * P1 + 2 * D) * K)
+    rows.append(("power_sweep_carry megakernel", flops, bts))
+    return [(n, fl, b, fl / b) for n, fl, b in rows]
+
+
+def sweep_intensity_table(T=17280, K=64, Pk=50, P=40, D=216, W=400):
+    rows = ["| formulation | MFLOP/iter | HBM MB/iter | flop/byte |",
+            "|---|---|---|---|"]
+    for name, fl, b, ai in sweep_intensity_rows(T, K, Pk, P, D, W):
+        rows.append(f"| {name} | {fl / 1e6:.1f} | {b / 1e6:.1f} | "
+                    f"{ai:.2f} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__),
@@ -130,6 +179,9 @@ def main():
         print(f"most collective-bound:  {coll['arch']}/{coll['shape']} "
               f"(coll {fmt_s(coll['collective_s'])} vs comp "
               f"{fmt_s(coll['compute_s'])})")
+    print("\n## POBP selective-sweep arithmetic intensity "
+          "(K64_Pk50 cell, per inner iteration)\n")
+    print(sweep_intensity_table())
 
 
 if __name__ == "__main__":

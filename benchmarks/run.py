@@ -292,18 +292,24 @@ def bench_inner_loop(quick=False):
     from repro.core import pobp, power as pw
     from repro.core.residuals import (mean_residual, packed_rw_delta,
                                       token_scatter_wk)
+    from repro.core.sweep_dispatch import resolve_sweep_policy
     from repro.core.sync import LocalReducer
     from repro.data import docs_to_padded
 
     docs, stats, _ = corpus()
     batch = docs_to_padded(list(docs))
     red = LocalReducer()
-    out = {"iters_timed": 30, "parity_iters": 8}
+    out = {"iters_timed": 30, "timing_rounds": 3, "parity_iters": 8}
 
-    # (K, Pk) grid: the K//8 rows match bench_speed's regime; (64, 50) is
-    # the LDAConfig default lambda_k_abs=50 (the paper's lambda_K*K = 50),
-    # where the seed's O(T*Pk) scatters hurt most.
-    grid = [(64, 8)] if quick else [(64, 8), (128, 16), (64, 50)]
+    # (K, Pk) grid crossing the topic count with the power-topic width:
+    # the Pk = K//8 diagonal matches bench_speed's regime and (64, 50) is
+    # the LDAConfig default lambda_k_abs=50 (the paper's lambda_K*K = 50)
+    # — the cell where a K-proportional selective iteration loses to the
+    # dense sweep (the ISSUE 5 regression; quick mode keeps it so CI
+    # guards the fix).
+    grid = ([(64, 8), (64, 50)] if quick
+            else [(64, 8), (128, 8), (128, 16), (64, 50)])
+    gate_failures = []
     for K, Pk_req in grid:
         cfg = base_cfg(num_topics=K, lambda_k_abs=Pk_req,
                        residual_tol=1e-9, inner_iters=8)
@@ -311,6 +317,7 @@ def bench_inner_loop(quick=False):
         Pk = cfg.num_power_topics
         layout = batch.token_layout()
         total_tokens = float(jnp.sum(batch.counts))
+        policy = resolve_sweep_policy(cfg, layout.num_slots, K, Pk, P)
 
         # ---- shared state after the first dense sweep (Fig. 4 lines 3-10)
         key = jax.random.PRNGKey(0)
@@ -337,7 +344,7 @@ def bench_inner_loop(quick=False):
             r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
             return mu, theta, phi_eff, phi_tot, r_glob, jnp.sum(r_glob, 1)
 
-        # ---- token-major packed iteration (the production body)
+        # ---- token-major iteration (the production body, policy-dispatched)
         def token_step(mu_t, theta, phi_eff, phi_tot, r_glob, r_w):
             sel_w = pw.select_power_words(r_w, P)
             sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
@@ -358,39 +365,48 @@ def bench_inner_loop(quick=False):
             return (mu, jnp.einsum("dl,dlk->dk", batch.counts, mu), phi_eff,
                     jnp.sum(phi_eff, 0), r_wk, jnp.sum(r_wk, 1))
 
-        def run_loop(step, st, iters, token_major, record_r=False):
-            carry = (st["mu"].reshape(-1, K) if token_major else st["mu"],
-                     st["theta"], st["phi_eff"], st["phi_tot"],
-                     st["r_glob"], st["r_w"])
+        def run_loop(step, st, iters, token_major, record_r=False,
+                     rounds=1):
+            carry0 = (st["mu"].reshape(-1, K) if token_major else st["mu"],
+                      st["theta"], st["phi_eff"], st["phi_tot"],
+                      st["r_glob"], st["r_w"])
             # NB: no donate_argnums — on CPU, donated carries force XLA into
             # an in-place update path that is ~2x slower than the fused
             # copy-and-update it emits for fresh outputs (both layouts are
             # measured under the same, faster, regime).
             fn = jax.jit(step)
-            carry = fn(*carry)                        # warmup/compile
+            carry = fn(*carry0)                       # warmup/compile
             jax.block_until_ready(carry)
-            trace = [float(mean_residual(carry[-1], total_tokens))]
-            t0 = time.time()
-            for _ in range(iters - 1):
-                carry = fn(*carry)
-                if record_r:
-                    trace.append(float(mean_residual(carry[-1],
-                                                     total_tokens)))
-            jax.block_until_ready(carry)
-            return (time.time() - t0) / (iters - 1), trace
+            best, trace = float("inf"), []
+            for _ in range(rounds):                   # best-of to cut noise
+                carry, trace = tuple(carry0), []
+                t0 = time.time()
+                for _ in range(iters):
+                    carry = fn(*carry)
+                    if record_r:
+                        trace.append(float(mean_residual(carry[-1],
+                                                         total_tokens)))
+                jax.block_until_ready(carry)
+                best = min(best, (time.time() - t0) / iters)
+            return best, trace
 
         iters = out["iters_timed"]
-        rec = {}
+        rounds = out["timing_rounds"]
+        rec = {"policy": policy}
         for name, step, tm in (("seed_layout", seed_step, False),
                                ("token_major", token_step, True),
                                ("dense", dense_step, False)):
-            dt, _ = run_loop(step, state0, iters, tm)
+            dt, _ = run_loop(step, state0, iters, tm, rounds=rounds)
             rec[name] = {"iter_s": dt, "tokens_per_s": total_tokens / dt}
             _emit(f"inner_loop/K{K}_Pk{Pk}/{name}_tokens_per_s",
                   f"{total_tokens / dt:.0f}", f"iter={dt * 1e3:.2f}ms")
         speedup = rec["seed_layout"]["iter_s"] / rec["token_major"]["iter_s"]
+        sel_vs_dense = rec["dense"]["iter_s"] / rec["token_major"]["iter_s"]
         _emit(f"inner_loop/K{K}_Pk{Pk}/token_major_speedup_x", f"{speedup:.2f}",
-              "acceptance: >= 2x at K >= 64")
+              "vs seed layout (acceptance: >= 2x at K >= 64)")
+        _emit(f"inner_loop/K{K}_Pk{Pk}/selective_vs_dense_x",
+              f"{sel_vs_dense:.2f}",
+              f"policy={policy} (acceptance: >= 1 at every cell)")
 
         # ---- convergence parity: identical mean_r trajectories
         n_par = out["parity_iters"]
@@ -398,15 +414,28 @@ def bench_inner_loop(quick=False):
         _, tr_tok = run_loop(token_step, state0, n_par, True, record_r=True)
         drift = max(abs(a - b) for a, b in zip(tr_seed, tr_tok))
         _emit(f"inner_loop/K{K}_Pk{Pk}/mean_r_max_drift", f"{drift:.2e}",
-              "token-major vs seed trajectory (<= 1e-5)")
-        rec.update(speedup_x=speedup, mean_r_seed=tr_seed,
-                   mean_r_token=tr_tok, mean_r_max_drift=drift,
-                   tokens=total_tokens, P=P, Pk=Pk,
+              "token-major vs seed trajectory (<= 1e-6)")
+        rec.update(speedup_x=speedup, selective_vs_dense_x=sel_vs_dense,
+                   mean_r_seed=tr_seed, mean_r_token=tr_tok,
+                   mean_r_max_drift=drift, tokens=total_tokens, P=P, Pk=Pk,
                    T_slots=int(layout.num_slots))
         out[f"K{K}_Pk{Pk}"] = rec
+        # the regression gates this grid exists for: trajectory parity
+        # with the seed oracle, and the selective iteration never losing
+        # to the dense sweep it replaces.  Quick mode (CI) allows 10%
+        # timer noise on sub-second windows; the committed full-grid
+        # artifact is the strict acceptance run.  Failures are collected
+        # and raised AFTER _save so one flaky cell cannot discard the
+        # whole run's measurements.
+        floor = 0.9 if quick else 1.0
+        if drift > 1e-6:
+            gate_failures.append(("drift", K, Pk, drift))
+        if sel_vs_dense < floor:
+            gate_failures.append(("selective_vs_dense", K, Pk, rec))
     # quick mode writes a separate file so a smoke run can never clobber
     # the committed full-grid artifact
     _save("BENCH_inner_loop_quick" if quick else "BENCH_inner_loop", out)
+    assert not gate_failures, gate_failures
 
 
 # ------------------------------------------------------------------

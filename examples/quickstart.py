@@ -58,6 +58,24 @@ def main():
           f"mean fold iters={s['mean_fold_iters']:.1f}")
     print(f"[serve] request 0 top topics: {top.tolist()}")
 
+    # ---- adaptive sweep dispatch (DESIGN.md §2 cost model) -------------
+    # The selective iteration has two algebraically identical
+    # formulations; `sweep_policy="auto"` (the default) picks the cheaper
+    # one per (T, K, Pk, P) from rates measured on THIS machine at trace
+    # time.  Force one to compare — trajectories and sync bytes are
+    # identical either way, only wall-clock moves:
+    import dataclasses
+
+    from repro.core.sweep_dispatch import resolve_sweep_policy
+
+    wide = dataclasses.replace(cfg, lambda_k_abs=50)   # paper's lambda_K*K
+    for c in (cfg, wide):
+        picked = resolve_sweep_policy(c, 100 * 80, c.num_topics,
+                                      c.num_power_topics, c.num_power_words)
+        print(f"[sweep] Pk={c.num_power_topics:3d}: auto policy -> {picked}"
+              "  (force with LDAConfig(sweep_policy=...) or "
+              "lda_train --sweep-policy)")
+
     # ---- vocabulary growth (DESIGN.md §12) -----------------------------
     # Real streams grow their vocabulary after step 0.  A VocabMap assigns
     # external token keys to phi rows append-only (deterministic

@@ -17,11 +17,13 @@ a production artifact:
     so its theta never moves again — and would have moved at most ~tol had
     it kept running); the loop ends when every document is frozen or
     ``iters`` is reached — the serving analogue of Fig. 4 line 26;
-  - **kernel reuse with the phi-update scatter disabled**: the Pallas path
-    feeds the `power_sweep` kernel zero counts (its packed delta/residual
-    outputs are then exactly zero — the training-side phi scatter is dead)
-    and the full vocabulary as the "power" rows, with frozen tokens routed
-    to the guard row so the freeze happens in-kernel;
+  - **kernel reuse with the phi update disabled**: the Pallas path runs
+    the carry-resident `power_sweep_carry` megakernel with
+    ``update_phi=False`` (the training-side packed delta/residual
+    accumulation is dead; the per-doc theta delta and |delta| residual
+    accumulate in-kernel instead) and the full vocabulary as the "power"
+    rows, with frozen tokens routed to the guard row so the freeze
+    happens in-kernel;
   - **topic sharding**: the renormalization and residual reductions go
     through a `Reducer` ("model"-axis psums, byte-metered), so the same
     body serves a topic-sharded phi — the init draws the random field at
@@ -38,8 +40,9 @@ capacity-laddered phi (guard rows above the live vocabulary) folds in
 unchanged.  The live-W masking lives entirely in how phi_norm is built
 (``perplexity.normalize_phi(..., live_w=...)``): guard rows carry the
 beta-prior mass, which is what makes serving's OOV admission exact.
-``cfg.vocab_size`` here is the number of phi rows the step compiles for
-(the serving capacity), used only as the Pallas guard-row index.
+The Pallas path derives its row tables and guard-row index from phi's
+own row count, so no part of the body depends on ``cfg.vocab_size``
+matching the (possibly capacity-grown) phi it serves.
 """
 
 from __future__ import annotations
@@ -125,8 +128,19 @@ def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
 
     use_pallas = impl == "pallas" and isinstance(model_reducer, LocalReducer)
     if use_pallas:
-        from repro.kernels.power_sweep.ops import power_sweep
-        zero_c = jnp.zeros_like(c)              # disables the phi scatter
+        from repro.kernels.power_sweep.ops import power_sweep_carry
+        # constant phi row table for the carry megakernel, built once per
+        # fold-in: every phi row is a "power" row over all topics (the
+        # kernel's update_phi=False mode needs no mask table — selection
+        # is one compare against the appended guard row, which freezes
+        # tokens in-kernel).  Everything derives from phi's OWN row count
+        # so a capacity-grown phi folds in correctly whatever
+        # cfg.vocab_size the caller holds.
+        w_rows = phi_norm_wk.shape[0]
+        phi_rows = jnp.concatenate(
+            [phi_norm_wk, jnp.zeros((1, Kl), phi_norm_wk.dtype)], axis=0)
+        mask_dummy = jnp.zeros((1, Kl), jnp.float32)
+        pt_zero = jnp.zeros((Kl,), jnp.float32)
 
     def active_docs(r_doc, r_prev):
         # geometric-tail bound on the theta movement still to come: with
@@ -148,20 +162,22 @@ def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
         mu_t, theta, r_doc, r_prev, t = carry
         act_tok = active_docs(r_doc, r_prev)[layout.doc_ids]    # [T]
         if use_pallas:
-            # full-vocab "power" rows; frozen tokens hit the guard row, so
-            # the freeze happens in-kernel.  counts == 0 makes the kernel's
-            # packed delta/residual outputs exactly zero (ignored) and the
-            # update pure:  u = (theta - c*mu + alpha) * phi_norm.  With
-            # beta = 0 the packed phi passes through untouched (ph =
-            # phi_norm bit-exactly); the zero pt argument and unit wbeta
-            # make the denominator exactly 1 while keeping the ops-layer
-            # lane padding away from 0/0.
+            # carry-resident megakernel with the phi update disabled
+            # (update_phi=False, kernels/power_sweep): one grid pass does
+            # the theta gather, the pure update u = (theta - c*mu + alpha)
+            # * phi_norm (beta = 0 passes phi through bit-exactly; the
+            # zero pt argument and unit wbeta make the denominator exactly
+            # 1), the fold-back, the per-doc theta delta AND the per-doc
+            # |delta| residual.  Frozen tokens hit the guard row so the
+            # freeze happens in-kernel; the packed delta/residual outputs
+            # are dead on this path.
             p_tok = jnp.where(act_tok, layout.word_ids,
-                              cfg.vocab_size).astype(jnp.int32)
-            th_arg = theta[layout.doc_ids] - c * mu_t
-            mu_new, _, _ = power_sweep(
-                p_tok, zero_c, mu_t, th_arg, jnp.zeros_like(mu_t),
-                phi_norm_wk, alpha=cfg.alpha, beta=0.0, wbeta=1.0)
+                              w_rows).astype(jnp.int32)
+            mu_new, th_delta, _, _, r_local = power_sweep_carry(
+                p_tok, layout.doc_ids, c, mu_t, theta, pt_zero,
+                phi_rows, mask_dummy, alpha=cfg.alpha, beta=0.0, wbeta=1.0,
+                update_phi=False)
+            theta = theta + th_delta
         else:
             th = theta[layout.doc_ids] - c * mu_t + cfg.alpha
             unnorm = th * phi_tok
@@ -170,9 +186,9 @@ def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
                 compress=False)
             mu_new = unnorm / jnp.maximum(norm, 1e-30)
             mu_new = jnp.where(act_tok[:, None], mu_new, mu_t)
-        delta = mu_new - mu_t
-        theta = theta + (c * delta).reshape(D, L, Kl).sum(axis=1)
-        r_local = (c * jnp.abs(delta)).reshape(D, L, Kl).sum(axis=(1, 2))
+            delta = mu_new - mu_t
+            theta = theta + (c * delta).reshape(D, L, Kl).sum(axis=1)
+            r_local = (c * jnp.abs(delta)).reshape(D, L, Kl).sum(axis=(1, 2))
         r_new = model_reducer.psum(r_local, "model_rw_loop", compress=False)
         return mu_new, theta, r_new, r_doc, t + 1
 

@@ -23,15 +23,17 @@ Sync modes:
 
 The power inner loop is **token-major and packed** (DESIGN.md §2): the
 padded-CSR [D, L] batch flattens to a [T, K] token layout once per
-mini-batch, each selective iteration works on [T, Pk] gathers plus the
+mini-batch, each selective iteration works on flat token streams plus the
 [P, Pk] sync buffers, and the word-residual convergence signal is carried
-and updated incrementally in packed form.  The jnp path folds the update
-back into the carried messages with a scatter-free O(T*K*Pk)
-compare-select chain — 4-6x the seed `selective_sweep`'s throughput at
-every measured (K, Pk), though still K-proportional; only the Pallas
-`power_sweep` path truly confines compute to the power submatrix the way
-communication is (Eq. 6).  `selective_sweep` is kept below as the
-oracle/benchmark baseline.
+and updated incrementally in packed form.  The selective iteration has
+two algebraically identical formulations — the [T, Pk] **packed** stream
+with a fold-back chain, and the one-pass [T, K] **dense-layout** masked
+update (the jnp mirror of the carry-resident `power_sweep` megakernel) —
+chosen per shape by ``cfg.sweep_policy`` through the measured cost model
+in `core.sweep_dispatch` (DESIGN.md §2 cost table).  Either way the
+packed [P, Pk] Eq. 6 sync buffers are identical, so the communication
+bill never depends on the compute layout.  `selective_sweep` is kept
+below as the oracle/benchmark baseline.
 """
 
 from __future__ import annotations
@@ -46,6 +48,7 @@ import jax.numpy as jnp
 from repro.core import power as pw
 from repro.core.residuals import (mean_residual, packed_rw_delta,
                                   token_scatter_wk)
+from repro.core.sweep_dispatch import resolve_sweep_policy
 from repro.core.sync import CommMeter, LocalReducer, MeshReducer, Reducer
 from repro.core.types import LDAConfig, LDATrainState, MiniBatch, TokenLayout
 
@@ -191,9 +194,13 @@ def _apply_token_update(layout: TokenLayout, mu_t, theta, k_tok, mu_sel,
     it dominates the sweep.  Instead the delta is accumulated through a
     static compare-select chain over the Pk selected columns — Pk fused
     vectorized passes that XLA folds into a single elementwise loop over
-    the donated carry — and theta's per-doc reduction reuses the same delta
-    via a free [D, L, K] reshape view (no gather/scatter anywhere;
-    DESIGN.md §2 measures both formulations).
+    the donated carry — and theta's per-doc reduction contracts the same
+    delta against the counts in one einsum pass over the free [D, L, K]
+    reshape view (an order of magnitude faster than the reduce_sum it
+    replaces — DESIGN.md §2 cost table).  The true O(T*Pk) theta refresh
+    (`residuals.token_topic_segment_sum`) is what the carry-resident
+    kernel realizes on the MXU; XLA's element scatter loses to the
+    contraction on CPU.
 
     Non-power tokens have d_mu == 0 exactly, so their carry entries are
     bit-identical after the add.
@@ -206,13 +213,14 @@ def _apply_token_update(layout: TokenLayout, mu_t, theta, k_tok, mu_sel,
         delta = delta + jnp.where(iota == k_tok[:, j:j + 1],
                                   d_mu[:, j:j + 1], 0.0)
     mu_t_new = mu_t + delta
-    c_delta = (layout.counts * delta).reshape(
-        layout.num_docs, layout.max_len, K)
-    theta_new = theta + jnp.sum(c_delta, axis=1)
+    counts2 = layout.counts.reshape(layout.num_docs, layout.max_len)
+    theta_new = theta + jnp.einsum(
+        "dl,dlk->dk", counts2,
+        delta.reshape(layout.num_docs, layout.max_len, K))
     return mu_t_new, theta_new, d_mu
 
 
-def selective_sweep_tokens(
+def _selective_sweep_packed(
     layout: TokenLayout,
     mu_t: jnp.ndarray,            # [T, Kl] token-major messages
     theta: jnp.ndarray,           # [Dl, Kl]
@@ -223,7 +231,7 @@ def selective_sweep_tokens(
     cfg: LDAConfig,
     wbeta=None,
 ):
-    """Token-major selective sweep (jnp reference path, DESIGN.md §2).
+    """Packed-stream formulation: [T, Pk] gathers + fold-back chain.
 
     Same math as `selective_sweep` restricted to flat [T, Pk] streams:
     mass-conserving renormalization within the selected coordinates, packed
@@ -254,11 +262,13 @@ def selective_sweep_tokens(
     mu_t_new, theta_new, d_mu = _apply_token_update(
         layout, mu_t, theta, k_tok, mu_sel, mu_new_sel)
     cd, rv = c * d_mu, c * jnp.abs(d_mu)
-    if layout.num_slots * P <= 8_000_000:
+    if layout.num_slots * P <= cfg.onehot_crossover:
         # one-hot contraction (the jnp mirror of the power_sweep kernel's
         # packed accumulation): tokens with p_tok == P match no column and
-        # drop out.  ~5x faster than XLA's serialized scatter on CPU; the
-        # scatter branch below covers shapes where [T, P] would not fit.
+        # drop out.  The row scatter below covers shapes past the
+        # configured crossover, where [T, P] MACs stop paying for
+        # themselves (cfg.onehot_crossover, consumed by the dispatch cost
+        # model in core/sweep_dispatch).
         onehot_p = (p_tok[:, None] ==
                     jnp.arange(P, dtype=p_tok.dtype)[None, :]).astype(mu_t.dtype)
         dims = (((0,), (0,)), ((), ()))
@@ -273,24 +283,171 @@ def selective_sweep_tokens(
     return mu_t_new, theta_new, delta_phi_packed, r_packed
 
 
+def _selective_sweep_dense_layout(
+    layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
+    cfg: LDAConfig, wbeta=None,
+):
+    """One-pass dense-layout formulation: masked [T, K] update, no chain.
+
+    The jnp mirror of the carry-resident `power_sweep_carry` megakernel:
+    the [T, K] carry is read and written exactly once per iteration,
+    whatever Pk is.  A [P+1, K] *signed-phi* row table carries both the
+    packed phi values and the selection in one gather — selected
+    coordinates hold phi >= 0, everything else (and the whole p == P
+    guard row) holds -1 — so the update
+
+        u      = (theta - c mu + alpha)(phi - c mu + beta)
+                 / (phi_tot - c mu + W beta)        where selected, else 0
+        mu'    = u * mass / sum u                    (mass = selected mass)
+
+    is a handful of fused [T, K] passes with u *exactly* zero off the
+    power submatrix and untouched entries bit-identical (`where`, not
+    arithmetic masking).  theta comes back through one counts contraction
+    over the updated carry (theta == einsum(c, mu) is a loop invariant),
+    and the packed [P, Pk] delta/residual buffers accumulate through a
+    single complex-merged row scatter (delta in the real lane, |delta| in
+    the imaginary lane — halves the serialized scatter elements) followed
+    by an O(P*Pk) column pack.  Same contract and packed outputs as
+    `_selective_sweep_packed`.
+    """
+    P, Pk = sel_k.shape
+    Kl = mu_t.shape[1]
+    D, L = layout.num_docs, layout.max_len
+    wb = cfg.vocab_size * cfg.beta if wbeta is None else wbeta
+    p_tok3 = pw.token_power_rows(layout.word_ids, sel_w,
+                                 cfg.vocab_size).reshape(D, L)
+    mask = jnp.zeros((P + 1, Kl), bool).at[
+        jnp.arange(P)[:, None], sel_k].set(True, mode="drop")
+    phi_rows = jnp.concatenate(
+        [jnp.take(phi_eff_wk, sel_w, axis=0),
+         jnp.zeros((1, Kl), mu_t.dtype)], axis=0)                # [P+1, Kl]
+    # sign carries the selection: selected coords hold phi (clamped at 0 —
+    # incremental scatter_add refreshes can take a near-zero statistic a
+    # few ulp negative, which must not flip the encoding), others -1.
+    sphi = jnp.where(mask, jnp.maximum(phi_rows, 0.0), -1.0)
+    sphi_tok = jnp.take(sphi, p_tok3, axis=0)                    # [D, L, Kl]
+    selp = sphi_tok >= 0.0
+
+    mu3 = mu_t.reshape(D, L, Kl)
+    counts2 = layout.counts.reshape(D, L)
+    c3 = counts2[..., None]
+    self_c = c3 * mu3
+    th = theta[:, None, :] - self_c + cfg.alpha
+    ph = sphi_tok - self_c + cfg.beta
+    pt = phi_tot[None, None, :] - self_c + wb
+    u = jnp.where(selp, th * ph / pt, 0.0)
+    mass = jnp.sum(jnp.where(selp, mu3, 0.0), -1, keepdims=True)
+    denom = jnp.maximum(jnp.sum(u, -1, keepdims=True), 1e-30)
+    mu_new = jnp.where(selp, u * (mass / denom), mu3)
+    theta_new = jnp.einsum("dl,dlk->dk", counts2, mu_new)
+    cd = c3 * (mu_new - mu3)
+    zc = jax.lax.complex(cd, jnp.abs(cd)).reshape(layout.num_slots, Kl)
+    rows = jnp.zeros((P + 1, Kl), jnp.complex64).at[
+        p_tok3.reshape(-1)].add(zc)
+    d_pack = jnp.take_along_axis(jnp.real(rows[:P]), sel_k, axis=1)
+    r_pack = jnp.take_along_axis(jnp.imag(rows[:P]), sel_k, axis=1)
+    return (mu_new.reshape(layout.num_slots, Kl),
+            theta_new, d_pack.astype(mu_t.dtype), r_pack.astype(mu_t.dtype))
+
+
+def selective_sweep_tokens(
+    layout: TokenLayout,
+    mu_t: jnp.ndarray,            # [T, Kl] token-major messages
+    theta: jnp.ndarray,           # [Dl, Kl]
+    phi_eff_wk: jnp.ndarray,      # [W, Kl]
+    phi_tot: jnp.ndarray,         # [Kl]
+    sel_w: jnp.ndarray,           # [P]
+    sel_k: jnp.ndarray,           # [P, Pk]
+    cfg: LDAConfig,
+    wbeta=None,
+):
+    """Token-major selective sweep (jnp production path, DESIGN.md §2).
+
+    Dispatches between the packed-stream and dense-layout formulations per
+    (T, K, Pk, P) through ``cfg.sweep_policy`` (resolved at trace time —
+    static per compiled shape, never retraces across mini-batches).  Both
+    produce identical packed [P, Pk] sync buffers and trajectories within
+    float associativity; `theta` must be the doc-topic statistic of the
+    incoming `mu_t` (a loop invariant of every caller).
+    `wbeta` overrides the W*beta smoothing mass (live-W runs, §12).
+
+    Returns (mu_t_new, theta_new, delta_phi_packed, r_packed).
+    """
+    P, Pk = sel_k.shape
+    policy = resolve_sweep_policy(cfg, layout.num_slots, mu_t.shape[1],
+                                  Pk, P, impl="jnp")
+    fn = (_selective_sweep_packed if policy == "packed"
+          else _selective_sweep_dense_layout)
+    return fn(layout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k, cfg,
+              wbeta=wbeta)
+
+
+def _selective_sweep_carry_pallas(
+    layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
+    cfg: LDAConfig, wbeta=None,
+):
+    """Carry-resident megakernel iteration (kernels/power_sweep).
+
+    One grid pass over token tiles: the [TT, K] mu carry tile loads into
+    VMEM once, the packed-phi/mask row tables and theta gather on the MXU
+    (one-hot contractions), the selective update + renorm + fold-back
+    write the carry back once, and the per-doc theta delta plus the
+    [P1, K] delta/residual rows accumulate in VMEM across the whole grid
+    — one HBM read and one write of the carry per iteration.  The small
+    O(P*Pk) column pack happens outside the kernel; the packed [P, Pk]
+    sync payload is identical to the jnp formulations.
+    """
+    from repro.kernels.power_sweep.ops import power_sweep_carry
+
+    P, Pk = sel_k.shape
+    Kl = mu_t.shape[1]
+    p_tok = pw.token_power_rows(layout.word_ids, sel_w, cfg.vocab_size)
+    mask = jnp.zeros((P + 1, Kl), jnp.float32).at[
+        jnp.arange(P)[:, None], sel_k].set(1.0, mode="drop")
+    phi_rows = jnp.concatenate(
+        [jnp.take(phi_eff_wk, sel_w, axis=0), jnp.zeros((1, Kl))], axis=0)
+    if wbeta is None:
+        pt_arg, wb_static = phi_tot, cfg.vocab_size * cfg.beta
+    else:
+        # traced live-W smoothing folds into the phi_tot argument with the
+        # kernel's static wbeta pinned at 1.0 (same trick as core/infer)
+        pt_arg, wb_static = phi_tot + (wbeta - 1.0), 1.0
+    mu_new, theta_delta, d_rows, r_rows, _ = power_sweep_carry(
+        p_tok, layout.doc_ids, layout.counts, mu_t, theta, pt_arg,
+        phi_rows, mask, alpha=cfg.alpha, beta=cfg.beta, wbeta=wb_static,
+        update_phi=True)
+    d_pack = jnp.take_along_axis(d_rows[:P], sel_k, axis=1)
+    r_pack = jnp.take_along_axis(r_rows[:P], sel_k, axis=1)
+    return mu_new, theta + theta_delta, d_pack, r_pack
+
+
 def selective_sweep_tokens_pallas(
     layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
     cfg: LDAConfig, wbeta=None,
 ):
-    """Fused-kernel selective sweep: Pallas power_pack gather + power_sweep.
+    """Fused-kernel selective sweep, policy-dispatched like the jnp path.
 
-    The packed phi gather runs on the scalar-prefetch power_pack kernel;
-    update, renormalization and the packed delta/residual scatter fuse into
-    one power_sweep pass (kernels/power_sweep).  Same contract as
-    `selective_sweep_tokens`.  A traced `wbeta` (live-W runs) folds into
-    the pre-gathered pt argument with the kernel's static wbeta pinned at
-    1.0 — the kernel needs no new code, and the unit offset keeps the
-    ops-layer lane padding away from 0/0 (same trick as core/infer).
+    ``dense_layout`` (the 'auto' resolution on the pallas backend) runs
+    the carry-resident `power_sweep_carry` megakernel — one HBM read +
+    one write of the [T, K] carry per iteration.  ``packed`` keeps the
+    [T, Pk]-stream pipeline: Pallas power_pack gather + the power_sweep
+    kernel + the jnp fold-back chain.  Same contract either way.  A
+    traced `wbeta` (live-W runs) folds into the pre-gathered pt argument
+    with the kernel's static wbeta pinned at 1.0 — the kernels need no
+    new code, and the unit offset keeps the ops-layer lane padding away
+    from 0/0 (same trick as core/infer).
     """
+    P, Pk = sel_k.shape
+    policy = resolve_sweep_policy(cfg, layout.num_slots, mu_t.shape[1],
+                                  Pk, P, impl="pallas")
+    if policy == "dense_layout":
+        return _selective_sweep_carry_pallas(
+            layout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k, cfg,
+            wbeta=wbeta)
+
     from repro.kernels.power_pack import ops as pp_ops
     from repro.kernels.power_sweep.ops import power_sweep
 
-    P, Pk = sel_k.shape
     p_tok = pw.token_power_rows(layout.word_ids, sel_w, cfg.vocab_size)
     k_tok, mu_sel, theta_sel, pt_sel = _gather_selection(
         layout, mu_t, theta, phi_tot, sel_k, p_tok, P)

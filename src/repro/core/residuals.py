@@ -22,6 +22,25 @@ def token_scatter_wk(word_ids: jnp.ndarray, values_dlk: jnp.ndarray,
     return jnp.zeros((vocab_size, K), flat_v.dtype).at[flat_w].add(flat_v)
 
 
+def token_topic_segment_sum(doc_ids: jnp.ndarray, k_tok: jnp.ndarray,
+                            vals: jnp.ndarray, num_docs: int,
+                            num_topics: int) -> jnp.ndarray:
+    """Segment-sum [T, Pk] per-token values into [D, K] at (doc, topic).
+
+    The O(T*Pk) theta refresh of the selective sweep: each token scatters
+    its Pk selected-coordinate deltas straight to its document's row —
+    never materializing a [T, K] or [D, L, K] intermediate.  This is what
+    the carry-resident power_sweep kernel does on the MXU; on CPU XLA the
+    element scatter serializes, so the jnp formulations reach theta
+    through contractions instead (DESIGN.md §2 cost table) and this
+    helper serves as the layout-free oracle for both.
+    """
+    flat = (doc_ids[:, None] * num_topics + k_tok).reshape(-1)
+    out = jnp.zeros((num_docs * num_topics,), vals.dtype).at[flat].add(
+        vals.reshape(-1))
+    return out.reshape(num_docs, num_topics)
+
+
 def mean_residual(r_w: jnp.ndarray, total_tokens: jnp.ndarray) -> jnp.ndarray:
     """Line 26 of Fig. 4: sum_w r_w / sum_{w,d} x_{w,d}."""
     return jnp.sum(r_w) / jnp.maximum(total_tokens, 1.0)

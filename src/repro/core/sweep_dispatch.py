@@ -1,0 +1,195 @@
+"""Adaptive sweep dispatch — the measured cost model behind
+``LDAConfig.sweep_policy`` (DESIGN.md §2).
+
+The selective iteration (Fig. 4 lines 15-21) has two algebraically
+identical formulations whose relative cost flips with the shape:
+
+  - **packed**: [T, Pk] token streams + a Pk-term fold-back chain into the
+    [T, K] carry.  Work scales with T*K*Pk (the chain) — unbeatable when
+    Pk << K, K-proportional pain when Pk approaches K (the K64_Pk50
+    regression this module exists to fix).
+  - **dense_layout**: the one-pass [T, K] masked formulation (the jnp
+    mirror of the carry-resident ``power_sweep`` megakernel): a signed-phi
+    row table makes u exactly zero off the power submatrix, so the update,
+    fold-back and theta contraction are a handful of fused [T, K] passes —
+    Pk-independent.
+
+Both produce the same packed [P, Pk] sync buffers, so the Eq. 6
+communication (CommMeter bytes) is invariant to the choice — pinned by
+tests/test_sweep_policy.py.
+
+``resolve_sweep_policy`` picks the cheaper formulation per (T, K, Pk, P)
+at trace time from a **measured** cost model: four per-element machine
+rates (fused elementwise pass, compare-select chain term, row scatter-add,
+row gather) are timed once per process on small probe shapes and plugged
+into analytic element counts.  Resolution is cached per shape so dispatch
+is deterministic within a process and never retraces across mini-batches
+(compile-count pinned).
+
+Set ``REPRO_SWEEP_CALIBRATE=0`` to skip the ~100 ms measurement and use
+the committed fallback coefficients (measured on a 2-core CPU container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCoeffs:
+    """Per-element machine rates, nanoseconds (see measure_coeffs)."""
+
+    ew_ns: float        # fused elementwise pass, per element
+    chain_ns: float     # one compare-select chain term, per element
+    scatter_ns: float   # row-indexed scatter-add, per scattered element
+    gather_ns: float    # per gathered element ([T, Pk]-style take_along)
+
+
+# Fallback (and test-determinism) coefficients, measured in this repo's
+# CPU container; real TPUs resolve through the pallas branch below, which
+# never consults them.
+DEFAULT_COEFFS = SweepCoeffs(ew_ns=0.55, chain_ns=0.30, scatter_ns=1.9,
+                             gather_ns=1.3)
+
+_MEASURED: Optional[SweepCoeffs] = None
+
+
+def _time_jitted(fn, *args, reps: int = 5) -> float:
+    """Best-of-reps wall seconds for one call of a jitted fn."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_coeffs() -> SweepCoeffs:
+    """Time the four elementary access patterns on small probe shapes.
+
+    One-time ~100 ms; cached for the process.  Probe shapes are big enough
+    to swamp dispatch overhead (~1M elements) and small enough to stay
+    cache-resident the way the real sweeps are not — the absolute rates
+    matter less than their ratios, which is what the dispatch compares.
+    """
+    global _MEASURED
+    if _MEASURED is not None:
+        return _MEASURED
+    if os.environ.get("REPRO_SWEEP_CALIBRATE", "1") == "0":
+        _MEASURED = DEFAULT_COEFFS
+        return _MEASURED
+    import jax
+    import jax.numpy as jnp
+
+    T0, K0 = 16384, 64
+    n = T0 * K0
+    a = jnp.linspace(0.1, 1.0, n, dtype=jnp.float32).reshape(T0, K0)
+    b = a[::-1]
+
+    ew = jax.jit(lambda a, b: a * b + a - 0.5 * b)
+    t_ew = _time_jitted(ew, a, b) / (n * 1)
+
+    idx = (jnp.arange(T0, dtype=jnp.int32) * 7919) % 64
+    kcol = ((jnp.arange(T0, dtype=jnp.int32) * 31) % K0)[:, None]
+    CH = 8
+    iota = jnp.arange(K0, dtype=jnp.int32)[None, :]
+
+    def chain(a, kcol):
+        d = jnp.zeros_like(a)
+        for j in range(CH):
+            d = d + jnp.where(iota == (kcol + j) % K0, 1.0, 0.0)
+        return d
+
+    t_chain = _time_jitted(jax.jit(chain), a, kcol) / (n * CH)
+
+    scat = jax.jit(lambda a, idx: jnp.zeros((64, K0), jnp.float32)
+                   .at[idx].add(a))
+    t_scat = _time_jitted(scat, a, idx) / n
+
+    gath = jax.jit(lambda a, kcol: jnp.take_along_axis(
+        a, (kcol + iota[:, :8]) % K0, axis=1))
+    t_gath = _time_jitted(gath, a, kcol) / (T0 * 8)
+
+    _MEASURED = SweepCoeffs(ew_ns=t_ew * 1e9, chain_ns=t_chain * 1e9,
+                            scatter_ns=t_scat * 1e9, gather_ns=t_gath * 1e9)
+    return _MEASURED
+
+
+def packed_cost(T: int, K: int, Pk: int, P: int, crossover: int,
+                c: SweepCoeffs) -> float:
+    """Analytic cost (ns) of one packed-formulation iteration.
+
+    Element counts mirror core/pobp._selective_sweep_packed: ~4 gathered
+    [T, Pk] streams, ~10 fused elementwise ops on them, the Pk-term
+    fold-back chain over [T, K], the carry add + theta contraction
+    (2 passes over [T, K]), and the [P, Pk] accumulation (one-hot MXU
+    mirror below the crossover, row scatter above).
+    """
+    stream = T * Pk * (4 * c.gather_ns + 10 * c.ew_ns)
+    chain = T * K * Pk * c.chain_ns
+    fold = 2 * T * K * c.ew_ns
+    if T * P <= crossover:
+        accum = 2.0 * T * P * Pk * 0.5 * c.ew_ns     # MAC ~ half a fused op
+    else:
+        accum = 2 * T * Pk * c.scatter_ns
+    return stream + chain + fold + accum
+
+
+def dense_layout_cost(T: int, K: int, Pk: int, P: int,
+                      c: SweepCoeffs) -> float:
+    """Analytic cost (ns) of one dense-layout iteration.
+
+    Mirrors core/pobp._selective_sweep_dense_layout: one [T, K] row gather
+    of the signed-phi table, ~8 fused [T, K] update passes, the theta
+    contraction, the complex-merged delta/residual row scatter (~1.2x a
+    plain [T, K] scatter for the doubled payload width), and the O(P*K)
+    table build (charged as scatter elements).
+    """
+    gather = T * K * 0.35 * c.gather_ns   # row gather: contiguous K runs
+    update = 8 * T * K * c.ew_ns
+    theta = T * K * c.ew_ns
+    scatter = 1.2 * T * K * c.scatter_ns
+    table = 2 * P * K * c.scatter_ns
+    return gather + update + theta + scatter + table
+
+
+@functools.lru_cache(maxsize=512)
+def _resolve_cached(policy: str, T: int, K: int, Pk: int, P: int,
+                    crossover: int, impl: str) -> str:
+    if policy != "auto":
+        return policy
+    if impl == "pallas":
+        # the carry-resident megakernel IS the dense-layout formulation:
+        # one HBM read + one write of the [T, K] carry per iteration, all
+        # one-hot work on the MXU (kernels/power_sweep).  The packed
+        # kernel path remains reachable via sweep_policy='packed'.
+        return "dense_layout"
+    c = measure_coeffs()
+    cp = packed_cost(T, K, Pk, P, crossover, c)
+    cd = dense_layout_cost(T, K, Pk, P, c)
+    return "packed" if cp <= cd else "dense_layout"
+
+
+def resolve_sweep_policy(cfg, T: int, K: int, Pk: int, P: int,
+                         impl: Optional[str] = None) -> str:
+    """Resolve cfg.sweep_policy to a concrete formulation for this shape.
+
+    Called at trace time (all arguments are static Python ints), cached
+    per shape: the same (cfg, shape) always dispatches identically within
+    a process, so bucketed streams never retrace on policy flapping.
+    """
+    policy = cfg.sweep_policy
+    if policy not in ("auto", "packed", "dense_layout"):
+        raise ValueError(f"unknown sweep_policy: {policy!r} "
+                         f"(expected auto | packed | dense_layout)")
+    return _resolve_cached(policy, int(T), int(K), int(Pk), int(P),
+                           int(cfg.onehot_crossover),
+                           cfg.impl if impl is None else impl)

@@ -55,6 +55,17 @@ class LDAConfig:
     sync_dtype: str = "float32"     # 'float32' | 'bfloat16' (beyond-paper byte halving)
     # --- compute backend for the dense sweep ---
     impl: str = "jnp"               # 'jnp' | 'pallas' (fused bp_update kernel)
+    # --- selective-sweep formulation (DESIGN.md §2 cost model) ---
+    # 'auto' picks per (T, K, Pk, P) from the measured cost model at trace
+    # time; 'packed' forces the [T, Pk] stream + fold-back chain; 'dense_
+    # layout' forces the one-pass [T, K] masked formulation (the jnp mirror
+    # of the carry-resident power_sweep megakernel).  Identical selective
+    # math and identical packed Eq. 6 communication either way.
+    sweep_policy: str = "auto"      # 'auto' | 'packed' | 'dense_layout'
+    # Crossover for the packed path's [P, Pk] accumulation: one-hot MXU
+    # contraction while T*P <= crossover, row-scatter above.  Consumed by
+    # the dispatch cost model (core/sweep_dispatch.py).
+    onehot_crossover: int = 8_000_000
     # --- shape-bucketed streaming ---
     # When set, the random message init is drawn at [D, init_pad_len, K] and
     # sliced to the batch's L, so phi_acc is invariant to how far L was

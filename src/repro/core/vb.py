@@ -1,8 +1,16 @@
 """Variational Bayes for LDA (Blei et al. 2003) — the paper's PVB comparator.
 
-Mean-field coordinate ascent, vectorized over the padded-CSR batch:
-  E-step: gamma_d, per-token variational posterior via exp(digamma) weights;
-  M-step: lambda = beta + sum_d x * resp.
+Mean-field coordinate ascent on the **token-major runtime** (DESIGN.md
+§2): the padded-CSR batch flattens to the TokenLayout once, the per-token
+variational posterior (resp) is carried as a flat [T, K] stream with
+exp(digamma) weights gathered per token, and every per-doc reduction is a
+counts contraction — the same engineering the POBP inner loop runs on, so
+the accuracy benchmarks compare algorithms, not layouts (ROADMAP "GS/VB
+on the token-major runtime"; gibbs stays seed-style).
+
+  E-step: gamma_d via exp(digamma) responsibilities over [T, K];
+  M-step: lambda = beta + sum_t c_t * resp_t (token scatter).
+
 The parallel variant syncs the dense lambda matrix each iteration (the
 pattern that gives PVB the worst communication bill in Fig. 10 — float
 payload, full matrix, every iteration).
@@ -14,22 +22,32 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
 
-from repro.core.types import LDAConfig, MiniBatch
+from repro.core.types import LDAConfig, MiniBatch, TokenLayout
 
 
-def _e_step(batch: MiniBatch, elog_phi_tok: jnp.ndarray, cfg: LDAConfig,
-            inner: int = 8):
-    """Per-document gamma updates with phi weights fixed.  Returns (gamma, resp)."""
-    D, L = batch.word_ids.shape
+def _e_step_tokens(layout: TokenLayout, counts2: jnp.ndarray,
+                   elog_phi_tok: jnp.ndarray, cfg: LDAConfig,
+                   inner: int = 8):
+    """Per-document gamma updates with phi weights fixed, token-major.
+
+    ``elog_phi_tok`` [T, K] is the per-token exp-digamma weight, gathered
+    once per sweep (phi is fixed across the inner gamma iterations).
+    Returns (gamma [D, K], resp [T, K]).
+    """
+    D, L = layout.num_docs, layout.max_len
     K = elog_phi_tok.shape[-1]
-    gamma = jnp.full((D, K), cfg.alpha + batch.num_tokens() / (batch.num_docs * K))
+    total = jnp.sum(layout.counts)
+    gamma = jnp.full((D, K), cfg.alpha + total / (D * K))
 
     def body(gamma, _):
-        elog_theta = digamma(gamma) - digamma(jnp.sum(gamma, -1, keepdims=True))
-        logr = elog_theta[:, None, :] + elog_phi_tok               # [D, L, K]
+        elog_theta = digamma(gamma) - digamma(
+            jnp.sum(gamma, -1, keepdims=True))                  # [D, K]
+        logr = (jnp.broadcast_to(elog_theta[:, None, :], (D, L, K))
+                .reshape(layout.num_slots, K) + elog_phi_tok)   # [T, K]
         logr = logr - jax.scipy.special.logsumexp(logr, -1, keepdims=True)
         resp = jnp.exp(logr)
-        gamma = cfg.alpha + jnp.einsum("dl,dlk->dk", batch.counts, resp)
+        gamma = cfg.alpha + jnp.einsum(
+            "dl,dlk->dk", counts2, resp.reshape(D, L, K))
         return gamma, resp
 
     gamma, resps = jax.lax.scan(body, gamma, None, length=inner)
@@ -37,12 +55,19 @@ def _e_step(batch: MiniBatch, elog_phi_tok: jnp.ndarray, cfg: LDAConfig,
 
 
 def vb_sweep(batch: MiniBatch, lam_wk: jnp.ndarray, cfg: LDAConfig):
-    """One batch-VB iteration: E-step then the lambda statistic (M-step input)."""
+    """One batch-VB iteration: E-step then the lambda statistic (M-step input).
+
+    Token-major: the E-step runs on the flat [T, K] resp stream and the
+    statistic scatters straight from it (one [T] -> [W] row scatter, the
+    same op class as `residuals.token_scatter_wk`).
+    """
+    layout = batch.token_layout()
+    counts2 = layout.counts.reshape(layout.num_docs, layout.max_len)
     elog_phi = digamma(lam_wk) - digamma(jnp.sum(lam_wk, axis=0, keepdims=True))
-    elog_phi_tok = jnp.take(elog_phi, batch.word_ids, axis=0)      # [D, L, K]
-    gamma, resp = _e_step(batch, elog_phi_tok, cfg)
-    stat = jnp.zeros_like(lam_wk).at[batch.word_ids.reshape(-1)].add(
-        (batch.counts[..., None] * resp).reshape(-1, lam_wk.shape[1]))
+    elog_phi_tok = jnp.take(elog_phi, layout.word_ids, axis=0)   # [T, K], once
+    gamma, resp = _e_step_tokens(layout, counts2, elog_phi_tok, cfg)
+    stat = jnp.zeros_like(lam_wk).at[layout.word_ids].add(
+        layout.counts * resp)
     return gamma, stat
 
 

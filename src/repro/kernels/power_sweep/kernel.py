@@ -1,6 +1,22 @@
-"""Fused selective power-sweep kernel (Fig. 4 lines 15-21, token-major).
+"""Fused selective power-sweep kernels (Fig. 4 lines 15-21, token-major).
 
-One grid pass over token tiles performs, entirely in VMEM:
+Two kernels share this package:
+
+  - ``power_sweep_tokens`` — the packed-stream kernel: pre-gathered
+    [T, Pk] tiles in, updated [T, Pk] tiles + packed [P1, Pk] buffers out
+    (the caller folds the tiles back into the carry);
+  - ``power_sweep_carry_tokens`` — the carry-resident megakernel: the
+    full [TT, K] mu carry tile loads into VMEM, the packed-phi/mask row
+    gathers, the selective update + mass-conserving renorm, the fold-back,
+    the per-doc theta delta and the [P1, K] delta/residual accumulation
+    all happen in that one grid pass (one HBM read + one write of the
+    carry per iteration; every gather/scatter is an MXU one-hot
+    contraction).  A static ``update_phi=False`` turns the same kernel
+    into the serving fold-in body (core/infer): phi is a normalized
+    constant (no self-count subtraction, zero packed outputs) and the
+    per-doc |delta| residual accumulates instead.
+
+One packed-stream grid pass performs, entirely in VMEM:
 
   1. the per-token gather of the packed phi power rows — the tile's
      scalar-prefetched power-row ids ``p_tok`` select rows of the
@@ -142,3 +158,166 @@ def power_sweep_tokens(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
                    jax.ShapeDtypeStruct((P1, Pk), jnp.float32)],
         interpret=K_.INTERPRET,
     )(p_tok, counts_t, mu_sel, theta_sel, pt_sel, phi_pack)
+
+
+# --------------------------------------------------------------------------
+# carry-resident megakernel (dense-layout formulation, DESIGN.md §2)
+# --------------------------------------------------------------------------
+
+
+def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
+                  phi_ref, mask_ref,
+                  mu_out_ref, th_out_ref, d_out_ref, r_out_ref, rd_out_ref,
+                  *, alpha: float, beta: float, wbeta: float, tt: int,
+                  update_phi: bool, n_guard: int):
+    i = pl.program_id(0)
+    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
+    d_tile = pl.load(doc_ref, (pl.dslice(i * tt, tt),))        # [TT] int32
+    n_rows = phi_ref.shape[0]                                  # P1 (padded)
+    n_docs = theta_ref.shape[0]                                # D  (padded)
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (tt, n_rows), 1)
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (tt, n_docs), 1)
+    onehot_p = (iota_p == p_tile[:, None]).astype(jnp.float32) # [TT, P1]
+    onehot_d = (iota_d == d_tile[:, None]).astype(jnp.float32) # [TT, D]
+
+    c = c_ref[...]                                             # [TT, 1]
+    mu = mu_ref[...]                                           # [TT, K]
+    row_dims = (((1,), (0,)), ((), ()))
+    phi_tok = jax.lax.dot_general(                             # MXU row gathers
+        onehot_p, phi_ref[...], row_dims,
+        preferred_element_type=jnp.float32)                    # [TT, K]
+    theta_tok = jax.lax.dot_general(
+        onehot_d, theta_ref[...], row_dims,
+        preferred_element_type=jnp.float32)                    # [TT, K]
+
+    self_c = c * mu
+    th = theta_tok - self_c + alpha
+    if update_phi:
+        m_tok = jax.lax.dot_general(
+            onehot_p, mask_ref[...], row_dims,
+            preferred_element_type=jnp.float32)                # [TT, K]
+        ph = phi_tok - self_c + beta
+        pt = pt_ref[...] - self_c + wbeta
+    else:
+        # serving fold-in: every live row selects ALL topics, so the mask
+        # collapses to one guard compare per token (mask_ref is a dummy —
+        # no [W, K] ones table in VMEM, no second full-vocab one-hot dot);
+        # phi is a fixed normalized constant (the caller passes beta = 0,
+        # keeping the K lane padding at u == 0 exactly) and the
+        # denominator trick (pt_ref = 0, wbeta = 1) makes pt exactly 1
+        m_tok = (p_tile != n_guard)[:, None].astype(jnp.float32)
+        ph = phi_tok + beta
+        pt = pt_ref[...] + wbeta                               # [1, K] bcast
+    u = th * ph / pt * m_tok
+    mass = jnp.sum(mu * m_tok, axis=-1, keepdims=True)         # conserved
+    denom = jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), 1e-30)
+    mu_new = jnp.where(m_tok > 0, u * (mass / denom), mu)
+    mu_out_ref[...] = mu_new                                   # fold-back
+
+    cd = c * (mu_new - mu)
+    acc_dims = (((0,), (0,)), ((), ()))
+
+    @pl.when(i == 0)
+    def _init():
+        th_out_ref[...] = jnp.zeros_like(th_out_ref)
+        d_out_ref[...] = jnp.zeros_like(d_out_ref)
+        r_out_ref[...] = jnp.zeros_like(r_out_ref)
+        rd_out_ref[...] = jnp.zeros_like(rd_out_ref)
+
+    th_out_ref[...] += jax.lax.dot_general(                    # theta delta
+        onehot_d, cd, acc_dims, preferred_element_type=jnp.float32)
+    if update_phi:
+        d_out_ref[...] += jax.lax.dot_general(
+            onehot_p, cd, acc_dims, preferred_element_type=jnp.float32)
+        r_out_ref[...] += jax.lax.dot_general(
+            onehot_p, jnp.abs(cd), acc_dims,
+            preferred_element_type=jnp.float32)
+    else:
+        rd_out_ref[...] += jax.lax.dot_general(                # doc residual
+            onehot_d, jnp.abs(cd), acc_dims,
+            preferred_element_type=jnp.float32)
+
+
+def carry_token_tile(k_width: int, n_rows: int, n_docs: int,
+                     vmem_budget_bytes: int = 12_500_000) -> int:
+    """Largest power-of-two TT in [8, 512] fitting the VMEM budget.
+
+    Resident per grid step: ~5 [TT, K] tiles, the [TT, P1] + [TT, D]
+    one-hots, and the grid-resident tables/accumulators (phi/mask/d/r at
+    [P1, K], theta in/out + rd at [D, K]), all f32.  Same power-of-two /
+    floor-at-8 contract as `token_tile`.
+    """
+    fixed = (4 * n_rows + 3 * n_docs) * k_width * 4
+    per_token = (5 * k_width + n_rows + n_docs) * 4
+    tt = max(8, min(512, max(0, vmem_budget_bytes - fixed) // per_token))
+    return 1 << (tt.bit_length() - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "beta", "wbeta", "update_phi",
+                                    "n_guard"))
+def power_sweep_carry_tokens(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
+                             counts_t: jnp.ndarray, mu_t: jnp.ndarray,
+                             theta: jnp.ndarray, pt_row: jnp.ndarray,
+                             phi_rows: jnp.ndarray, mask_rows: jnp.ndarray,
+                             *, alpha: float, beta: float, wbeta: float,
+                             update_phi: bool = True, n_guard: int = -1):
+    """Carry-resident selective sweep over the full [T, K] carry.
+
+    p_tok [T] int32 power-row id per token (rows with an all-zero mask —
+    the guard row and padding — leave the token untouched); doc_ids [T]
+    int32; counts_t [T, 1]; mu_t [T, K]; theta [D, K]; pt_row [1, K]
+    (phi_tot, the update denominator); phi_rows/mask_rows [P1, K].
+    T % TT == 0, K % 128 == 0, P1 % 8 == 0 and D % 8 == 0 are the
+    caller's (ops.py) responsibility.
+    Returns (mu_new [T, K], theta_delta [D, K], d_rows, r_rows, rdoc_rows).
+
+    On the serving path ``update_phi=False`` the selection collapses to
+    "every row but the guard selects all topics": the mask derives from
+    one compare against the static ``n_guard`` (the logical guard-row id,
+    required when not update_phi) and ``mask_rows`` may be a dummy — no
+    [W, K] ones table in VMEM, no second full-vocab one-hot contraction.
+    Mode-dead accumulators shrink to an (8, K) dummy so they cost no HBM
+    on the hot path: d_rows/r_rows are [P1, K] only when ``update_phi``
+    (else (8, K) of zeros), rdoc_rows is [D, K] only when not (else
+    (8, K) of zeros).
+    """
+    if not update_phi and n_guard < 0:
+        raise ValueError("update_phi=False requires the static n_guard "
+                         "(logical guard-row id) for the mask compare")
+    T, K = mu_t.shape
+    P1 = phi_rows.shape[0]
+    D = theta.shape[0]
+    n_mask = mask_rows.shape[0]
+    TT = carry_token_tile(K, P1, D)
+    while T % TT:
+        TT //= 2
+    grid = (T // TT,)
+    n_dr = P1 if update_phi else 8
+    n_rd = 8 if update_phi else D
+    spec_tk = pl.BlockSpec((TT, K), lambda i, p_tok, doc_ids: (i, 0))
+    spec_c = pl.BlockSpec((TT, 1), lambda i, p_tok, doc_ids: (i, 0))
+    spec_rows = pl.BlockSpec((P1, K), lambda i, p_tok, doc_ids: (0, 0))
+    spec_mask = pl.BlockSpec((n_mask, K), lambda i, p_tok, doc_ids: (0, 0))
+    spec_dr = pl.BlockSpec((n_dr, K), lambda i, p_tok, doc_ids: (0, 0))
+    spec_docs = pl.BlockSpec((D, K), lambda i, p_tok, doc_ids: (0, 0))
+    spec_rd = pl.BlockSpec((n_rd, K), lambda i, p_tok, doc_ids: (0, 0))
+    spec_pt = pl.BlockSpec((1, K), lambda i, p_tok, doc_ids: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[spec_c, spec_tk, spec_docs, spec_pt, spec_rows, spec_mask],
+        out_specs=[spec_tk, spec_docs, spec_dr, spec_dr, spec_rd],
+    )
+    return pl.pallas_call(
+        functools.partial(_carry_kernel, alpha=alpha, beta=beta,
+                          wbeta=wbeta, tt=TT, update_phi=update_phi,
+                          n_guard=n_guard),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((T, K), jnp.float32),
+                   jax.ShapeDtypeStruct((D, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_dr, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_dr, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rd, K), jnp.float32)],
+        interpret=K_.INTERPRET,
+    )(p_tok, doc_ids, counts_t, mu_t, theta, pt_row, phi_rows, mask_rows)

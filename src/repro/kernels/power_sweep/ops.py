@@ -55,3 +55,80 @@ def power_sweep(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
     return (mu_new[:T0, :Pk].astype(mu_sel.dtype),
             d_pack[:P, :Pk].astype(mu_sel.dtype),
             r_pack[:P, :Pk].astype(mu_sel.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "wbeta",
+                                             "update_phi"))
+def power_sweep_carry(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
+                      counts_t: jnp.ndarray, mu_t: jnp.ndarray,
+                      theta: jnp.ndarray, phi_tot: jnp.ndarray,
+                      phi_rows: jnp.ndarray, mask_rows: jnp.ndarray, *,
+                      alpha: float, beta: float, wbeta: float,
+                      update_phi: bool = True):
+    """Carry-resident megakernel over the full [T, K] mu carry.
+
+    p_tok [T] int32 in [0, P] (P = the guard row: non-power / frozen /
+    padding tokens — mask zero, token untouched); doc_ids [T] int32;
+    counts_t [T, 1]; mu_t [T, K]; theta [D, K] (the doc-topic statistic of
+    mu_t); phi_tot [K] (the Eq. 1 denominator row); phi_rows/mask_rows
+    [P+1, K] — packed phi rows densified over K with their 0/1 topic
+    selection, guard row all zeros.  On the serving path
+    ``update_phi=False`` the selection is implicit (every row but the
+    guard selects all topics — the kernel compares p_tok against the
+    guard id instead of gathering a mask, and ``mask_rows`` is replaced
+    by a dummy); ``beta`` must be 0 there so the K lane padding keeps
+    u == 0 exactly.
+
+    Padding contract (keeps the fused math exact — see kernel.py):
+      - K -> lane multiple (128): mask pads 0, so padded columns carry
+        u == 0 and mu stays bit-identical (phi_tot pads 0, denominator
+        wbeta > 0 keeps the division finite);
+      - rows -> sublane multiple (8): zero phi/mask rows;
+      - D -> sublane multiple (8): no doc_id points there, rows accumulate
+        exact zeros;
+      - T -> tile multiple: padded tokens carry p_tok == P (guard) and
+        c == 0, so they update nothing and accumulate exact zeros.
+
+    Returns (mu_new [T, K], theta_delta [D, K], d_rows [P, K],
+    r_rows [P, K], rdoc [D]).  The mode-dead outputs come back as zeros
+    of truncated shape (the kernel never allocates them at full size):
+    d_rows/r_rows are [0, K] on the serving path ``update_phi=False``,
+    rdoc (the per-doc |c*delta| mass) is all-zero [D] on the training
+    path.
+    """
+    from repro.kernels.power_sweep.kernel import power_sweep_carry_tokens
+
+    T0, K0 = mu_t.shape
+    P = phi_rows.shape[0] - 1
+    D0 = theta.shape[0]
+    f32 = jnp.float32
+
+    if not update_phi and beta != 0.0:
+        raise ValueError("power_sweep_carry(update_phi=False) requires "
+                         "beta == 0 (serving phi is pre-normalized; a "
+                         "nonzero beta would leak into the lane padding)")
+
+    mu_p = _pad_axis(_pad_axis(mu_t.astype(f32), 1, 128), 0, 8)
+    th_p = _pad_axis(_pad_axis(theta.astype(f32), 1, 128), 0, 8)
+    pt_p = _pad_axis(phi_tot.astype(f32).reshape(1, -1), 1, 128)
+    phi_p = _pad_axis(_pad_axis(phi_rows.astype(f32), 1, 128), 0, 8)
+    if update_phi:
+        msk_p = _pad_axis(_pad_axis(mask_rows.astype(f32), 1, 128), 0, 8)
+    else:  # implicit all-topics mask: ship a sublane-sized dummy instead
+        msk_p = jnp.zeros((8, phi_p.shape[1]), f32)
+    c_p = _pad_axis(counts_t.astype(f32), 0, 8)
+    p_tok_p = _pad_axis(p_tok.astype(jnp.int32), 0, 8, value=P)
+    doc_p = _pad_axis(doc_ids.astype(jnp.int32), 0, 8)
+
+    mu_new, th_delta, d_rows, r_rows, rd_rows = power_sweep_carry_tokens(
+        p_tok_p, doc_p, c_p, mu_p, th_p, pt_p, phi_p, msk_p,
+        alpha=alpha, beta=beta, wbeta=wbeta, update_phi=update_phi,
+        n_guard=P)
+    dt = mu_t.dtype
+    n_keep = P if update_phi else 0
+    return (mu_new[:T0, :K0].astype(dt),
+            th_delta[:D0, :K0].astype(dt),
+            d_rows[:n_keep, :K0].astype(dt),
+            r_rows[:n_keep, :K0].astype(dt),
+            (jnp.sum(rd_rows[:D0, :K0], axis=1) if not update_phi
+             else jnp.zeros((D0,), jnp.float32)).astype(dt))

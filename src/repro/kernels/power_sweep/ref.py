@@ -34,3 +34,49 @@ def power_sweep_tokens_ref(p_tok, counts_t, mu_sel, theta_sel, pt_sel,
     d_pack = d_pack.at[n_pow].set(0.0)
     r_pack = r_pack.at[n_pow].set(0.0)
     return mu_new, d_pack, r_pack
+
+
+def power_sweep_carry_ref(p_tok, doc_ids, counts_t, mu_t, theta, phi_tot,
+                          phi_rows, mask_rows, *, alpha: float, beta: float,
+                          wbeta: float, update_phi: bool = True):
+    """Identical math to kernel._carry_kernel in plain XLA ops.
+
+    Shapes as in ops.power_sweep_carry before padding: mu_t [T, K], theta
+    [D, K], phi_rows/mask_rows [P+1, K] (guard row last, all zeros).
+    Returns (mu_new [T, K], theta_delta [D, K], d_rows [P, K],
+    r_rows [P, K], rdoc [D]).
+    """
+    P = phi_rows.shape[0] - 1
+    if update_phi:
+        m_tok = jnp.take(mask_rows, p_tok, axis=0)              # [T, K]
+    else:
+        # serving mode: every row but the guard selects all topics — the
+        # mask is implicit (one guard compare), mask_rows is ignored
+        m_tok = jnp.broadcast_to((p_tok != P)[:, None].astype(jnp.float32),
+                                 mu_t.shape)
+    phi_tok = jnp.take(phi_rows, p_tok, axis=0)
+    theta_tok = jnp.take(theta, doc_ids, axis=0)
+    self_c = counts_t * mu_t
+    th = theta_tok - self_c + alpha
+    if update_phi:
+        ph = phi_tok - self_c + beta
+        pt = phi_tot[None, :] - self_c + wbeta
+    else:
+        ph = phi_tok + beta
+        pt = jnp.broadcast_to(phi_tot[None, :] + wbeta, mu_t.shape)
+    u = th * ph / pt * m_tok
+    mass = jnp.sum(mu_t * m_tok, axis=-1, keepdims=True)
+    denom = jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), 1e-30)
+    mu_new = jnp.where(m_tok > 0, u * (mass / denom), mu_t)
+    cd = counts_t * (mu_new - mu_t)
+    theta_delta = jnp.zeros_like(theta).at[doc_ids].add(cd)
+    zeros_rows = jnp.zeros((P, mu_t.shape[1]), jnp.float32)
+    if update_phi:
+        d_rows = zeros_rows.at[p_tok].add(cd, mode="drop")
+        r_rows = zeros_rows.at[p_tok].add(jnp.abs(cd), mode="drop")
+        rdoc = jnp.zeros((theta.shape[0],), jnp.float32)
+    else:
+        d_rows = r_rows = zeros_rows
+        rdoc = jnp.zeros((theta.shape[0],), jnp.float32).at[doc_ids].add(
+            jnp.sum(jnp.abs(cd), axis=1))
+    return mu_new, theta_delta, d_rows, r_rows, rdoc

@@ -91,6 +91,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sync-dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--sweep-policy", default="auto",
+                    choices=["auto", "packed", "dense_layout"],
+                    help="selective-sweep formulation: 'auto' picks per "
+                         "(T, K, Pk, P) from the measured cost model at "
+                         "trace time (DESIGN.md §2); identical math and "
+                         "identical Eq. 6 sync bytes either way")
+    ap.add_argument("--onehot-crossover", type=int, default=8_000_000,
+                    help="T*P above which the packed path's [P, Pk] "
+                         "accumulation switches from one-hot contraction "
+                         "to row scatter (consumed by the cost model)")
     # execution
     ap.add_argument("--shards", type=int, default=4,
                     help="simulated data shards (--backend sim)")
@@ -144,6 +154,8 @@ def _build_cfg(args, vocab_size=None):
                      lambda_w=args.lambda_w, lambda_k_abs=args.lambda_k,
                      inner_iters=args.inner_iters, residual_tol=args.tol,
                      sync_dtype=args.sync_dtype, impl=args.impl,
+                     sweep_policy=args.sweep_policy,
+                     onehot_crossover=args.onehot_crossover,
                      init_pad_len=buckets[-1]), buckets
 
 
@@ -304,6 +316,10 @@ _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
                 "impl", "docs_per_batch", "doc_len_means", "len_buckets",
                 "fixed_len", "dynamic_vocab", "vocab_growth_per_batch",
                 "w_cap_min", "w_growth")
+# NB: sweep_policy / onehot_crossover are deliberately NOT resume keys:
+# both formulations compute the same trajectory (within float
+# associativity) and the same sync bytes, so a resumed run may re-resolve
+# the formulation for its own hardware.
 
 
 def _run_signature(args) -> Dict[str, Any]:

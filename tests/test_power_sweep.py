@@ -189,9 +189,17 @@ def test_dense_sweep_pallas_matches_jnp_sweep():
 
 def test_token_loop_trajectory_matches_seed_loop():
     """mean_r trajectories of the production token-major loop and a
-    faithfully reconstructed seed [D, L, K] loop agree to <= 1e-5."""
+    faithfully reconstructed seed [D, L, K] loop agree to <= 1e-5.
+
+    sweep_policy is pinned to 'packed': this test over-iterates a tiny
+    random batch far past convergence (tol=1e-9), a regime where the
+    selective update eventually blows up numerically (the seed does too,
+    identically) — the chain formulation tracks the seed bit-closely
+    through it, while dense_layout only tracks to float associativity
+    (its sane-regime parity is pinned in tests/test_sweep_policy.py)."""
     cfg = LDAConfig(vocab_size=80, num_topics=12, lambda_w=0.15,
-                    lambda_k_abs=4, inner_iters=6, residual_tol=1e-9)
+                    lambda_k_abs=4, inner_iters=6, residual_tol=1e-9,
+                    sweep_policy="packed")
     W, K = cfg.vocab_size, cfg.num_topics
     P, Pk = cfg.num_power_words, cfg.num_power_topics
     key = jax.random.PRNGKey(9)

@@ -1,0 +1,256 @@
+"""Adaptive sweep dispatch (ISSUE 5): formulation parity (packed /
+dense-layout / carry megakernel / oracle) over the FULL selective
+iteration, CommMeter byte invariance across policies, and compile-count
+staticness of the trace-time dispatch.  Hypothesis coverage lives in
+test_sweep_policy_properties.py; this file runs without hypothesis."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, MiniBatch, make_sim_minibatch_fn
+from repro.core import power as pw
+from repro.core.pobp import (_selective_sweep_carry_pallas,
+                             _selective_sweep_dense_layout,
+                             _selective_sweep_packed, init_train_state,
+                             make_train_step, selective_sweep_tokens)
+from repro.core.residuals import token_scatter_wk, token_topic_segment_sum
+from repro.core.sweep_dispatch import (DEFAULT_COEFFS, dense_layout_cost,
+                                       packed_cost, resolve_sweep_policy)
+from repro.core.sync import LocalReducer
+from repro.kernels.power_sweep.ops import power_sweep_carry
+from repro.kernels.power_sweep.ref import power_sweep_carry_ref
+
+
+def _iteration_state(key, cfg, D=10, L=16, live_w=None):
+    """Random mid-loop state honoring the invariants the sweeps assume
+    (theta == einsum(c, mu); batch words < live_w when capacity-laddered)."""
+    ks = jax.random.split(key, 4)
+    hi = cfg.vocab_size if live_w is None else live_w
+    wid = jax.random.randint(ks[0], (D, L), 0, hi).astype(jnp.int32)
+    cnt = jax.random.randint(ks[1], (D, L), 0, 3).astype(jnp.float32)
+    batch = MiniBatch(wid, cnt)
+    mu = jax.nn.softmax(jax.random.normal(ks[2], (D, L, cfg.num_topics)), -1)
+    theta = jnp.einsum("dl,dlk->dk", cnt, mu)
+    phi = token_scatter_wk(wid, cnt[..., None] * mu, cfg.vocab_size)
+    if live_w is not None:
+        # guard rows [live_w, W) stay exactly zero (DESIGN.md §12)
+        phi = jnp.where(jnp.arange(cfg.vocab_size)[:, None] < live_w, phi,
+                        0.0)
+    return batch, mu, theta, phi, jnp.sum(phi, 0)
+
+
+def _selection(key, cfg, P, Pk, live_w=None):
+    r = jax.random.uniform(key, (cfg.vocab_size, cfg.num_topics))
+    r_w = jnp.sum(r, 1)
+    if live_w is None:
+        sel_w = pw.select_power_words(r_w, P)
+    else:
+        sel_w = pw.select_power_words_live(r_w, P, live_w, cfg.lambda_w)
+    return sel_w, pw.select_power_topics(r, sel_w, Pk)
+
+
+def _run_all_formulations(cfg, batch, mu, theta, phi, phi_tot, sel_w, sel_k,
+                          wbeta=None):
+    lay = batch.token_layout()
+    mu_t = mu.reshape(-1, cfg.num_topics)
+    outs = {}
+    for name, fn in (("packed", _selective_sweep_packed),
+                     ("dense_layout", _selective_sweep_dense_layout),
+                     ("carry_kernel", _selective_sweep_carry_pallas)):
+        outs[name] = fn(lay, mu_t, theta, phi, phi_tot, sel_w, sel_k, cfg,
+                        wbeta=wbeta)
+    return outs
+
+
+@pytest.mark.parametrize("live_w", [None, 23])
+def test_formulation_parity_full_iteration(live_w):
+    """mu, theta and the packed delta/residual agree across the packed,
+    dense-layout and carry-megakernel formulations — including live-W
+    guard rows (dead selection slots transmit exact zeros)."""
+    cfg = LDAConfig(vocab_size=40, num_topics=12, lambda_w=0.2,
+                    lambda_k_abs=5)
+    P, Pk = cfg.num_power_words, cfg.num_power_topics
+    batch, mu, theta, phi, phi_tot = _iteration_state(
+        jax.random.PRNGKey(0), cfg, live_w=live_w)
+    sel_w, sel_k = _selection(jax.random.PRNGKey(1), cfg, P, Pk,
+                              live_w=live_w)
+    wbeta = None if live_w is None else jnp.float32(live_w * cfg.beta)
+    outs = _run_all_formulations(cfg, batch, mu, theta, phi, phi_tot,
+                                 sel_w, sel_k, wbeta=wbeta)
+    ref = outs.pop("packed")
+    for name, got in outs.items():
+        for a, b, what in zip(ref, got, ("mu", "theta", "d_pack", "r_pack")):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-5,
+                err_msg=f"{name}/{what}")
+    # the O(T*Pk) segment-sum theta oracle: every formulation's theta move
+    # must equal the per-token selected deltas scattered at (doc, topic)
+    lay = batch.token_layout()
+    p_tok = pw.token_power_rows(lay.word_ids, sel_w, cfg.vocab_size)
+    k_tok = jnp.take(sel_k, jnp.where(p_tok < P, p_tok, 0), axis=0)
+    mu_t = mu.reshape(-1, cfg.num_topics)
+    d_sel = jnp.take_along_axis(ref[0] - mu_t, k_tok, axis=1)
+    want_dtheta = token_topic_segment_sum(lay.doc_ids, k_tok,
+                                          lay.counts * d_sel,
+                                          lay.num_docs, cfg.num_topics)
+    np.testing.assert_allclose(np.asarray(ref[1] - theta),
+                               np.asarray(want_dtheta), rtol=2e-5,
+                               atol=1e-5)
+    if live_w is not None:
+        # dead selection slots (sel_w rows pointing at the guard row)
+        # carry exactly zero packed payload in every formulation
+        dead = np.asarray(sel_w) == live_w
+        assert dead.any()
+        for name, got in {"packed": ref, **outs}.items():
+            np.testing.assert_array_equal(
+                np.asarray(got[2])[dead], 0.0, err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(got[3])[dead], 0.0, err_msg=name)
+
+
+def test_carry_kernel_matches_oracle():
+    """ops.power_sweep_carry (padding included) vs the pure-jnp oracle,
+    both kernel modes."""
+    rng = np.random.default_rng(7)
+    T, K, P, D = 50, 12, 8, 6
+    p_tok = jnp.asarray(rng.integers(0, P + 1, T).astype(np.int32))
+    doc_ids = jnp.asarray(rng.integers(0, D, T).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, 4, (T, 1)).astype(np.float32))
+    mu = jax.nn.softmax(jnp.asarray(rng.normal(size=(T, K)),
+                                    dtype=jnp.float32), -1)
+    theta = jnp.asarray(rng.uniform(0, 5, (D, K)).astype(np.float32))
+    phi_tot = jnp.asarray(rng.uniform(1, 9, (K,)).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=(P + 1, K)) < 0.4)
+                       .astype(np.float32)).at[P].set(0.0)
+    phi_rows = (jnp.asarray(rng.uniform(0, 5, (P + 1, K))
+                            .astype(np.float32)) * mask)
+    for update_phi in (True, False):
+        kw = dict(alpha=0.1, beta=0.01 if update_phi else 0.0,
+                  wbeta=0.4 if update_phi else 1.0, update_phi=update_phi)
+        pt = phi_tot if update_phi else jnp.zeros_like(phi_tot)
+        got = power_sweep_carry(p_tok, doc_ids, c, mu, theta, pt,
+                                phi_rows, mask, **kw)
+        want = power_sweep_carry_ref(p_tok, doc_ids, c, mu, theta, pt,
+                                     phi_rows, mask, **kw)
+        if not update_phi:
+            # mode-dead packed outputs come back truncated, not computed
+            assert got[2].shape == (0, K) and got[3].shape == (0, K)
+            got, want = (got[0], got[1], got[4]), (want[0], want[1], want[4])
+            names = ("mu", "theta_delta", "rdoc")
+        else:
+            names = ("mu", "theta_delta", "d_rows", "r_rows", "rdoc")
+        for g, w, what in zip(got, want, names):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{update_phi}/{what}")
+
+
+def test_segment_sum_theta_oracle():
+    """token_topic_segment_sum == the dense-delta theta contraction."""
+    rng = np.random.default_rng(3)
+    T, Pk, D, K = 64, 4, 5, 10
+    doc_ids = jnp.asarray(rng.integers(0, D, T).astype(np.int32))
+    k_tok = jnp.asarray(rng.integers(0, K, (T, Pk)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(T, Pk)).astype(np.float32))
+    got = token_topic_segment_sum(doc_ids, k_tok, vals, D, K)
+    want = np.zeros((D, K), np.float32)
+    for t in range(T):
+        for j in range(Pk):
+            want[int(doc_ids[t]), int(k_tok[t, j])] += float(vals[t, j])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_comm_bytes_invariant_across_policies():
+    """Eq. 6 sync bytes are identical whichever formulation computes the
+    packed buffers (the acceptance pin: compute layout never changes the
+    communication bill)."""
+    W, K = 60, 16
+    wid = jax.random.randint(jax.random.PRNGKey(5), (12, 14), 0, W)
+    cnt = jax.random.randint(jax.random.PRNGKey(6), (12, 14), 0, 3)
+    bytes_by_policy, mean_r = {}, {}
+    for policy in ("packed", "dense_layout"):
+        cfg = LDAConfig(vocab_size=W, num_topics=K, lambda_w=0.2,
+                        lambda_k_abs=4, inner_iters=6, residual_tol=1e-9,
+                        sweep_policy=policy)
+        fn, meter = make_sim_minibatch_fn(cfg, 2, "power")
+        out = fn(wid.reshape(2, 6, 14).astype(jnp.int32),
+                 cnt.reshape(2, 6, 14).astype(jnp.float32),
+                 jnp.zeros((W, K)), jax.random.PRNGKey(1), jnp.float32(1.0))
+        jax.block_until_ready(out[0])
+        bytes_by_policy[policy] = dict(meter.bytes_by_phase)
+        mean_r[policy] = float(np.asarray(out[2]).reshape(-1)[0])
+    assert bytes_by_policy["packed"] == bytes_by_policy["dense_layout"]
+    assert abs(mean_r["packed"] - mean_r["dense_layout"]) <= 1e-6
+
+
+def test_dispatch_is_static_no_retrace():
+    """The trace-time policy resolution never retraces across mini-batches
+    of the same shape: one compile however many batches run, and the
+    resolver is deterministic per shape within a process."""
+    cfg = LDAConfig(vocab_size=50, num_topics=8, lambda_w=0.2,
+                    lambda_k_abs=4, inner_iters=4, residual_tol=1e-9,
+                    sweep_policy="auto")
+    step, _ = make_train_step(cfg, num_shards=1)
+    state = init_train_state(cfg, seed=0)
+    key = jax.random.PRNGKey(3)
+    for m in range(4):
+        k1, k2, key = jax.random.split(key, 3)
+        wid = jax.random.randint(k1, (6, 12), 0, cfg.vocab_size)
+        cnt = jax.random.randint(k2, (6, 12), 0, 3).astype(jnp.float32)
+        state, _ = step(state, wid.astype(jnp.int32), cnt)
+    assert step._cache_size() == 1
+    first = resolve_sweep_policy(cfg, 6 * 12, 8, 4, 10)
+    for _ in range(5):
+        assert resolve_sweep_policy(cfg, 6 * 12, 8, 4, 10) == first
+
+
+def test_resolve_policy_contract():
+    cfg = LDAConfig(vocab_size=50, num_topics=8, sweep_policy="packed")
+    assert resolve_sweep_policy(cfg, 1000, 8, 4, 5) == "packed"
+    cfg = dataclasses.replace(cfg, sweep_policy="dense_layout")
+    assert resolve_sweep_policy(cfg, 1000, 8, 4, 5) == "dense_layout"
+    cfg = dataclasses.replace(cfg, sweep_policy="auto", impl="pallas")
+    # the pallas backend's auto resolution is the carry megakernel
+    assert resolve_sweep_policy(cfg, 1000, 8, 4, 5) == "dense_layout"
+    cfg = dataclasses.replace(cfg, sweep_policy="bogus")
+    with pytest.raises(ValueError):
+        resolve_sweep_policy(cfg, 1000, 8, 4, 5)
+
+
+def test_cost_model_prefers_packed_at_small_pk():
+    """Whatever the measured rates, the analytic model must keep the
+    asymptotics: the chain term makes packed lose as Pk -> K and win as
+    Pk -> 1 (evaluated on the committed fallback coefficients so the test
+    is machine-independent)."""
+    c = DEFAULT_COEFFS
+    T, K, P = 17280, 64, 40
+    assert (packed_cost(T, K, 2, P, 8_000_000, c)
+            < dense_layout_cost(T, K, 2, P, c))
+    assert (packed_cost(T, K, K, P, 8_000_000, c)
+            > dense_layout_cost(T, K, K, P, c))
+
+
+def test_policy_dispatch_equivalence_end_to_end():
+    """pobp_minibatch trajectories agree across forced policies (the
+    dispatcher can pick either without changing results)."""
+    W, K = 60, 16
+    wid = jax.random.randint(jax.random.PRNGKey(8), (10, 14), 0, W)
+    cnt = jax.random.randint(jax.random.PRNGKey(9), (10, 14), 0, 3)
+    outs = {}
+    for policy in ("packed", "dense_layout"):
+        cfg = LDAConfig(vocab_size=W, num_topics=K, lambda_w=0.2,
+                        lambda_k_abs=6, inner_iters=6, residual_tol=1e-9,
+                        sweep_policy=policy)
+        fn, _ = make_sim_minibatch_fn(cfg, 1, "power")
+        outs[policy] = fn(wid.astype(jnp.int32), cnt.astype(jnp.float32),
+                          jnp.zeros((W, K)), jax.random.PRNGKey(1),
+                          jnp.float32(1.0))
+    assert int(outs["packed"][1]) == int(outs["dense_layout"][1])
+    for a, b in zip(outs["packed"], outs["dense_layout"]):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=1e-5)
