@@ -107,7 +107,8 @@ def compare_table(base_recs, opt_recs):
     return "\n".join(rows)
 
 
-def sweep_intensity_rows(T=17280, K=64, Pk=50, P=40, D=216, W=400):
+def sweep_intensity_rows(T=17280, K=64, Pk=50, P=40, D=216, W=400,
+                         kb=None):
     """Arithmetic intensity (flop/byte) of one POBP inner iteration per
     formulation — analytic flop and HBM-byte counts at the given shape
     (defaults: the BENCH_inner_loop K64_Pk50 cell).
@@ -117,42 +118,76 @@ def sweep_intensity_rows(T=17280, K=64, Pk=50, P=40, D=216, W=400):
     carry (one read, one write — everything else is VMEM-resident), so
     its intensity is ~3x the jnp dense-layout formulation and ~4x the
     dense sweep, i.e. the selective update leaves the memory-bound regime
-    the dense baseline lives in.  Returns [(name, flops, bytes, flop/byte)].
+    the dense baseline lives in.  The K-blocked two-pass variant
+    (DESIGN.md §13) pays one extra carry pass (pass 2 recomputes u from
+    a fresh read) plus per-(token-tile, K-block) table refetches — the
+    price of fitting ultra-high K in VMEM at all.
+
+    Byte counts split into phi-storage-proportional terms (the topic-word
+    tables/streams) and everything else, so the compressed-accumulator
+    column (``LDAConfig.phi_acc_dtype='bfloat16'``, itemsize 2) can be
+    derived from the same model.  Returns
+    [(name, flops, bytes_f32_phi, bytes_bf16_phi, flop/byte@f32)].
     """
     P1, f = P + 1, 4  # guard row; f32 bytes
-    rows = []
+    rows = []         # (name, flops, other_bytes_f32, phi_elems)
 
     # dense sweep (Eq. 4/5 baseline): full [T, K] update + theta einsum +
     # two [T, K] -> [W, K] scatters (phi rebuild, residual matrix)
     flops = 12 * T * K
-    bts = f * (6 * T * K + 2 * W * K)
-    rows.append(("dense sweep", flops, bts))
+    rows.append(("dense sweep", flops, f * 6 * T * K, 2 * W * K))
 
     # packed formulation: [T, Pk] streams + Pk-term fold-back chain
+    # (2 of the 6 token streams and the packed delta are phi reads/writes)
     flops = 10 * T * Pk + 2 * T * K * Pk + 2 * T * K
-    bts = f * (3 * T * K + 6 * T * Pk)
-    rows.append(("selective packed (jnp)", flops, bts))
+    rows.append(("selective packed (jnp)", flops,
+                 f * (3 * T * K + 4 * T * Pk), 2 * T * Pk))
 
     # dense-layout formulation: masked one-pass [T, K] update, complex-
-    # merged delta/residual scatter
+    # merged delta/residual scatter, signed-phi row table
     flops = 12 * T * K
-    bts = f * (7 * T * K + 2 * P1 * K)
-    rows.append(("selective dense-layout (jnp)", flops, bts))
+    rows.append(("selective dense-layout (jnp)", flops,
+                 f * 7 * T * K, 2 * P1 * K))
 
     # carry-resident megakernel: one HBM read + one write of the carry;
     # gathers/accumulations are MXU one-hots on VMEM-resident tables
     flops = 12 * T * K + 2 * T * (P1 + D) * K   # update + one-hot MACs
-    bts = f * (2 * T * K + T * 2 + (2 * P1 + 2 * D) * K)
-    rows.append(("power_sweep_carry megakernel", flops, bts))
-    return [(n, fl, b, fl / b) for n, fl, b in rows]
+    rows.append(("power_sweep_carry megakernel", flops,
+                 f * (2 * T * K + T * 2 + 2 * D * K), 2 * P1 * K))
+
+    # K-blocked two-pass megakernel: pass 1 reads the carry once, pass 2
+    # reads it again (u is recomputed) and writes it; the [TT, KB] tiling
+    # refetches the phi/mask tables once per (token-tile, K-block) grid
+    # step and the theta/accumulator tables likewise — K/kb blocks wide,
+    # T/TT tiles tall, each block a KB-wide slice.
+    try:
+        from repro.kernels.power_sweep.kernel import (carry_token_tile,
+                                                      kblock_width)
+        if kb is None:
+            kb = kblock_width(K, P1, D) if K % 128 == 0 else min(K, 128)
+        tt = carry_token_tile(kb, P1, D)
+    except Exception:                     # standalone render, no repro
+        kb, tt = kb or 128, 256
+    n_tiles = -(-T // tt)
+    flops = 14 * T * K + 2 * T * (P1 + D) * K   # + pass-2 u recompute
+    refetch_phi = 2 * P1 * K * n_tiles          # phi+mask, per tile row
+    refetch_other = f * (2 * D * K * n_tiles + 4 * T)   # theta + mass/denom
+    rows.append((f"power_sweep_carry kblocked (kb={kb}, tt={tt})", flops,
+                 f * (3 * T * K + T * 2) + refetch_other, refetch_phi))
+
+    return [(n, fl, other + f * phi, other + 2 * phi,
+             fl / (other + f * phi))
+            for n, fl, other, phi in rows]
 
 
-def sweep_intensity_table(T=17280, K=64, Pk=50, P=40, D=216, W=400):
-    rows = ["| formulation | MFLOP/iter | HBM MB/iter | flop/byte |",
-            "|---|---|---|---|"]
-    for name, fl, b, ai in sweep_intensity_rows(T, K, Pk, P, D, W):
+def sweep_intensity_table(T=17280, K=64, Pk=50, P=40, D=216, W=400,
+                          kb=None):
+    rows = ["| formulation | MFLOP/iter | HBM MB/iter | MB/iter "
+            "(bf16 phi) | flop/byte |",
+            "|---|---|---|---|---|"]
+    for name, fl, b, b16, ai in sweep_intensity_rows(T, K, Pk, P, D, W, kb):
         rows.append(f"| {name} | {fl / 1e6:.1f} | {b / 1e6:.1f} | "
-                    f"{ai:.2f} |")
+                    f"{b16 / 1e6:.1f} | {ai:.2f} |")
     return "\n".join(rows)
 
 
@@ -182,6 +217,9 @@ def main():
     print("\n## POBP selective-sweep arithmetic intensity "
           "(K64_Pk50 cell, per inner iteration)\n")
     print(sweep_intensity_table())
+    print("\n## Ultra-high-K cell (K1024_Pk16, 48-doc subset — "
+          "DESIGN.md §13)\n")
+    print(sweep_intensity_table(T=7680, K=1024, Pk=16, P=40, D=48, W=400))
 
 
 if __name__ == "__main__":

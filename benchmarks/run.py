@@ -432,6 +432,146 @@ def bench_inner_loop(quick=False):
             gate_failures.append(("drift", K, Pk, drift))
         if sel_vs_dense < floor:
             gate_failures.append(("selective_vs_dense", K, Pk, rec))
+    # ---- ultra-high-K cells (DESIGN.md §13): the K-blocked regime.
+    # A reduced 48-doc subset keeps the [T, K] carries CPU-sized; each
+    # cell pins a per-cell VMEM budget under which the full-K carry
+    # kernel provably does NOT fit while the K-blocked variant does
+    # (asserted analytically through the kernel's own choosers — the
+    # timing below runs the jnp dense-layout mirror, which is what
+    # 'kblocked' resolves to off-TPU).  The bf16 variant re-runs the
+    # trajectory from a stochastically-rounded carry statistic: the
+    # compressed-accumulator drift gate (<= 1e-3 vs <= 1e-6 for f32).
+    from repro.core import quantize
+    from repro.core.sweep_dispatch import carry_vmem_fit
+    from repro.kernels.power_sweep.kernel import carry_vmem_fits, kblock_width
+
+    hk_batch = docs_to_padded(list(docs)[:48])
+    hk_grid = ([(1024, 16, 2_000_000)] if quick
+               else [(1024, 16, 2_000_000), (4096, 16, 4_000_000)])
+    for K, Pk_req, budget in hk_grid:
+        cfg = base_cfg(num_topics=K, lambda_k_abs=Pk_req, residual_tol=1e-9,
+                       inner_iters=8, vmem_budget_bytes=budget)
+        W, P = cfg.vocab_size, cfg.num_power_words
+        Pk = cfg.num_power_topics
+        layout = hk_batch.token_layout()
+        D = hk_batch.word_ids.shape[0]
+        total_tokens = float(jnp.sum(hk_batch.counts))
+
+        # the regime this cell exists for: under this budget the one-pass
+        # carry kernel cannot hold a useful token tile, the K-blocked one
+        # can, and pallas auto resolves accordingly
+        assert not carry_vmem_fit(K, P, D, budget), (K, budget)
+        P1 = -(-(P + 1) // 8) * 8          # sublane-padded row count
+        kb = kblock_width(K, P1, D, budget)
+        assert carry_vmem_fits(kb, P1, D, budget)
+        policy = resolve_sweep_policy(cfg, layout.num_slots, K, Pk, P,
+                                      impl="pallas", n_docs=D)
+        assert policy == "kblocked", policy
+
+        key = jax.random.PRNGKey(0)
+        u0 = jax.random.uniform(key, (*hk_batch.word_ids.shape, K),
+                                minval=0.01, maxval=1.0)
+        mu0 = u0 / jnp.sum(u0, -1, keepdims=True)
+        phi_eff = token_scatter_wk(hk_batch.word_ids,
+                                   hk_batch.counts[..., None] * mu0, W)
+        phi_tot = jnp.sum(phi_eff, axis=0)
+        mu1, r_glob = pobp.dense_sweep(hk_batch, mu0, phi_eff, phi_tot,
+                                       cfg, red)
+        theta = jnp.einsum("dl,dlk->dk", hk_batch.counts, mu1)
+        state0 = dict(mu=mu1, theta=theta, phi_eff=phi_eff, phi_tot=phi_tot,
+                      r_glob=r_glob, r_w=jnp.sum(r_glob, axis=1))
+
+        def tok_step(mu_t, theta, phi_eff, phi_tot, r_glob, r_w):
+            sel_w = pw.select_power_words(r_w, P)
+            sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
+            mu_t, theta, d_pack, r_pack = pobp.selective_sweep_tokens(
+                layout, mu_t, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            rw_delta = packed_rw_delta(r_glob, sel_w, sel_k, r_pack)
+            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_pack)
+            phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_pack)
+            r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
+            return (mu_t, theta, phi_eff, phi_tot, r_glob,
+                    r_w.at[sel_w].add(rw_delta))
+
+        def seed_step(mu, theta, phi_eff, phi_tot, r_glob, r_w):
+            sel_w = pw.select_power_words(r_w, P)
+            sel_k = pw.select_power_topics(r_glob, sel_w, Pk)
+            mu, theta, d_pack, r_pack = pobp.selective_sweep(
+                hk_batch, mu, theta, phi_eff, phi_tot, sel_w, sel_k, cfg)
+            phi_eff = pw.scatter_add_rows(phi_eff, sel_w, sel_k, d_pack)
+            phi_tot = phi_tot + jnp.zeros_like(phi_tot).at[sel_k].add(d_pack)
+            r_glob = pw.scatter_set_rows(r_glob, sel_w, sel_k, r_pack)
+            return mu, theta, phi_eff, phi_tot, r_glob, jnp.sum(r_glob, 1)
+
+        def dense_step(mu, theta, phi_eff, phi_tot, r_glob, r_w):
+            mu, r_wk = pobp.dense_sweep(hk_batch, mu, phi_eff, phi_tot,
+                                        cfg, red)
+            phi_eff = token_scatter_wk(hk_batch.word_ids,
+                                       hk_batch.counts[..., None] * mu, W)
+            return (mu, jnp.einsum("dl,dlk->dk", hk_batch.counts, mu),
+                    phi_eff, jnp.sum(phi_eff, 0), r_wk, jnp.sum(r_wk, 1))
+
+        def run_hk(step, st, iters, token_major, record_r=False, rounds=1):
+            carry0 = (st["mu"].reshape(-1, K) if token_major else st["mu"],
+                      st["theta"], st["phi_eff"], st["phi_tot"],
+                      st["r_glob"], st["r_w"])
+            fn = jax.jit(step)
+            carry = fn(*carry0)
+            jax.block_until_ready(carry)
+            best, trace = float("inf"), []
+            for _ in range(rounds):
+                carry, trace = tuple(carry0), []
+                t0 = time.time()
+                for _ in range(iters):
+                    carry = fn(*carry)
+                    if record_r:
+                        trace.append(float(mean_residual(carry[-1],
+                                                         total_tokens)))
+                jax.block_until_ready(carry)
+                best = min(best, (time.time() - t0) / iters)
+            return best, trace
+
+        rec = {"policy": policy, "kb": int(kb), "vmem_budget_bytes": budget,
+               "fullk_fits": False, "kblocked_fits": True}
+        dt_tok, _ = run_hk(tok_step, state0, 10, True, rounds=2)
+        dt_den, _ = run_hk(dense_step, state0, 10, False, rounds=2)
+        rec["token_major"] = {"iter_s": dt_tok,
+                              "tokens_per_s": total_tokens / dt_tok}
+        rec["dense"] = {"iter_s": dt_den,
+                        "tokens_per_s": total_tokens / dt_den}
+        sel_vs_dense = dt_den / dt_tok
+        rec["selective_vs_dense_x"] = sel_vs_dense
+        _emit(f"inner_loop/K{K}_Pk{Pk}/selective_vs_dense_x",
+              f"{sel_vs_dense:.2f}",
+              f"policy={policy} kb={kb} budget={budget} "
+              f"(full-K carry does not fit)")
+
+        n_par = 4
+        _, tr_seed = run_hk(seed_step, state0, n_par, False, record_r=True)
+        _, tr_tok = run_hk(tok_step, state0, n_par, True, record_r=True)
+        drift = max(abs(a - b) for a, b in zip(tr_seed, tr_tok))
+        st16 = dict(state0, phi_eff=quantize.stochastic_round(
+            state0["phi_eff"], jnp.bfloat16,
+            jax.random.PRNGKey(1)).astype(jnp.float32))
+        _, tr_b16 = run_hk(tok_step, st16, n_par, True, record_r=True)
+        drift16 = max(abs(a - b) for a, b in zip(tr_tok, tr_b16))
+        _emit(f"inner_loop/K{K}_Pk{Pk}/mean_r_max_drift", f"{drift:.2e}",
+              "token-major vs seed trajectory (<= 1e-6)")
+        _emit(f"inner_loop/K{K}_Pk{Pk}/mean_r_bf16_drift", f"{drift16:.2e}",
+              "bf16-quantized carry statistic vs f32 (<= 1e-3)")
+        rec.update(mean_r_seed=tr_seed, mean_r_token=tr_tok,
+                   mean_r_bf16=tr_b16, mean_r_max_drift=drift,
+                   mean_r_bf16_drift=drift16, tokens=total_tokens,
+                   P=P, Pk=Pk, T_slots=int(layout.num_slots), D=D)
+        out[f"K{K}_Pk{Pk}"] = rec
+        floor = 0.9 if quick else 1.0
+        if drift > 1e-6:
+            gate_failures.append(("drift", K, Pk, drift))
+        if drift16 > 1e-3:
+            gate_failures.append(("bf16_drift", K, Pk, drift16))
+        if sel_vs_dense < floor:
+            gate_failures.append(("selective_vs_dense", K, Pk, rec))
+
     # quick mode writes a separate file so a smoke run can never clobber
     # the committed full-grid artifact
     _save("BENCH_inner_loop_quick" if quick else "BENCH_inner_loop", out)

@@ -76,6 +76,26 @@ def main():
               "  (force with LDAConfig(sweep_policy=...) or "
               "lda_train --sweep-policy)")
 
+    # ---- ultra-high K (DESIGN.md §13) ----------------------------------
+    # On the pallas impl, when the full-K carry megakernel's VMEM
+    # footprint stops admitting a useful token tile, `auto` switches to
+    # the K-blocked two-pass kernel; phi_acc can also be STORED at bf16
+    # (the accumulate stays f32, the fold-back is stochastically rounded)
+    # to halve phi HBM and phi-delta sync bytes:
+    #
+    #   python -m repro.launch.lda_train --impl pallas \
+    #       --sweep-policy kblocked --phi-acc-dtype bfloat16
+    #
+    # `--sweep-policy auto` only engages kblocked past the VMEM budget
+    # (REPRO_VMEM_BUDGET_BYTES / LDAConfig.vmem_budget_bytes):
+    huge = dataclasses.replace(cfg, num_topics=4096, impl="pallas",
+                               vmem_budget_bytes=4_000_000)
+    picked = resolve_sweep_policy(huge, 100 * 80, huge.num_topics,
+                                  huge.num_power_topics,
+                                  huge.num_power_words, n_docs=100)
+    print(f"[sweep] K={huge.num_topics} under a 4 MB VMEM budget -> "
+          f"{picked}")
+
     # ---- vocabulary growth (DESIGN.md §12) -----------------------------
     # Real streams grow their vocabulary after step 0.  A VocabMap assigns
     # external token keys to phi rows append-only (deterministic

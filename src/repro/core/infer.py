@@ -141,6 +141,16 @@ def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
             [phi_norm_wk, jnp.zeros((1, Kl), phi_norm_wk.dtype)], axis=0)
         mask_dummy = jnp.zeros((1, Kl), jnp.float32)
         pt_zero = jnp.zeros((Kl,), jnp.float32)
+        # same VMEM-fit dispatch as training (DESIGN.md §13), with the
+        # serving row table being the whole vocabulary: the full-K carry
+        # kernel while it fits, the K-blocked two-pass kernel beyond, or
+        # pinned by an explicit cfg.sweep_policy == 'kblocked'
+        from repro.core.sweep_dispatch import carry_vmem_fit
+        serve_kblocked = (
+            cfg.sweep_policy == "kblocked"
+            or (cfg.sweep_policy == "auto"
+                and not carry_vmem_fit(Kl, w_rows, D,
+                                       cfg.vmem_budget_bytes)))
 
     def active_docs(r_doc, r_prev):
         # geometric-tail bound on the theta movement still to come: with
@@ -176,7 +186,8 @@ def fold_in_tokens(key: jax.Array, batch: MiniBatch, phi_norm_wk: jnp.ndarray,
             mu_new, th_delta, _, _, r_local = power_sweep_carry(
                 p_tok, layout.doc_ids, c, mu_t, theta, pt_zero,
                 phi_rows, mask_dummy, alpha=cfg.alpha, beta=0.0, wbeta=1.0,
-                update_phi=False)
+                update_phi=False, kblocked=serve_kblocked,
+                vmem_budget_bytes=cfg.vmem_budget_bytes)
             theta = theta + th_delta
         else:
             th = theta[layout.doc_ids] - c * mu_t + cfg.alpha

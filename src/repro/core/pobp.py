@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import power as pw
+from repro.core import quantize
 from repro.core.residuals import (mean_residual, packed_rw_delta,
                                   token_scatter_wk)
 from repro.core.sweep_dispatch import resolve_sweep_policy
@@ -375,7 +376,10 @@ def selective_sweep_tokens(
     """
     P, Pk = sel_k.shape
     policy = resolve_sweep_policy(cfg, layout.num_slots, mu_t.shape[1],
-                                  Pk, P, impl="jnp")
+                                  Pk, P, impl="jnp",
+                                  n_docs=theta.shape[0])
+    # 'kblocked' resolves to dense_layout on the jnp impl (same math; XLA
+    # has no VMEM budget), so only two formulations exist here
     fn = (_selective_sweep_packed if policy == "packed"
           else _selective_sweep_dense_layout)
     return fn(layout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k, cfg,
@@ -384,7 +388,7 @@ def selective_sweep_tokens(
 
 def _selective_sweep_carry_pallas(
     layout: TokenLayout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k,
-    cfg: LDAConfig, wbeta=None,
+    cfg: LDAConfig, wbeta=None, kblocked: bool = False,
 ):
     """Carry-resident megakernel iteration (kernels/power_sweep).
 
@@ -415,7 +419,8 @@ def _selective_sweep_carry_pallas(
     mu_new, theta_delta, d_rows, r_rows, _ = power_sweep_carry(
         p_tok, layout.doc_ids, layout.counts, mu_t, theta, pt_arg,
         phi_rows, mask, alpha=cfg.alpha, beta=cfg.beta, wbeta=wb_static,
-        update_phi=True)
+        update_phi=True, kblocked=kblocked,
+        vmem_budget_bytes=cfg.vmem_budget_bytes)
     d_pack = jnp.take_along_axis(d_rows[:P], sel_k, axis=1)
     r_pack = jnp.take_along_axis(r_rows[:P], sel_k, axis=1)
     return mu_new, theta + theta_delta, d_pack, r_pack
@@ -427,9 +432,12 @@ def selective_sweep_tokens_pallas(
 ):
     """Fused-kernel selective sweep, policy-dispatched like the jnp path.
 
-    ``dense_layout`` (the 'auto' resolution on the pallas backend) runs
-    the carry-resident `power_sweep_carry` megakernel — one HBM read +
-    one write of the [T, K] carry per iteration.  ``packed`` keeps the
+    ``dense_layout`` (the 'auto' resolution on the pallas backend while
+    the full-K carry fits VMEM) runs the carry-resident
+    `power_sweep_carry` megakernel — one HBM read + one write of the
+    [T, K] carry per iteration.  ``kblocked`` (auto's resolution past the
+    VMEM-fit boundary, DESIGN.md §13) runs the same math as the K-blocked
+    two-pass kernel.  ``packed`` keeps the
     [T, Pk]-stream pipeline: Pallas power_pack gather + the power_sweep
     kernel + the jnp fold-back chain.  Same contract either way.  A
     traced `wbeta` (live-W runs) folds into the pre-gathered pt argument
@@ -439,11 +447,12 @@ def selective_sweep_tokens_pallas(
     """
     P, Pk = sel_k.shape
     policy = resolve_sweep_policy(cfg, layout.num_slots, mu_t.shape[1],
-                                  Pk, P, impl="pallas")
-    if policy == "dense_layout":
+                                  Pk, P, impl="pallas",
+                                  n_docs=theta.shape[0])
+    if policy in ("dense_layout", "kblocked"):
         return _selective_sweep_carry_pallas(
             layout, mu_t, theta, phi_eff_wk, phi_tot, sel_w, sel_k, cfg,
-            wbeta=wbeta)
+            wbeta=wbeta, kblocked=(policy == "kblocked"))
 
     from repro.kernels.power_pack import ops as pp_ops
     from repro.kernels.power_sweep.ops import power_sweep
@@ -512,6 +521,11 @@ def pobp_minibatch(
     wbeta = (None if live_w is None
              else jnp.asarray(live_w, jnp.float32) * cfg.beta)
     layout = batch.token_layout()    # persistent token-major view (§2)
+    # compressed-accumulator runs (DESIGN.md §13) ship every phi/residual
+    # statistic sync at the storage width: the Eq. 5/6 payload bytes halve
+    # and the wire round-trip matches the precision the statistic is kept
+    # at anyway.  None leaves the cfg.sync_dtype behavior untouched.
+    phi_wire = (jnp.bfloat16 if cfg.phi_acc_dtype == "bfloat16" else None)
 
     # ---- lines 3-8: random init, local stats, first dense update ----
     # cfg.init_pad_len: draw the random field at a fixed padded length and
@@ -537,10 +551,11 @@ def pobp_minibatch(
     # ---- lines 9-10: dense synchronization of phi and r ----
     delta_glob = data_reducer.psum(
         token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu1, W),
-        "dense", w_rows=W)
+        "dense", w_rows=W, dtype=phi_wire)
     phi_eff = phi_acc_wk + delta_glob
     phi_tot = jnp.sum(phi_eff, axis=0)
-    r_glob = data_reducer.psum(r_wk_local, "dense", w_rows=W)
+    r_glob = data_reducer.psum(r_wk_local, "dense", w_rows=W,
+                               dtype=phi_wire)
     theta = jnp.einsum("dl,dlk->dk", batch.counts, mu1)
     r_w = model_reducer.psum(jnp.sum(r_glob, axis=1), "model_rw",
                              compress=False, w_rows=W)
@@ -585,8 +600,10 @@ def pobp_minibatch(
             # lines 23-24: communicate only the power submatrices (the [P,
             # Pk] buffers scale with W through P = lambda_w*W: live-W
             # accounting bills only the live fraction of their rows)
-            d_phi_pack = data_reducer.psum(d_phi_pack, "power", w_rows=W)
-            r_pack = data_reducer.psum(r_pack, "power", w_rows=W)
+            d_phi_pack = data_reducer.psum(d_phi_pack, "power", w_rows=W,
+                                           dtype=phi_wire)
+            r_pack = data_reducer.psum(r_pack, "power", w_rows=W,
+                                       dtype=phi_wire)
             # packed-carry refresh: O(P*Pk) state updates, Eq. 9
             rw_delta = packed_rw_delta(r_glob, sel_w, sel_k, r_pack)
             phi_eff = phi_scatter(phi_eff, sel_w, sel_k, d_phi_pack)
@@ -615,12 +632,13 @@ def pobp_minibatch(
                                    wbeta=wbeta)
             delta = data_reducer.psum(
                 token_scatter_wk(batch.word_ids, batch.counts[..., None] * mu, W),
-                "dense_loop", w_rows=W)
+                "dense_loop", w_rows=W, dtype=phi_wire)
             phi_eff = phi_acc_wk + delta
             phi_tot = jnp.sum(phi_eff, axis=0)
             theta = jnp.einsum("dl,dlk->dk", batch.counts, mu)
             r_w_c = model_reducer.psum(
-                jnp.sum(data_reducer.psum(r_wk, "dense_loop", w_rows=W),
+                jnp.sum(data_reducer.psum(r_wk, "dense_loop", w_rows=W,
+                                          dtype=phi_wire),
                         axis=1),
                 "model_rw_loop", compress=False, w_rows=W)
             return (mu, theta, phi_eff, phi_tot, r_w_c, t + 1)
@@ -671,6 +689,11 @@ def pobp_shard_body(word_ids, counts, phi_acc, key, delta_weight,
     return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
 
 
+# fold_in tag deriving the stochastic-rounding key from the per-batch key
+# without consuming the split stream (float32 runs stay bit-identical)
+_SR_FOLD = 0x5F0C4
+
+
 def _delta_weight(cfg: LDAConfig, m):
     """Traced Eq. 11 weight for the (1-indexed, possibly traced) batch m."""
     if cfg.lr_schedule == "paper":
@@ -679,9 +702,13 @@ def _delta_weight(cfg: LDAConfig, m):
 
 
 def init_train_state(cfg: LDAConfig, seed: int = 0) -> LDATrainState:
-    """Cold-start carry for `make_train_step` (phi_acc = 0, m = 0)."""
+    """Cold-start carry for `make_train_step` (phi_acc = 0, m = 0).
+
+    phi_acc is allocated at ``cfg.phi_acc_dtype`` (DESIGN.md §13): the
+    accumulate still runs in f32 — the carry only STORES narrow."""
     return LDATrainState(
-        phi_acc=jnp.zeros((cfg.vocab_size, cfg.num_topics), jnp.float32),
+        phi_acc=jnp.zeros((cfg.vocab_size, cfg.num_topics),
+                          quantize.phi_acc_dtype(cfg)),
         m=jnp.zeros((), jnp.int32),
         rng=jax.random.PRNGKey(seed))
 
@@ -736,6 +763,8 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
     else:
         reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
 
+    storage = quantize.phi_acc_dtype(cfg)
+
     def body(wid, cnt, phi_acc, key, weight, live_w):
         return pobp_shard_body(wid, cnt, phi_acc, key, weight, cfg, reducer,
                                sync_mode=sync_mode, live_w=live_w)
@@ -755,6 +784,13 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
                     word_ids, counts, state.phi_acc, keys, weight, live_w)
             # shard-identical by construction: carry shard 0's copy
             phi, iters, mean_r = phi[0], iters[0], mean_r[0]
+        if storage != jnp.float32:
+            # fold the f32 accumulate back into the narrow carry with
+            # stochastic rounding (core/quantize).  The SR key derives by
+            # fold_in so the per-batch split stream above stays
+            # bit-identical to a float32 run's.
+            phi = quantize.stochastic_round(
+                phi, storage, jax.random.fold_in(sub, _SR_FOLD))
         new_state = LDATrainState(phi_acc=phi, m=state.m + 1, rng=rng)
         return new_state, dict(iters=iters, mean_r=mean_r, theta=theta)
 

@@ -1,0 +1,60 @@
+"""Compressed phi accumulators (DESIGN.md §13).
+
+``LDAConfig.phi_acc_dtype = 'bfloat16'`` stores the streaming Eq. 11
+statistic at half width: phi_acc HBM halves, the phi-delta sync payloads
+ship at bf16 (``Reducer.psum(dtype=...)``), and checkpoints round-trip
+the narrow dtype.  The accumulate itself always runs in float32 —
+``phi_eff = phi_acc + delta`` promotes automatically — and only the
+fold-back into the carry narrows.
+
+A round-to-nearest fold-back would be biased: a per-batch delta smaller
+than half a bf16 ULP of the running statistic rounds away to nothing
+every single batch, so slowly-accumulating words stop learning.  The
+fold-back therefore uses **stochastic rounding**: dither the 16 mantissa
+bits that truncation drops with uniform random bits, then truncate.  Each
+fold-back is unbiased (E[sr(x)] == x), so small deltas survive in
+expectation and the bf16 trajectory tracks the f32 one within rounding
+noise (tests/test_phi_acc_dtype.py pins the per-batch mean_r drift and
+the converged held-out perplexity; a single sweep from a shared phi
+drifts <= 1e-3 — the BENCH_inner_loop gate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_PHI_ACC_DTYPES = ("float32", "bfloat16")
+
+
+def phi_acc_dtype(cfg) -> jnp.dtype:
+    """Resolve cfg.phi_acc_dtype to the jnp storage dtype."""
+    name = getattr(cfg, "phi_acc_dtype", "float32")
+    if name not in _PHI_ACC_DTYPES:
+        raise ValueError(f"unknown phi_acc_dtype: {name!r} "
+                         f"(expected one of {_PHI_ACC_DTYPES})")
+    return jnp.bfloat16 if name == "bfloat16" else jnp.float32
+
+
+def stochastic_round(x: jnp.ndarray, dtype, key: jax.Array) -> jnp.ndarray:
+    """Cast f32 ``x`` to ``dtype`` with stochastic rounding.
+
+    bf16 is f32's top 16 bits, so truncation after adding uniform dither
+    to the 16 dropped mantissa bits rounds x up with probability equal to
+    the dropped fraction — unbiased in expectation.  The dither never
+    crosses the sign bit (IEEE sign-magnitude: adding to the magnitude
+    bits moves |x| up, possibly carrying into the exponent, which is the
+    correct rounding-up of the magnitude).  float32 passes through.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float32:
+        return x.astype(jnp.float32)
+    if dtype != jnp.dtype(jnp.bfloat16):
+        raise ValueError(f"stochastic_round supports float32/bfloat16, "
+                         f"got {dtype}")
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    dither = jax.random.randint(key, x.shape, 0, 1 << 16,
+                                dtype=jnp.int32).astype(jnp.uint32)
+    rounded = (bits + dither) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded,
+                                        jnp.float32).astype(jnp.bfloat16)

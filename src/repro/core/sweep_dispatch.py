@@ -14,6 +14,14 @@ identical formulations whose relative cost flips with the shape:
     fold-back and theta contraction are a handful of fused [T, K] passes —
     Pk-independent.
 
+A third formulation exists only on the pallas side:
+
+  - **kblocked**: the K-blocked two-pass carry megakernel (DESIGN.md
+    §13) — same dense-layout math tiled as [TT, KB] topic blocks, for
+    ultra-high K where the full-K carry no longer fits a useful token
+    tile in VMEM.  On the jnp impl it is an alias of dense_layout (XLA
+    has no VMEM constraint to respect).
+
 Both produce the same packed [P, Pk] sync buffers, so the Eq. 6
 communication (CommMeter bytes) is invariant to the choice — pinned by
 tests/test_sweep_policy.py.
@@ -22,9 +30,13 @@ tests/test_sweep_policy.py.
 at trace time from a **measured** cost model: four per-element machine
 rates (fused elementwise pass, compare-select chain term, row scatter-add,
 row gather) are timed once per process on small probe shapes and plugged
-into analytic element counts.  Resolution is cached per shape so dispatch
-is deterministic within a process and never retraces across mini-batches
-(compile-count pinned).
+into analytic element counts.  The pallas branch extends the model with a
+VMEM-fit predicate (`kernels.power_sweep.kernel.carry_vmem_fits`): auto
+resolves to the one-pass carry kernel while its footprint admits a >= 64
+token tile within the budget (``LDAConfig.vmem_budget_bytes`` >
+``REPRO_VMEM_BUDGET_BYTES`` > default), and to kblocked beyond that.
+Resolution is cached per shape so dispatch is deterministic within a
+process and never retraces across mini-batches (compile-count pinned).
 
 Set ``REPRO_SWEEP_CALIBRATE=0`` to skip the ~100 ms measurement and use
 the committed fallback coefficients (measured on a 2-core CPU container).
@@ -161,17 +173,47 @@ def dense_layout_cost(T: int, K: int, Pk: int, P: int,
     return gather + update + theta + scatter + table
 
 
+def _pad_to(n: int, m: int) -> int:
+    return -(-int(n) // m) * m
+
+
+def carry_vmem_fit(K: int, P: int, n_docs: int,
+                   vmem_budget_bytes=None) -> bool:
+    """Dispatch-side VMEM-fit predicate for the one-pass carry kernel.
+
+    Takes LOGICAL shapes (K topics, P power rows, n_docs documents) and
+    applies the kernel's padding contract (K to 128 lanes, rows/docs to
+    8 sublanes plus the guard row) before asking
+    `kernels.power_sweep.kernel.carry_vmem_fits` whether the footprint
+    admits a >= 64 token tile within the budget.
+    """
+    from repro.kernels.power_sweep.kernel import carry_vmem_fits
+    return carry_vmem_fits(_pad_to(max(K, 1), 128),
+                           _pad_to(int(P) + 1, 8),
+                           _pad_to(max(n_docs, 1), 8),
+                           vmem_budget_bytes)
+
+
 @functools.lru_cache(maxsize=512)
 def _resolve_cached(policy: str, T: int, K: int, Pk: int, P: int,
-                    crossover: int, impl: str) -> str:
+                    crossover: int, impl: str, n_docs: int,
+                    budget: int) -> str:
+    if policy == "kblocked" and impl != "pallas":
+        # XLA has no VMEM budget: the jnp mirror of kblocked IS the
+        # dense-layout formulation (same math, same sync bytes)
+        return "dense_layout"
     if policy != "auto":
         return policy
     if impl == "pallas":
         # the carry-resident megakernel IS the dense-layout formulation:
         # one HBM read + one write of the [T, K] carry per iteration, all
-        # one-hot work on the MXU (kernels/power_sweep).  The packed
-        # kernel path remains reachable via sweep_policy='packed'.
-        return "dense_layout"
+        # one-hot work on the MXU (kernels/power_sweep).  When the full-K
+        # carry footprint stops admitting a useful token tile, the
+        # K-blocked two-pass variant takes over (DESIGN.md §13).  The
+        # packed kernel path remains reachable via sweep_policy='packed'.
+        if carry_vmem_fit(K, P, n_docs, budget):
+            return "dense_layout"
+        return "kblocked"
     c = measure_coeffs()
     cp = packed_cost(T, K, Pk, P, crossover, c)
     cd = dense_layout_cost(T, K, Pk, P, c)
@@ -179,17 +221,25 @@ def _resolve_cached(policy: str, T: int, K: int, Pk: int, P: int,
 
 
 def resolve_sweep_policy(cfg, T: int, K: int, Pk: int, P: int,
-                         impl: Optional[str] = None) -> str:
+                         impl: Optional[str] = None,
+                         n_docs: Optional[int] = None) -> str:
     """Resolve cfg.sweep_policy to a concrete formulation for this shape.
 
     Called at trace time (all arguments are static Python ints), cached
     per shape: the same (cfg, shape) always dispatches identically within
     a process, so bucketed streams never retrace on policy flapping.
+    ``n_docs`` feeds the pallas VMEM-fit predicate (the theta table is
+    grid-resident); callers that don't know it get a conservative
+    default that only matters near the budget boundary.
     """
     policy = cfg.sweep_policy
-    if policy not in ("auto", "packed", "dense_layout"):
-        raise ValueError(f"unknown sweep_policy: {policy!r} "
-                         f"(expected auto | packed | dense_layout)")
+    if policy not in ("auto", "packed", "dense_layout", "kblocked"):
+        raise ValueError(f"unknown sweep_policy: {policy!r} (expected "
+                         f"auto | packed | dense_layout | kblocked)")
+    from repro.kernels.power_sweep.kernel import vmem_budget
+    budget = vmem_budget(getattr(cfg, "vmem_budget_bytes", None))
     return _resolve_cached(policy, int(T), int(K), int(Pk), int(P),
                            int(cfg.onehot_crossover),
-                           cfg.impl if impl is None else impl)
+                           cfg.impl if impl is None else impl,
+                           int(n_docs) if n_docs is not None else 256,
+                           budget)

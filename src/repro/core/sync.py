@@ -187,14 +187,18 @@ class Reducer:
         raise NotImplementedError
 
     def psum(self, x: jnp.ndarray, phase: str, compress: bool = True,
-             w_rows: Optional[int] = None) -> jnp.ndarray:
+             w_rows: Optional[int] = None, dtype=None) -> jnp.ndarray:
         """All-reduce `x`; payload cast to sync_dtype when `compress`.
 
         ``w_rows`` marks a vocabulary-proportional payload (recorded at
-        capacity, billed at live W by ``CommMeter.bytes_by_phase_at``)."""
+        capacity, billed at live W by ``CommMeter.bytes_by_phase_at``).
+        ``dtype`` overrides the payload dtype for this call (compressed
+        phi-statistic runs ship their deltas at phi_acc_dtype width —
+        the meter bills the cast payload, so bytes halve for real)."""
         orig = x.dtype
-        if compress and x.dtype != self.sync_dtype:
-            x = x.astype(self.sync_dtype)
+        wire = dtype if dtype is not None else self.sync_dtype
+        if compress and x.dtype != wire:
+            x = x.astype(wire)
         self.meter.record(phase, x, w_rows=w_rows)
         out = self._sum(x)
         return out.astype(orig)
@@ -230,9 +234,10 @@ class LocalReducer(Reducer):
     property of the algorithm configuration, not of the shard count)."""
 
     def psum(self, x, phase: str, compress: bool = True,
-             w_rows: Optional[int] = None):
-        if compress and x.dtype != self.sync_dtype:
-            return x.astype(self.sync_dtype).astype(x.dtype)
+             w_rows: Optional[int] = None, dtype=None):
+        wire = dtype if dtype is not None else self.sync_dtype
+        if compress and x.dtype != wire:
+            return x.astype(wire).astype(x.dtype)
         return x
 
     def _sum(self, x):

@@ -55,13 +55,26 @@ class LDAConfig:
     sync_dtype: str = "float32"     # 'float32' | 'bfloat16' (beyond-paper byte halving)
     # --- compute backend for the dense sweep ---
     impl: str = "jnp"               # 'jnp' | 'pallas' (fused bp_update kernel)
-    # --- selective-sweep formulation (DESIGN.md §2 cost model) ---
+    # --- selective-sweep formulation (DESIGN.md §2 / §13 cost model) ---
     # 'auto' picks per (T, K, Pk, P) from the measured cost model at trace
-    # time; 'packed' forces the [T, Pk] stream + fold-back chain; 'dense_
-    # layout' forces the one-pass [T, K] masked formulation (the jnp mirror
-    # of the carry-resident power_sweep megakernel).  Identical selective
-    # math and identical packed Eq. 6 communication either way.
-    sweep_policy: str = "auto"      # 'auto' | 'packed' | 'dense_layout'
+    # time (on pallas, extended with the VMEM-fit predicate: full-K carry
+    # while it fits, kblocked beyond); 'packed' forces the [T, Pk] stream +
+    # fold-back chain; 'dense_layout' forces the one-pass [T, K] masked
+    # formulation (the jnp mirror of the carry-resident power_sweep
+    # megakernel); 'kblocked' forces the K-blocked two-pass carry kernel
+    # (ultra-high K; on the jnp impl an alias of dense_layout).  Identical
+    # selective math and identical packed Eq. 6 communication any way.
+    sweep_policy: str = "auto"  # 'auto'|'packed'|'dense_layout'|'kblocked'
+    # VMEM byte budget for the pallas tile choosers and the kblocked
+    # dispatch predicate; None resolves REPRO_VMEM_BUDGET_BYTES then the
+    # built-in default (kernels/power_sweep/kernel.py).
+    vmem_budget_bytes: Optional[int] = None
+    # --- compressed phi accumulators (DESIGN.md §13) ---
+    # Storage dtype of the streaming phi_acc statistic: 'float32' (exact)
+    # or 'bfloat16' (halves accumulator HBM + Eq. 6 phi-delta sync bytes;
+    # the Eq. 11 accumulate runs in f32 and folds back with stochastic
+    # rounding so small per-batch deltas are not systematically lost).
+    phi_acc_dtype: str = "float32"  # 'float32' | 'bfloat16'
     # Crossover for the packed path's [P, Pk] accumulation: one-hot MXU
     # contraction while T*P <= crossover, row-scatter above.  Consumed by
     # the dispatch cost model (core/sweep_dispatch.py).

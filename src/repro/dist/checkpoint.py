@@ -134,24 +134,26 @@ def peek_extra(directory: str, step: Optional[int] = None
 
 def restore_latest(directory: str, template: Dict[str, Any],
                    shardings: Optional[Dict[str, Any]] = None,
-                   grow_rows: Tuple[str, ...] = ()
+                   grow_rows: Tuple[str, ...] = (),
+                   cast_dtypes: Tuple[str, ...] = ()
                    ) -> Optional[Tuple[Dict[str, Any], Dict[str, Any], int]]:
     """Restore the newest complete checkpoint, or return None.
 
     The cold-start branch of a crash-resume driver collapses to
     ``got = restore_latest(dir, template)`` followed by an ``if got:``.
-    `grow_rows` enables the elastic W-reshard for the named leaves
-    (see ``restore``).
+    `grow_rows` enables the elastic W-reshard and `cast_dtypes` the
+    dtype up/down-cast for the named leaves (see ``restore``).
     """
     step = latest_step(directory)
     if step is None:
         return None
-    return restore(directory, step, template, shardings, grow_rows=grow_rows)
+    return restore(directory, step, template, shardings, grow_rows=grow_rows,
+                   cast_dtypes=cast_dtypes)
 
 
 def restore_phi(directory: str, step: Optional[int] = None,
                 leaf: str = "phi_acc", sharding: Optional[Any] = None,
-                w_cap: Optional[int] = None
+                w_cap: Optional[int] = None, dtype: Optional[Any] = None
                 ) -> Tuple[Any, Dict[str, Any], int]:
     """Serving entry point: load ONE leaf of a driver checkpoint.
 
@@ -165,6 +167,9 @@ def restore_phi(directory: str, step: Optional[int] = None,
     `w_cap` resizes the vocabulary axis across capacity rungs (elastic
     W-reshard, DESIGN.md §12): a phi saved at a smaller rung is zero-padded
     to `w_cap` rows (the pad rows are guard rows); shrinking raises.
+    `dtype` casts the restored leaf (compressed-accumulator round-trips,
+    DESIGN.md §13: a bf16-trained phi may serve in f32 and vice versa);
+    None keeps the saved dtype.
     Returns (array, extra, step); raises ``FileNotFoundError`` when the
     directory holds no complete checkpoint and ``ValueError`` when `leaf`
     is missing or ambiguous.
@@ -190,6 +195,8 @@ def restore_phi(directory: str, step: Optional[int] = None,
                         np.dtype(rec["dtype"])).reshape(tuple(rec["shape"]))
     if w_cap is not None:
         arr = _pad_rows(arr, w_cap, repr(leaf))
+    if dtype is not None and arr.dtype != np.dtype(dtype):
+        arr = arr.astype(np.dtype(dtype))
     if sharding is not None:
         arr = jax.device_put(arr, sharding)
     else:
@@ -199,7 +206,8 @@ def restore_phi(directory: str, step: Optional[int] = None,
 
 def restore(directory: str, step: int, template: Dict[str, Any],
             shardings: Optional[Dict[str, Any]] = None,
-            grow_rows: Tuple[str, ...] = ()
+            grow_rows: Tuple[str, ...] = (),
+            cast_dtypes: Tuple[str, ...] = ()
             ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:
     """Load the checkpoint at `step` into the structure of `template`.
 
@@ -209,7 +217,11 @@ def restore(directory: str, step: int, template: Dict[str, Any],
     `grow_rows` names leaves (by key-path suffix, e.g. ``"phi_acc"``) whose
     axis-0 size may be SMALLER in the checkpoint than in the template: the
     saved rows are zero-padded up to the template (elastic W-reshard across
-    capacity rungs, DESIGN.md §12 — pad rows are guard rows).  Any other
+    capacity rungs, DESIGN.md §12 — pad rows are guard rows).
+    `cast_dtypes` (same suffix matching) permits a dtype MISMATCH for the
+    named leaves: the saved leaf is cast to the template dtype on load
+    (compressed-accumulator round-trips, DESIGN.md §13 — switch a run
+    between float32 and bfloat16 phi_acc at a restore fence).  Any other
     mismatch, including shrinking, still raises.
     Returns (trees, extra, step).
     """
@@ -241,7 +253,11 @@ def restore(directory: str, step: int, template: Dict[str, Any],
             raise ValueError(f"shape mismatch for {key}: saved {shape} != "
                              f"template {want}")
         want_dtype = getattr(leaf, "dtype", None)
-        if want_dtype is not None and np.dtype(rec["dtype"]) != np.dtype(want_dtype):
+        castable = (want_dtype is not None
+                    and any(key.endswith(f"['{name}']")
+                            for name in cast_dtypes))
+        if (want_dtype is not None and not castable
+                and np.dtype(rec["dtype"]) != np.dtype(want_dtype)):
             raise ValueError(f"dtype mismatch for {key}: saved "
                              f"{rec['dtype']} != template {np.dtype(want_dtype)}")
         raw = data[f"leaf_{i}"]
@@ -249,6 +265,8 @@ def restore(directory: str, step: int, template: Dict[str, Any],
         arr = arr.reshape(shape)
         if shape != want:        # growable: pad rows up to the template rung
             arr = _pad_rows(arr, want[0], key)
+        if castable and arr.dtype != np.dtype(want_dtype):
+            arr = arr.astype(np.dtype(want_dtype))
         if sh_flat is not None:
             arr = jax.device_put(arr, sh_flat[i][1])
         else:

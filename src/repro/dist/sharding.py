@@ -139,7 +139,11 @@ def phi_serving_spec(mesh, phi) -> P:
     The W axis is never sharded, so the spec stays valid under dynamic
     vocabulary growth (§12): a phi grown to any capacity rung — including
     the +1 guard/OOV row the serving engine appends — resolves to the same
-    ``P(None, 'model')`` with no divisibility constraint on W."""
+    ``P(None, 'model')`` with no divisibility constraint on W.
+
+    Specs are dtype-agnostic: a compressed bfloat16 phi_acc (§13,
+    ``LDAConfig.phi_acc_dtype``) shards identically to float32 — only the
+    per-shard byte footprint halves."""
     spec = P(None, "model" if "model" in mesh.axis_names else None)
     return validate_specs(spec, phi, mesh)
 

@@ -1,6 +1,6 @@
 """Fused selective power-sweep kernels (Fig. 4 lines 15-21, token-major).
 
-Two kernels share this package:
+Three kernels share this package:
 
   - ``power_sweep_tokens`` — the packed-stream kernel: pre-gathered
     [T, Pk] tiles in, updated [T, Pk] tiles + packed [P1, Pk] buffers out
@@ -15,6 +15,21 @@ Two kernels share this package:
     into the serving fold-in body (core/infer): phi is a normalized
     constant (no self-count subtraction, zero packed outputs) and the
     per-doc |delta| residual accumulates instead.
+  - ``power_sweep_carry_kblocked_tokens`` — the K-blocked megakernel
+    (DESIGN.md §13): the same carry-resident math tiled as [TT, KB]
+    topic blocks over a 2D grid, so the token tile no longer shrinks
+    with K.  The mass-conserving renormalization needs complete per-token
+    row sums over ALL of K before any mu can be rewritten, and a Pallas
+    output block may only be revisited on consecutive grid steps — so the
+    sweep runs as two pallas_calls: a **sums pass** with K blocks
+    innermost (per-token mass/denominator accumulators stay grid-resident
+    at [TT, 1]) and an **update pass** with token tiles innermost (the
+    per-K-block table accumulators stay grid-resident at [rows, KB]).
+    The update pass recomputes the u block instead of staging a [T, K]
+    temporary — the gathers run twice, trading MXU flops for the VMEM/HBM
+    a staged u would cost.  One K block covering all of K routes straight
+    back to the one-pass megakernel: the full-K kernel is the NKB == 1
+    specialization of this path.
 
 One packed-stream grid pass performs, entirely in VMEM:
 
@@ -44,6 +59,7 @@ counts, packed rows padded to a sublane multiple with zero phi rows.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +67,48 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import kernels as K_
+
+# default per-core VMEM byte budget for the tile choosers; override per
+# call (LDAConfig.vmem_budget_bytes) or process-wide via the
+# REPRO_VMEM_BUDGET_BYTES environment variable
+DEFAULT_VMEM_BUDGET = 12_500_000
+
+
+def vmem_budget(override=None) -> int:
+    """Resolve the VMEM byte budget: explicit override > env > default."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("REPRO_VMEM_BUDGET_BYTES", "")
+    return int(env) if env else DEFAULT_VMEM_BUDGET
+
+
+def _pow2_tile(fixed_bytes: int, per_token_bytes: int, budget: int) -> int:
+    """Largest power-of-two TT in [8, 512] fitting the VMEM budget.
+
+    ``fixed_bytes`` is the grid-resident footprint (tables/accumulators
+    whose BlockSpec index is constant), ``per_token_bytes`` the marginal
+    cost of one carry row.  Power of two so `fit_token_tile`'s halving
+    always lands on a full sublane-aligned tile; floors at 8 even when
+    the fixed footprint alone busts the budget — that case surfaces as a
+    Mosaic VMEM error on real TPU rather than a silent wrong answer.
+    """
+    tt = max(8, min(512, max(0, budget - fixed_bytes) // per_token_bytes))
+    return 1 << (tt.bit_length() - 1)
+
+
+def fit_token_tile(n_tokens: int, tt: int) -> int:
+    """Shrink TT (power of two) until it divides T, clamped at the floor
+    of 8.  T not divisible by 8 is a caller bug — the grid would silently
+    drop the trailing tokens — so it raises instead of degenerating to
+    TT < 8 (ops.py always pads T to a multiple of 8).
+    """
+    while n_tokens % tt and tt > 8:
+        tt //= 2
+    if n_tokens % tt:
+        raise ValueError(
+            f"token count {n_tokens} is not a multiple of the minimum "
+            f"tile 8; pad T before calling (see ops.py padding contract)")
+    return tt
 
 
 def _kernel(p_tok_ref, c_ref, mu_ref, th_ref, pt_ref, phi_ref,
@@ -102,22 +160,13 @@ def _kernel(p_tok_ref, c_ref, mu_ref, th_ref, pt_ref, phi_ref,
 
 
 def token_tile(pk_width: int, n_rows: int,
-               vmem_budget_bytes: int = 12_500_000) -> int:
-    """Largest power-of-two TT in [8, 512] fitting the VMEM budget.
-
-    Resident per grid step: 5 [TT, Pk] tiles + the [TT, P1] one-hot +
+               vmem_budget_bytes=None) -> int:
+    """Packed-stream tile: 5 [TT, Pk] tiles + the [TT, P1] one-hot +
     3 [P1, Pk] packed buffers (phi in, delta/residual out), all f32.
-    Power of two so the caller's divisibility fallback (halving until
-    TT | T, with T padded to a multiple of 8) always lands on a full
-    sublane-aligned tile instead of collapsing to a degenerate size.
-    Floors at 8 even when the resident packed buffers alone bust the
-    budget (huge P1) — that case surfaces as a Mosaic VMEM error on real
-    TPU rather than a silent wrong answer.
-    """
+    Budget resolves via `vmem_budget` (override > env > default)."""
     fixed = 3 * n_rows * pk_width * 4
     per_token = (5 * pk_width + n_rows) * 4
-    tt = max(8, min(512, max(0, vmem_budget_bytes - fixed) // per_token))
-    return 1 << (tt.bit_length() - 1)
+    return _pow2_tile(fixed, per_token, vmem_budget(vmem_budget_bytes))
 
 
 @functools.partial(jax.jit,
@@ -136,9 +185,7 @@ def power_sweep_tokens(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
     """
     T, Pk = mu_sel.shape
     P1 = phi_pack.shape[0]
-    TT = token_tile(Pk, P1)
-    while T % TT:
-        TT //= 2
+    TT = fit_token_tile(T, token_tile(Pk, P1))
     grid = (T // TT,)
     spec_tk = pl.BlockSpec((TT, Pk), lambda i, p_tok: (i, 0))
     spec_c = pl.BlockSpec((TT, 1), lambda i, p_tok: (i, 0))
@@ -165,14 +212,19 @@ def power_sweep_tokens(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
 # --------------------------------------------------------------------------
 
 
-def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
-                  phi_ref, mask_ref,
-                  mu_out_ref, th_out_ref, d_out_ref, r_out_ref, rd_out_ref,
-                  *, alpha: float, beta: float, wbeta: float, tt: int,
-                  update_phi: bool, n_guard: int):
-    i = pl.program_id(0)
-    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
-    d_tile = pl.load(doc_ref, (pl.dslice(i * tt, tt),))        # [TT] int32
+def _block_terms(p_tile, d_tile, c, mu, theta_ref, pt_ref, phi_ref,
+                 mask_ref, *, alpha: float, beta: float, wbeta: float,
+                 update_phi: bool, n_guard: int):
+    """One [TT, KB] block of the selective update, shared by the full-K
+    carry kernel (KB == K) and both passes of the K-blocked pair.
+
+    Gathers the block's phi/theta rows through MXU one-hot contractions
+    and returns (u, m_tok, onehot_p, onehot_d) — the unnormalized message
+    u = th*ph/pt masked by the token's topic selection.  The
+    renormalization (mass / sum u) is the caller's job: it needs the
+    complete row sum over all of K, which a K block cannot see.
+    """
+    tt = mu.shape[0]
     n_rows = phi_ref.shape[0]                                  # P1 (padded)
     n_docs = theta_ref.shape[0]                                # D  (padded)
     iota_p = jax.lax.broadcasted_iota(jnp.int32, (tt, n_rows), 1)
@@ -180,22 +232,20 @@ def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
     onehot_p = (iota_p == p_tile[:, None]).astype(jnp.float32) # [TT, P1]
     onehot_d = (iota_d == d_tile[:, None]).astype(jnp.float32) # [TT, D]
 
-    c = c_ref[...]                                             # [TT, 1]
-    mu = mu_ref[...]                                           # [TT, K]
     row_dims = (((1,), (0,)), ((), ()))
     phi_tok = jax.lax.dot_general(                             # MXU row gathers
         onehot_p, phi_ref[...], row_dims,
-        preferred_element_type=jnp.float32)                    # [TT, K]
+        preferred_element_type=jnp.float32)                    # [TT, KB]
     theta_tok = jax.lax.dot_general(
         onehot_d, theta_ref[...], row_dims,
-        preferred_element_type=jnp.float32)                    # [TT, K]
+        preferred_element_type=jnp.float32)                    # [TT, KB]
 
     self_c = c * mu
     th = theta_tok - self_c + alpha
     if update_phi:
         m_tok = jax.lax.dot_general(
             onehot_p, mask_ref[...], row_dims,
-            preferred_element_type=jnp.float32)                # [TT, K]
+            preferred_element_type=jnp.float32)                # [TT, KB]
         ph = phi_tok - self_c + beta
         pt = pt_ref[...] - self_c + wbeta
     else:
@@ -207,8 +257,26 @@ def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
         # denominator trick (pt_ref = 0, wbeta = 1) makes pt exactly 1
         m_tok = (p_tile != n_guard)[:, None].astype(jnp.float32)
         ph = phi_tok + beta
-        pt = pt_ref[...] + wbeta                               # [1, K] bcast
+        pt = pt_ref[...] + wbeta                               # [1, KB] bcast
     u = th * ph / pt * m_tok
+    return u, m_tok, onehot_p, onehot_d
+
+
+def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
+                  phi_ref, mask_ref,
+                  mu_out_ref, th_out_ref, d_out_ref, r_out_ref, rd_out_ref,
+                  *, alpha: float, beta: float, wbeta: float, tt: int,
+                  update_phi: bool, n_guard: int):
+    i = pl.program_id(0)
+    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
+    d_tile = pl.load(doc_ref, (pl.dslice(i * tt, tt),))        # [TT] int32
+
+    c = c_ref[...]                                             # [TT, 1]
+    mu = mu_ref[...]                                           # [TT, K]
+    u, m_tok, onehot_p, onehot_d = _block_terms(
+        p_tile, d_tile, c, mu, theta_ref, pt_ref, phi_ref, mask_ref,
+        alpha=alpha, beta=beta, wbeta=wbeta, update_phi=update_phi,
+        n_guard=n_guard)
     mass = jnp.sum(mu * m_tok, axis=-1, keepdims=True)         # conserved
     denom = jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), 1e-30)
     mu_new = jnp.where(m_tok > 0, u * (mass / denom), mu)
@@ -238,30 +306,67 @@ def _carry_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
             preferred_element_type=jnp.float32)
 
 
-def carry_token_tile(k_width: int, n_rows: int, n_docs: int,
-                     vmem_budget_bytes: int = 12_500_000) -> int:
-    """Largest power-of-two TT in [8, 512] fitting the VMEM budget.
-
-    Resident per grid step: ~5 [TT, K] tiles, the [TT, P1] + [TT, D]
-    one-hots, and the grid-resident tables/accumulators (phi/mask/d/r at
-    [P1, K], theta in/out + rd at [D, K]), all f32.  Same power-of-two /
-    floor-at-8 contract as `token_tile`.
-    """
+def _carry_footprint(k_width: int, n_rows: int, n_docs: int):
+    """(fixed, per_token) f32 bytes of the carry kernel at block width
+    ``k_width``: ~5 [TT, k] tiles + [TT, P1]/[TT, D] one-hots per token,
+    and the grid-resident tables/accumulators (phi/mask/d/r at [P1, k],
+    theta in/out + rd at [D, k])."""
     fixed = (4 * n_rows + 3 * n_docs) * k_width * 4
     per_token = (5 * k_width + n_rows + n_docs) * 4
-    tt = max(8, min(512, max(0, vmem_budget_bytes - fixed) // per_token))
-    return 1 << (tt.bit_length() - 1)
+    return fixed, per_token
+
+
+def carry_token_tile(k_width: int, n_rows: int, n_docs: int,
+                     vmem_budget_bytes=None) -> int:
+    """Carry-kernel tile at block width ``k_width`` (the full K for the
+    one-pass megakernel, KB for the K-blocked pair).  Same power-of-two /
+    floor-at-8 contract as `token_tile`; budget via `vmem_budget`."""
+    fixed, per_token = _carry_footprint(k_width, n_rows, n_docs)
+    return _pow2_tile(fixed, per_token, vmem_budget(vmem_budget_bytes))
+
+
+def carry_vmem_fits(k_width: int, n_rows: int, n_docs: int,
+                    vmem_budget_bytes=None, min_tile: int = 64) -> bool:
+    """Does the carry kernel fit the VMEM budget at block width
+    ``k_width`` with a usefully large token tile?
+
+    The chooser floors TT at 8 no matter what, so "fits" here means the
+    fixed tables plus ``min_tile`` carry rows stay inside the budget — a
+    tile below ~64 re-fetches the grid-resident tables so often the
+    kernel loses to the K-blocked path anyway.  This is the dispatch-side
+    predicate `core.sweep_dispatch` uses to pick full-K vs kblocked.
+    """
+    fixed, per_token = _carry_footprint(k_width, n_rows, n_docs)
+    return fixed + min_tile * per_token <= vmem_budget(vmem_budget_bytes)
+
+
+def kblock_width(k_width: int, n_rows: int, n_docs: int,
+                 vmem_budget_bytes=None) -> int:
+    """Topic-block width KB for the K-blocked sweep: the largest of
+    (512, 256, 128) dividing K whose carry footprint passes
+    `carry_vmem_fits`, else the smallest divisor (the Mosaic VMEM error
+    then surfaces on real TPU instead of a silent wrong answer).
+    K must be lane-padded (multiple of 128) so 128 always divides.
+    """
+    if k_width % 128:
+        raise ValueError(f"kblock_width needs K padded to 128, got {k_width}")
+    cands = [d for d in (512, 256, 128) if k_width % d == 0]
+    for d in cands:
+        if carry_vmem_fits(d, n_rows, n_docs, vmem_budget_bytes):
+            return d
+    return cands[-1]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("alpha", "beta", "wbeta", "update_phi",
-                                    "n_guard"))
+                                    "n_guard", "vmem_budget_bytes"))
 def power_sweep_carry_tokens(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
                              counts_t: jnp.ndarray, mu_t: jnp.ndarray,
                              theta: jnp.ndarray, pt_row: jnp.ndarray,
                              phi_rows: jnp.ndarray, mask_rows: jnp.ndarray,
                              *, alpha: float, beta: float, wbeta: float,
-                             update_phi: bool = True, n_guard: int = -1):
+                             update_phi: bool = True, n_guard: int = -1,
+                             vmem_budget_bytes=None):
     """Carry-resident selective sweep over the full [T, K] carry.
 
     p_tok [T] int32 power-row id per token (rows with an all-zero mask —
@@ -289,9 +394,7 @@ def power_sweep_carry_tokens(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
     P1 = phi_rows.shape[0]
     D = theta.shape[0]
     n_mask = mask_rows.shape[0]
-    TT = carry_token_tile(K, P1, D)
-    while T % TT:
-        TT //= 2
+    TT = fit_token_tile(T, carry_token_tile(K, P1, D, vmem_budget_bytes))
     grid = (T // TT,)
     n_dr = P1 if update_phi else 8
     n_rd = 8 if update_phi else D
@@ -321,3 +424,188 @@ def power_sweep_carry_tokens(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
                    jax.ShapeDtypeStruct((n_rd, K), jnp.float32)],
         interpret=K_.INTERPRET,
     )(p_tok, doc_ids, counts_t, mu_t, theta, pt_row, phi_rows, mask_rows)
+
+
+# --------------------------------------------------------------------------
+# K-blocked carry megakernel (ultra-high-K formulation, DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+
+def _carry_sums_kernel(p_tok_ref, doc_ref, c_ref, mu_ref, theta_ref, pt_ref,
+                       phi_ref, mask_ref, mass_ref, denom_ref, *,
+                       alpha: float, beta: float, wbeta: float, tt: int,
+                       update_phi: bool, n_guard: int):
+    """Pass 1 of the K-blocked sweep: complete the per-token row sums.
+
+    Grid (T//TT, NKB) with K blocks innermost, so the [TT, 1] mass and
+    denominator outputs are revisited only on consecutive steps (the
+    Pallas output-revisit rule) and stay grid-resident while the token
+    tile's K blocks stream through VMEM.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
+    d_tile = pl.load(doc_ref, (pl.dslice(i * tt, tt),))        # [TT] int32
+
+    c = c_ref[...]                                             # [TT, 1]
+    mu = mu_ref[...]                                           # [TT, KB]
+    u, m_tok, _, _ = _block_terms(
+        p_tile, d_tile, c, mu, theta_ref, pt_ref, phi_ref, mask_ref,
+        alpha=alpha, beta=beta, wbeta=wbeta, update_phi=update_phi,
+        n_guard=n_guard)
+
+    @pl.when(j == 0)
+    def _init():
+        mass_ref[...] = jnp.zeros_like(mass_ref)
+        denom_ref[...] = jnp.zeros_like(denom_ref)
+
+    mass_ref[...] += jnp.sum(mu * m_tok, axis=-1, keepdims=True)
+    denom_ref[...] += jnp.sum(u, axis=-1, keepdims=True)
+
+
+def _carry_update_kernel(p_tok_ref, doc_ref, c_ref, mass_ref, denom_ref,
+                         mu_ref, theta_ref, pt_ref, phi_ref, mask_ref,
+                         mu_out_ref, th_out_ref, d_out_ref, r_out_ref,
+                         rd_out_ref, *, alpha: float, beta: float,
+                         wbeta: float, tt: int, update_phi: bool,
+                         n_guard: int):
+    """Pass 2 of the K-blocked sweep: renormalize, fold back, accumulate.
+
+    Grid (NKB, T//TT) with token tiles innermost, so each K block's
+    [rows, KB] table accumulators (theta delta, packed d/r, doc residual)
+    stay grid-resident across the whole token stream and are written to
+    HBM once per block.  u is recomputed from the same inputs as pass 1 —
+    the gathers run twice, which is cheaper than staging a [T, K] u.
+    """
+    j = pl.program_id(0)                                       # K block
+    i = pl.program_id(1)                                       # token tile
+    p_tile = pl.load(p_tok_ref, (pl.dslice(i * tt, tt),))      # [TT] int32
+    d_tile = pl.load(doc_ref, (pl.dslice(i * tt, tt),))        # [TT] int32
+
+    c = c_ref[...]                                             # [TT, 1]
+    mu = mu_ref[...]                                           # [TT, KB]
+    u, m_tok, onehot_p, onehot_d = _block_terms(
+        p_tile, d_tile, c, mu, theta_ref, pt_ref, phi_ref, mask_ref,
+        alpha=alpha, beta=beta, wbeta=wbeta, update_phi=update_phi,
+        n_guard=n_guard)
+    mass = mass_ref[...]                                       # complete sums
+    denom = jnp.maximum(denom_ref[...], 1e-30)
+    mu_new = jnp.where(m_tok > 0, u * (mass / denom), mu)
+    mu_out_ref[...] = mu_new                                   # fold-back
+
+    cd = c * (mu_new - mu)
+    acc_dims = (((0,), (0,)), ((), ()))
+
+    @pl.when(i == 0)
+    def _init():
+        th_out_ref[...] = jnp.zeros_like(th_out_ref)
+        d_out_ref[...] = jnp.zeros_like(d_out_ref)
+        r_out_ref[...] = jnp.zeros_like(r_out_ref)
+        rd_out_ref[...] = jnp.zeros_like(rd_out_ref)
+
+    th_out_ref[...] += jax.lax.dot_general(                    # theta delta
+        onehot_d, cd, acc_dims, preferred_element_type=jnp.float32)
+    if update_phi:
+        d_out_ref[...] += jax.lax.dot_general(
+            onehot_p, cd, acc_dims, preferred_element_type=jnp.float32)
+        r_out_ref[...] += jax.lax.dot_general(
+            onehot_p, jnp.abs(cd), acc_dims,
+            preferred_element_type=jnp.float32)
+    else:
+        rd_out_ref[...] += jax.lax.dot_general(                # doc residual
+            onehot_d, jnp.abs(cd), acc_dims,
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "beta", "wbeta", "update_phi",
+                                    "n_guard", "kb", "vmem_budget_bytes"))
+def power_sweep_carry_kblocked_tokens(
+        p_tok: jnp.ndarray, doc_ids: jnp.ndarray, counts_t: jnp.ndarray,
+        mu_t: jnp.ndarray, theta: jnp.ndarray, pt_row: jnp.ndarray,
+        phi_rows: jnp.ndarray, mask_rows: jnp.ndarray, *,
+        alpha: float, beta: float, wbeta: float, update_phi: bool = True,
+        n_guard: int = -1, kb=None, vmem_budget_bytes=None):
+    """K-blocked carry-resident sweep: identical contract and outputs as
+    `power_sweep_carry_tokens`, with the carry tiled as [TT, KB] topic
+    blocks over a 2D grid so TT no longer shrinks with K.
+
+    ``kb`` pins the topic-block width (must divide K); by default
+    `kblock_width` picks the largest of (512, 256, 128) whose footprint
+    fits the VMEM budget.  A single block covering all of K routes back
+    to the one-pass megakernel — the full-K kernel is the NKB == 1
+    specialization.  Results differ from full-K only by the summation
+    order of the renormalization reductions (float associativity).
+    """
+    T, K = mu_t.shape
+    P1 = phi_rows.shape[0]
+    D = theta.shape[0]
+    n_mask = mask_rows.shape[0]
+    KB = int(kb) if kb else kblock_width(K, P1, D, vmem_budget_bytes)
+    if K % KB:
+        raise ValueError(f"kb={KB} must divide the padded K={K}")
+    if KB >= K:
+        return power_sweep_carry_tokens(
+            p_tok, doc_ids, counts_t, mu_t, theta, pt_row, phi_rows,
+            mask_rows, alpha=alpha, beta=beta, wbeta=wbeta,
+            update_phi=update_phi, n_guard=n_guard,
+            vmem_budget_bytes=vmem_budget_bytes)
+    if not update_phi and n_guard < 0:
+        raise ValueError("update_phi=False requires the static n_guard "
+                         "(logical guard-row id) for the mask compare")
+    NKB = K // KB
+    TT = fit_token_tile(T, carry_token_tile(KB, P1, D, vmem_budget_bytes))
+    n_dr = P1 if update_phi else 8
+    n_rd = 8 if update_phi else D
+    body = dict(alpha=alpha, beta=beta, wbeta=wbeta, tt=TT,
+                update_phi=update_phi, n_guard=n_guard)
+
+    # pass 1 — K blocks innermost: per-token sums stay grid-resident
+    s_tk = pl.BlockSpec((TT, KB), lambda i, j, p_tok, doc_ids: (i, j))
+    s_c = pl.BlockSpec((TT, 1), lambda i, j, p_tok, doc_ids: (i, 0))
+    s_rows = pl.BlockSpec((P1, KB), lambda i, j, p_tok, doc_ids: (0, j))
+    s_mask = pl.BlockSpec((n_mask, KB), lambda i, j, p_tok, doc_ids: (0, j))
+    s_docs = pl.BlockSpec((D, KB), lambda i, j, p_tok, doc_ids: (0, j))
+    s_pt = pl.BlockSpec((1, KB), lambda i, j, p_tok, doc_ids: (0, j))
+    s_sum = pl.BlockSpec((TT, 1), lambda i, j, p_tok, doc_ids: (i, 0))
+    sums_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T // TT, NKB),
+        in_specs=[s_c, s_tk, s_docs, s_pt, s_rows, s_mask],
+        out_specs=[s_sum, s_sum],
+    )
+    mass, denom = pl.pallas_call(
+        functools.partial(_carry_sums_kernel, **body),
+        grid_spec=sums_spec,
+        out_shape=[jax.ShapeDtypeStruct((T, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((T, 1), jnp.float32)],
+        interpret=K_.INTERPRET,
+    )(p_tok, doc_ids, counts_t, mu_t, theta, pt_row, phi_rows, mask_rows)
+
+    # pass 2 — token tiles innermost: table accumulators stay grid-resident
+    u_tk = pl.BlockSpec((TT, KB), lambda j, i, p_tok, doc_ids: (i, j))
+    u_c = pl.BlockSpec((TT, 1), lambda j, i, p_tok, doc_ids: (i, 0))
+    u_rows = pl.BlockSpec((P1, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_mask = pl.BlockSpec((n_mask, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_docs = pl.BlockSpec((D, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_pt = pl.BlockSpec((1, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_dr = pl.BlockSpec((n_dr, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_rd = pl.BlockSpec((n_rd, KB), lambda j, i, p_tok, doc_ids: (0, j))
+    u_sum = pl.BlockSpec((TT, 1), lambda j, i, p_tok, doc_ids: (i, 0))
+    upd_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(NKB, T // TT),
+        in_specs=[u_c, u_sum, u_sum, u_tk, u_docs, u_pt, u_rows, u_mask],
+        out_specs=[u_tk, u_docs, u_dr, u_dr, u_rd],
+    )
+    return pl.pallas_call(
+        functools.partial(_carry_update_kernel, **body),
+        grid_spec=upd_spec,
+        out_shape=[jax.ShapeDtypeStruct((T, K), jnp.float32),
+                   jax.ShapeDtypeStruct((D, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_dr, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_dr, K), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rd, K), jnp.float32)],
+        interpret=K_.INTERPRET,
+    )(p_tok, doc_ids, counts_t, mass, denom, mu_t, theta, pt_row,
+      phi_rows, mask_rows)

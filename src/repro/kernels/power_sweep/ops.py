@@ -58,14 +58,22 @@ def power_sweep(p_tok: jnp.ndarray, counts_t: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "wbeta",
-                                             "update_phi"))
+                                             "update_phi", "kblocked",
+                                             "kb", "vmem_budget_bytes"))
 def power_sweep_carry(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
                       counts_t: jnp.ndarray, mu_t: jnp.ndarray,
                       theta: jnp.ndarray, phi_tot: jnp.ndarray,
                       phi_rows: jnp.ndarray, mask_rows: jnp.ndarray, *,
                       alpha: float, beta: float, wbeta: float,
-                      update_phi: bool = True):
+                      update_phi: bool = True, kblocked: bool = False,
+                      kb=None, vmem_budget_bytes=None):
     """Carry-resident megakernel over the full [T, K] mu carry.
+
+    ``kblocked=True`` dispatches the K-blocked two-pass variant
+    (DESIGN.md §13) under the identical padding contract — the lane
+    padding already makes K a multiple of 128, which every candidate
+    topic-block width divides; ``kb``/``vmem_budget_bytes`` tune the
+    block width and the tile chooser's budget (default: env/global).
 
     p_tok [T] int32 in [0, P] (P = the guard row: non-power / frozen /
     padding tokens — mask zero, token untouched); doc_ids [T] int32;
@@ -96,7 +104,8 @@ def power_sweep_carry(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
     rdoc (the per-doc |c*delta| mass) is all-zero [D] on the training
     path.
     """
-    from repro.kernels.power_sweep.kernel import power_sweep_carry_tokens
+    from repro.kernels.power_sweep.kernel import (
+        power_sweep_carry_kblocked_tokens, power_sweep_carry_tokens)
 
     T0, K0 = mu_t.shape
     P = phi_rows.shape[0] - 1
@@ -120,7 +129,14 @@ def power_sweep_carry(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
     p_tok_p = _pad_axis(p_tok.astype(jnp.int32), 0, 8, value=P)
     doc_p = _pad_axis(doc_ids.astype(jnp.int32), 0, 8)
 
-    mu_new, th_delta, d_rows, r_rows, rd_rows = power_sweep_carry_tokens(
+    if kblocked:
+        sweep_fn = functools.partial(power_sweep_carry_kblocked_tokens,
+                                     kb=kb,
+                                     vmem_budget_bytes=vmem_budget_bytes)
+    else:
+        sweep_fn = functools.partial(power_sweep_carry_tokens,
+                                     vmem_budget_bytes=vmem_budget_bytes)
+    mu_new, th_delta, d_rows, r_rows, rd_rows = sweep_fn(
         p_tok_p, doc_p, c_p, mu_p, th_p, pt_p, phi_p, msk_p,
         alpha=alpha, beta=beta, wbeta=wbeta, update_phi=update_phi,
         n_guard=P)
@@ -132,3 +148,8 @@ def power_sweep_carry(p_tok: jnp.ndarray, doc_ids: jnp.ndarray,
             r_rows[:n_keep, :K0].astype(dt),
             (jnp.sum(rd_rows[:D0, :K0], axis=1) if not update_phi
              else jnp.zeros((D0,), jnp.float32)).astype(dt))
+
+
+def power_sweep_carry_kblocked(*args, **kwargs):
+    """`power_sweep_carry` pinned to the K-blocked two-pass kernel."""
+    return power_sweep_carry(*args, kblocked=True, **kwargs)

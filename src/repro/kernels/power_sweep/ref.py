@@ -80,3 +80,11 @@ def power_sweep_carry_ref(p_tok, doc_ids, counts_t, mu_t, theta, phi_tot,
         rdoc = jnp.zeros((theta.shape[0],), jnp.float32).at[doc_ids].add(
             jnp.sum(jnp.abs(cd), axis=1))
     return mu_new, theta_delta, d_rows, r_rows, rdoc
+
+
+def power_sweep_carry_kblocked_ref(*args, kb=None, **kwargs):
+    """Oracle for the K-blocked kernel.  Topic blocking only changes the
+    summation order of the renormalization reductions (float
+    associativity) — the math is the full-K reference's; ``kb`` is
+    accepted and ignored."""
+    return power_sweep_carry_ref(*args, **kwargs)

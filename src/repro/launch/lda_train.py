@@ -92,11 +92,20 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["float32", "bfloat16"])
     ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--sweep-policy", default="auto",
-                    choices=["auto", "packed", "dense_layout"],
+                    choices=["auto", "packed", "dense_layout", "kblocked"],
                     help="selective-sweep formulation: 'auto' picks per "
                          "(T, K, Pk, P) from the measured cost model at "
-                         "trace time (DESIGN.md §2); identical math and "
+                         "trace time, falling back to the K-blocked carry "
+                         "megakernel when the full-K carry does not fit "
+                         "VMEM (DESIGN.md §2/§13); identical math and "
                          "identical Eq. 6 sync bytes either way")
+    ap.add_argument("--phi-acc-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="phi_acc storage dtype (DESIGN.md §13): 'bfloat16' "
+                         "halves phi HBM + phi-delta sync bytes; the "
+                         "accumulate runs in f32 with a stochastic-rounded "
+                         "fold-back, so the trajectory tracks f32 within "
+                         "rounding noise")
     ap.add_argument("--onehot-crossover", type=int, default=8_000_000,
                     help="T*P above which the packed path's [P, Pk] "
                          "accumulation switches from one-hot contraction "
@@ -156,6 +165,7 @@ def _build_cfg(args, vocab_size=None):
                      sync_dtype=args.sync_dtype, impl=args.impl,
                      sweep_policy=args.sweep_policy,
                      onehot_crossover=args.onehot_crossover,
+                     phi_acc_dtype=args.phi_acc_dtype,
                      init_pad_len=buckets[-1]), buckets
 
 
@@ -285,16 +295,24 @@ def make_shardmap_train_step(cfg, mesh, sync_mode="power",
     `launch.dryrun.run_lda_cell` compiles (`make_mesh_shard_fn`)."""
     import jax
     import jax.numpy as jnp
-    from repro.core.pobp import _delta_weight, shard_map_minibatch_fn
+    from repro.core import quantize
+    from repro.core.pobp import _SR_FOLD, _delta_weight, shard_map_minibatch_fn
     from repro.core.types import LDATrainState
 
     sync_dtype = jnp.float32 if sync_dtype is None else sync_dtype
     sm, meter = shard_map_minibatch_fn(cfg, mesh, sync_mode, sync_dtype)
+    storage = quantize.phi_acc_dtype(cfg)
 
     def step(state, word_ids, counts):
         rng, sub = jax.random.split(state.rng)
         weight = _delta_weight(cfg, state.m + 1)
         phi, iters, mean_r = sm(word_ids, counts, state.phi_acc, sub, weight)
+        if storage != jnp.float32:
+            # compressed accumulators (§13): stochastic-rounded fold-back to
+            # the storage dtype; the fold_in keeps the split stream (and so
+            # every f32 trajectory) untouched
+            phi = quantize.stochastic_round(
+                phi, storage, jax.random.fold_in(sub, _SR_FOLD))
         new_state = LDATrainState(phi_acc=phi, m=state.m + 1, rng=rng)
         return new_state, dict(iters=iters, mean_r=mean_r, theta=None)
 
@@ -319,7 +337,11 @@ _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
 # NB: sweep_policy / onehot_crossover are deliberately NOT resume keys:
 # both formulations compute the same trajectory (within float
 # associativity) and the same sync bytes, so a resumed run may re-resolve
-# the formulation for its own hardware.
+# the formulation for its own hardware.  phi_acc_dtype is likewise not a
+# resume key: the restore casts the saved phi_acc to the requested storage
+# (``cast_dtypes``), so a run may switch between float32 and bfloat16 at a
+# checkpoint fence (DESIGN.md §13 — the trajectory then tracks within
+# stochastic-rounding noise, not bit-exactly).
 
 
 def _run_signature(args) -> Dict[str, Any]:
@@ -412,7 +434,8 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     if args.ckpt_dir:
         try:
             got = ckpt.restore_latest(args.ckpt_dir, _state_tree(state),
-                                      grow_rows=("phi_acc",))
+                                      grow_rows=("phi_acc",),
+                                      cast_dtypes=("phi_acc",))
         except ValueError as e:
             raise ValueError(
                 f"cannot restore checkpoint from {args.ckpt_dir} ({e}); it "

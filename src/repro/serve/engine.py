@@ -118,6 +118,12 @@ class FoldInEngine:
         self.fold_iters = int(fold_iters)
         self.residual_tol = float(residual_tol)
         phi_in = jnp.asarray(phi_acc)
+        if jnp.issubdtype(phi_in.dtype, jnp.floating) \
+                and phi_in.dtype != jnp.float32:
+            # compressed accumulators (DESIGN.md §13): the statistic may
+            # arrive bf16 from a phi_acc_dtype='bfloat16' run — serving
+            # math (normalization, fold-in) always runs in f32
+            phi_in = phi_in.astype(jnp.float32)
         self.live_words = (int(live_words) if live_words is not None
                            else int(phi_in.shape[0]))
         if not 0 < self.live_words <= phi_in.shape[0]:
@@ -175,8 +181,11 @@ class FoldInEngine:
         from repro.data.vocab import VocabMap
         from repro.dist import checkpoint as ckpt
 
+        # dtype=float32 up-casts a compressed (bf16) checkpoint at load:
+        # serving math always runs in f32 whatever the training storage
         phi_acc, extra, _ = ckpt.restore_phi(ckpt_dir, step=step,
-                                             sharding=sharding)
+                                             sharding=sharding,
+                                             dtype=jnp.float32)
         dyn = extra.get("dyn")
         if dyn is not None:
             # dynamic-vocabulary checkpoint: pick up the vocab table and

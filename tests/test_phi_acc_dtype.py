@@ -1,0 +1,187 @@
+"""Compressed phi accumulators (DESIGN.md §13): stochastic-rounding
+properties, bf16-vs-f32 training parity, checkpoint dtype round-trips in
+both directions, halved sync payload accounting, and bf16 serving."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, quantize
+from repro.core.pobp import grow_state, init_train_state
+from repro.core.sync import CommMeter, SimReducer
+from repro.dist import checkpoint as ckpt
+from repro.launch import lda_train
+
+
+# ------------------------------------------------------ stochastic rounding
+
+def test_stochastic_round_exact_on_representables():
+    """bf16-representable values never move: the dropped mantissa bits are
+    zero, so no dither value can carry."""
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5, 2.0, -3.0, 1.5], jnp.float32)
+    out = quantize.stochastic_round(x, jnp.bfloat16, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(x))
+
+
+def test_stochastic_round_unbiased():
+    """E[sr(x)] == x: the mean over many keys lands between the two
+    neighbouring bf16 values, close to x itself — round-to-nearest would
+    pin it to one side."""
+    x = jnp.full((256,), np.float32(1.0) + np.float32(2.0 ** -12))
+    lo, hi = np.float32(1.0), np.float32(1.0078125)   # bf16 neighbours
+    acc = np.zeros(256, np.float64)
+    n = 200
+    for i in range(n):
+        out = quantize.stochastic_round(x, jnp.bfloat16,
+                                        jax.random.PRNGKey(i))
+        arr = np.asarray(out, np.float32)
+        assert np.all((arr == lo) | (arr == hi))      # rounds to a neighbour
+        acc += arr
+    mean = (acc / n).mean()
+    np.testing.assert_allclose(mean, float(x[0]), rtol=0, atol=2e-4)
+
+
+def test_stochastic_round_f32_passthrough_and_validation():
+    x = jnp.asarray([1.234567], jnp.float32)
+    out = quantize.stochastic_round(x, jnp.float32, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    with pytest.raises(ValueError):
+        quantize.stochastic_round(x, jnp.float16, jax.random.PRNGKey(0))
+
+
+def test_phi_acc_dtype_resolver():
+    assert quantize.phi_acc_dtype(LDAConfig(10, 4)) == jnp.float32
+    cfg = LDAConfig(10, 4, phi_acc_dtype="bfloat16")
+    assert quantize.phi_acc_dtype(cfg) == jnp.bfloat16
+    with pytest.raises(ValueError):
+        quantize.phi_acc_dtype(LDAConfig(10, 4, phi_acc_dtype="float16"))
+
+
+# ------------------------------------------------------- training parity
+
+def _run(phi_acc_dtype, minibatches=6, **kw):
+    return lda_train.train_loop(lda_train.default_args(
+        minibatches=minibatches, docs_per_batch=16, vocab=80, topics=8,
+        shards=2, log_every=0, warmup_buckets=False,
+        phi_acc_dtype=phi_acc_dtype, **kw))
+
+
+def test_bf16_training_tracks_f32():
+    """Full streaming run: the bf16/SR trajectory tracks the f32 one
+    within rounding noise and the final carry is stored narrow.
+
+    Batch 1 already ships its delta syncs at bf16 wire width (that IS the
+    byte-halving feature) and later batches add unbiased SR fold-back
+    noise, so the per-batch mean_r drift is bounded at 1e-2 and the
+    converged held-out perplexity at 1% relative."""
+    r32 = _run("float32")
+    r16 = _run("bfloat16")
+    assert r16["phi_acc"].dtype == jnp.bfloat16
+    assert r32["phi_acc"].dtype == np.float32
+    for a, b in zip(r32["mean_r"], r16["mean_r"]):
+        assert abs(a - b) <= 1e-2, (a, b)
+    assert abs(r32["ppl"] - r16["ppl"]) / r32["ppl"] <= 1e-2
+
+
+def test_bf16_run_does_not_perturb_f32_rng():
+    """The SR key is fold_in-derived, never split from the stream: two f32
+    runs bracket a bf16 run and stay bit-identical."""
+    a = _run("float32", minibatches=3)
+    _run("bfloat16", minibatches=3)
+    b = _run("float32", minibatches=3)
+    np.testing.assert_array_equal(a["phi_acc"], b["phi_acc"])
+
+
+# ------------------------------------------------------------ sync bytes
+
+def test_comm_meter_bytes_halve():
+    """phi-delta payloads ship at bf16 width: dense + power phase bytes
+    halve exactly; residual syncs (compress=False) stay f32."""
+    r32 = _run("float32", minibatches=3)
+    r16 = _run("bfloat16", minibatches=3)
+    assert r16["bytes_by_phase"]["dense"] * 2 == r32["bytes_by_phase"]["dense"]
+    assert r16["bytes_by_phase"]["power"] * 2 == r32["bytes_by_phase"]["power"]
+
+
+def test_reducer_dtype_override_billing():
+    """Unit-level pin of Reducer.psum(dtype=...): the meter records the
+    cast payload and the result returns at the caller's dtype."""
+    meter = CommMeter()
+    red = SimReducer(meter=meter)
+    x = jnp.ones((2, 8, 4), jnp.float32)      # leading shard axis N=2
+    out = red.psum(x, "unit", dtype=jnp.bfloat16)
+    assert out.dtype == jnp.float32
+    assert meter.phase_bytes("unit") == 2 * 8 * 4 * 2   # bf16 itemsize
+    red.psum(x, "unit32")
+    assert meter.phase_bytes("unit32") == 2 * 8 * 4 * 4
+
+
+# ----------------------------------------------------- checkpoint round-trip
+
+def test_checkpoint_roundtrip_both_directions():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"state": {"phi_acc": jnp.full((40, 8), 1.5,
+                                                       jnp.bfloat16)}})
+        # bf16 on disk -> f32 template: cast on load
+        tpl32 = {"state": {"phi_acc": jnp.zeros((40, 8), jnp.float32)}}
+        trees, _, _ = ckpt.restore(d, 1, tpl32, cast_dtypes=("phi_acc",))
+        assert trees["state"]["phi_acc"].dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(trees["state"]["phi_acc"]),
+                                      1.5)
+        # without cast_dtypes the mismatch still raises
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            ckpt.restore(d, 1, tpl32)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"state": {"phi_acc": jnp.full((40, 8), 0.25,
+                                                       jnp.float32)}})
+        # f32 on disk -> bf16 template: cast the other way
+        tpl16 = {"state": {"phi_acc": jnp.zeros((40, 8), jnp.bfloat16)}}
+        trees, _, _ = ckpt.restore(d, 1, tpl16, cast_dtypes=("phi_acc",))
+        assert trees["state"]["phi_acc"].dtype == jnp.bfloat16
+        # restore_phi: saved dtype by default, cast on request
+        arr, _, _ = ckpt.restore_phi(d, leaf="phi_acc")
+        assert arr.dtype == jnp.float32
+        arr, _, _ = ckpt.restore_phi(d, leaf="phi_acc", dtype=jnp.bfloat16)
+        assert arr.dtype == jnp.bfloat16
+
+
+def test_driver_switches_dtype_at_restore_fence():
+    """Train bf16 with checkpoints, resume the stream in f32: the restore
+    casts and the run continues (phi_acc_dtype is not a resume key)."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ck")
+        _run("bfloat16", minibatches=4, ckpt_dir=ck, ckpt_every=2)
+        res = _run("float32", minibatches=6, ckpt_dir=ck, ckpt_every=2)
+        assert res["first_m"] == 4
+        assert res["phi_acc"].dtype == np.float32
+
+
+# -------------------------------------------------------- growth + serving
+
+def test_grow_state_preserves_storage_dtype():
+    cfg = LDAConfig(40, 8, phi_acc_dtype="bfloat16")
+    state = init_train_state(cfg, 0)
+    grown = grow_state(state, 128)
+    assert grown.phi_acc.dtype == jnp.bfloat16
+    assert grown.phi_acc.shape == (128, 8)
+
+
+def test_engine_serves_f32_from_bf16_checkpoint():
+    from repro.serve.engine import FoldInEngine
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ck")
+        _run("bfloat16", minibatches=2, ckpt_dir=ck, ckpt_every=2)
+        eng = FoldInEngine.from_checkpoint(ck, LDAConfig(80, 8))
+        assert eng._phi.dtype == jnp.float32
+        eng.submit((np.asarray([1, 2, 3], np.int32),
+                    np.asarray([1.0, 2.0, 1.0], np.float32)))
+        res = eng.drain()
+        assert len(res) == 1
+        theta = np.asarray(res[0].theta)
+        np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-4)
