@@ -789,6 +789,68 @@ def bench_vocab_growth(quick=False):
 
 
 # ------------------------------------------------------------------
+# this repo's stream lifecycle (ISSUE 7, DESIGN.md §14): RM decay +
+# fenced compaction on a SLIDING drifting-news stream vs the plain
+# accumulate-forever driver — acceptance: live-row occupancy stays
+# <= 1.2x the drifting-truth vocabulary (vs monotone growth without),
+# and end-of-stream sliding held-out ppl is better than no-decay
+# ------------------------------------------------------------------
+
+def bench_drift(quick=False):
+    from repro.launch.lda_train import default_args, train_loop
+
+    window, drift = 192, 4
+    mb = 30 if quick else 60
+    common = dict(minibatches=mb, docs_per_batch=32, shards=1, topics=12,
+                  vocab=window, lambda_k=8, inner_iters=8, tol=1e-9,
+                  dynamic_vocab=True, drift_mode="slide",
+                  vocab_growth_per_batch=drift, w_cap_min=128, w_growth=2.0,
+                  log_every=0, eval_every=10, eval_docs=96,
+                  doc_len_means="24,40", len_buckets="32,48")
+    life = train_loop(default_args(
+        decay="1,0.3", compact_every=5, compact_min_idle=4,
+        compact_mass_tol=60.0, recycle_tol=0.01, **common))
+    base = train_loop(default_args(**common))   # accumulate forever
+
+    truth = window          # the drifting-truth live vocabulary, every batch
+    occ = life["live_w"] / truth
+    occ_base = base["live_w"] / truth
+    out = {"config": dict(common, decay="1,0.3", compact_every=5,
+                          compact_min_idle=4, compact_mass_tol=60.0,
+                          recycle_tol=0.01),
+           "truth_vocab": truth,
+           "lifecycle": {k: life[k] for k in
+                         ("live_w", "w_cap", "ppl", "ppl_trace",
+                          "tokens_per_s", "compiles", "compact_s",
+                          "compaction_events", "occupancy_trace",
+                          "vocab_version", "growth_events")},
+           "baseline": {k: base[k] for k in
+                        ("live_w", "w_cap", "ppl", "ppl_trace",
+                         "tokens_per_s", "compiles", "growth_events")},
+           "occupancy_x_truth": occ,
+           "baseline_occupancy_x_truth": occ_base,
+           "ppl_final": life["ppl"], "ppl_final_baseline": base["ppl"]}
+    _emit("drift/lifecycle_live_w", life["live_w"],
+          f"= {occ:.2f}x truth vocab ({truth}); acceptance <= 1.2x")
+    _emit("drift/baseline_live_w", base["live_w"],
+          f"= {occ_base:.2f}x truth — monotone growth without lifecycle")
+    _emit("drift/compactions", len(life["compaction_events"]),
+          f"vocab_version={life['vocab_version']} "
+          f"compact_s={life['compact_s']:.1f}")
+    _emit("drift/lifecycle_ppl", f"{life['ppl']:.2f}",
+          "sliding held-out, end of stream")
+    _emit("drift/baseline_ppl", f"{base['ppl']:.2f}",
+          "acceptance: lifecycle ppl strictly better")
+    # CI gates (ISSUE 7): bounded occupancy where the baseline grows
+    # monotonically, and the decayed model fits the drifted present better
+    assert occ <= 1.2, out
+    assert occ_base > 1.2, out
+    assert len(life["compaction_events"]) >= 2, out
+    assert life["ppl"] < base["ppl"], out
+    _save("BENCH_drift_quick" if quick else "BENCH_drift", out)
+
+
+# ------------------------------------------------------------------
 # Fig. 6: power-law (rank-size) structure of residuals
 # ------------------------------------------------------------------
 
@@ -826,8 +888,8 @@ def bench_powerlaw(quick=False):
 
 ALL = [bench_comm_volume, bench_lambda_sweep, bench_accuracy, bench_speed,
        bench_inner_loop, bench_e2e, bench_serve, bench_vocab_growth,
-       bench_scalability, bench_memory, bench_complexity, bench_convergence,
-       bench_powerlaw]
+       bench_drift, bench_scalability, bench_memory, bench_complexity,
+       bench_convergence, bench_powerlaw]
 
 
 def main() -> None:

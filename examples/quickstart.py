@@ -119,6 +119,32 @@ def main():
           f"(sum={res.theta.sum():.3f}, oov tokens={res.oov_tokens:.0f}, "
           f"engine oov rate={engine.stats()['oov_rate']:.4f})")
 
+    # ---- stream lifecycle (DESIGN.md §14) ------------------------------
+    # A drifting stream must also FORGET: Robbins-Monro decay fades stale
+    # phi mass, checkpoint-fenced compaction reclaims rows that went both
+    # idle and prior-level, and faded topics are reseeded from emerging
+    # words.  The driver wires it all up:
+    #
+    #   python -m repro.launch.lda_train --dynamic-vocab \
+    #       --drift-mode slide --decay 1,0.3 --compact-every 5 \
+    #       --recycle-tol 0.01
+    #
+    # The pieces compose standalone too — compact a vocab + phi pair:
+    from repro.core import lifecycle
+    from repro.core.pobp import init_train_state
+
+    v = VocabMap(["old", "stale", "fresh"], touched=(0, 0, 9))
+    state = init_train_state(dataclasses.replace(cfg, vocab_size=8), seed=0)
+    dead = lifecycle.dead_rows(row_mass=np.asarray([0.1, 0.2, 50.0]),
+                               last_touched=v.touched_upto(3),
+                               step=10, min_idle=5, mass_floor=1.0)
+    remap = v.compact(~dead)
+    state = lifecycle.apply_row_remap(state, remap)
+    print(f"[lifecycle] reclaimed rows {np.nonzero(dead)[0].tolist()}; "
+          f"survivors {v.to_state()} at rows "
+          f"{[int(r) for r in remap if r >= 0]} — serving hot-swaps the "
+          f"pair via FoldInEngine.swap_phi (results carry phi_version)")
+
 
 if __name__ == "__main__":
     main()

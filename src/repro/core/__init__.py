@@ -16,4 +16,4 @@ from repro.core.pobp import (  # noqa: F401
     run_stream,
 )
 from repro.core import (ref, power, residuals, sync,  # noqa: F401
-                        infer, perplexity)
+                        infer, lifecycle, perplexity)

@@ -1,0 +1,170 @@
+"""Stream-lifecycle state transitions: grow / decay / compact / recycle
+(DESIGN.md §14).
+
+The paper's constant-memory claim (§3.2: OBP keeps sufficient statistics,
+never the corpus) only survives an *unbounded drifting* stream if the
+statistics can also forget.  This module owns every transition of the
+phi-accumulator state machine that is not the per-batch Eq. 11 update:
+
+  - ``resize_state``   — capacity-ladder resize: grow pads guard rows
+    (trajectory-neutral, the old ``core.pobp.grow_state``); shrink cuts
+    guard rows only and is **checkpoint-fenced** — the caller proves the
+    fence by passing the live vocabulary size.
+  - ``apply_row_remap`` — permute phi rows by a VocabMap compaction remap
+    (survivors move to a dense prefix, dead rows zero out), the device
+    half of ``data.vocab.VocabMap.compact``.
+  - ``dead_rows``       — the two-signal dead-word test: a row must be
+    idle (last touched >= ``min_idle`` batches ago) AND its decayed
+    statistic must have faded below a prior-level mass floor.  Both
+    signals are deterministic functions of the consumed batch prefix, so
+    the same stream with the same fence steps always reclaims the same
+    rows (hypothesis-pinned in tests/test_lifecycle_properties.py).
+  - ``dead_topics`` / ``recycle_topics`` — detect topic columns whose
+    live mass has decayed to noise and reseed them from high-residual
+    tokens (rows whose mass is least explained by their dominant topic),
+    so capacity lost to a faded theme is reallocated to emerging ones.
+
+Every *destructive* transition (shrink, remap, recycle) runs only at a
+checkpoint fence: the driver drains the async pipeline, applies the
+transition, and immediately persists the new state + vocab + remap, so a
+crash on either side of the fence resumes onto a consistent (phi, vocab)
+pair (see ``dist.checkpoint`` row-remap restore).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import LDATrainState
+
+
+# --------------------------------------------------------------------------
+# capacity resize (grow = old grow_state; shrink = fenced compaction)
+# --------------------------------------------------------------------------
+
+def resize_state(state: LDATrainState, new_vocab_cap: int,
+                 live_w: Optional[int] = None) -> LDATrainState:
+    """Pure-functional W-capacity resize of the training carry.
+
+    **Grow** (``new_vocab_cap > W``): pad zero guard rows — no live word
+    maps to them yet, so growing is trajectory-neutral (DESIGN.md §12).
+
+    **Shrink** (``new_vocab_cap < W``): only guard rows may be cut, so
+    the caller must pass ``live_w`` — the live vocabulary size at the
+    checkpoint fence this shrink runs under — and the new capacity must
+    still be a valid rung (strictly above ``live_w``, preserving the
+    guard-row invariant).  Shrinking without a fence is refused: cutting
+    rows out from under an async pipeline would tear in-flight batches.
+
+    m and the RNG are untouched; the caller re-derives its step function
+    for the new capacity (one compile per (rung, bucket) pair).
+    """
+    W, K = state.phi_acc.shape
+    if new_vocab_cap == W:
+        return state
+    if new_vocab_cap > W:
+        phi = jnp.concatenate(
+            [state.phi_acc,
+             jnp.zeros((new_vocab_cap - W, K), state.phi_acc.dtype)], axis=0)
+        return LDATrainState(phi_acc=phi, m=state.m, rng=state.rng)
+    if live_w is None:
+        raise ValueError(
+            f"cannot shrink phi capacity {W} -> {new_vocab_cap} without a "
+            f"fence: pass live_w (shrink is checkpoint-fenced — only guard "
+            f"rows above the live vocabulary may be cut; DESIGN.md §14)")
+    if new_vocab_cap <= live_w:
+        raise ValueError(
+            f"cannot shrink phi capacity {W} -> {new_vocab_cap} with "
+            f"live_w={live_w}: the new rung must stay strictly above the "
+            f"live vocabulary (guard-row invariant, DESIGN.md §12)")
+    return LDATrainState(phi_acc=state.phi_acc[:new_vocab_cap],
+                         m=state.m, rng=state.rng)
+
+
+def apply_row_remap(state: LDATrainState, remap) -> LDATrainState:
+    """Permute phi rows by a compaction remap (``VocabMap.compact``).
+
+    ``remap[i]`` is row i's new row, or -1 for a reclaimed (dead) row;
+    surviving rows land at ``phi_new[remap[i]] = phi[i]`` and every other
+    row — reclaimed rows and the tail the survivors vacated — is zeroed
+    (they are guard rows again, free for OOV reuse).  Capacity is
+    unchanged; pair with ``resize_state`` to also drop a rung.
+    """
+    remap = jnp.asarray(remap, jnp.int32)
+    W, _ = state.phi_acc.shape
+    if remap.shape[0] > W:
+        raise ValueError(f"remap covers {remap.shape[0]} rows but phi has "
+                         f"only {W}")
+    src = state.phi_acc[:remap.shape[0]]
+    # dead rows (-1) route to the out-of-range index W and are dropped
+    dst = jnp.where(remap >= 0, remap, W)
+    phi = jnp.zeros_like(state.phi_acc).at[dst].set(src, mode="drop")
+    return LDATrainState(phi_acc=phi, m=state.m, rng=state.rng)
+
+
+# --------------------------------------------------------------------------
+# dead-row detection (host-side: runs at a fence, after a device sync)
+# --------------------------------------------------------------------------
+
+def dead_rows(row_mass, last_touched, step: int, min_idle: int,
+              mass_floor: float) -> np.ndarray:
+    """bool[live] mask of reclaimable rows at fence ``step``.
+
+    A row is dead only when BOTH signals agree: it has not been touched
+    by any consumed batch for ``min_idle`` batches (so it is not merely
+    resting between two occurrences), AND its accumulated statistic has
+    decayed to ``mass_floor`` or below — i.e. the row is statistically
+    indistinguishable from the beta prior (``mass_floor`` is expressed in
+    absolute statistic units; callers scale it from K*beta).  Without
+    decay an idle row keeps its historical mass forever and the second
+    signal (correctly) never fires.
+    """
+    idle = (step - np.asarray(last_touched)) >= int(min_idle)
+    return idle & (np.asarray(row_mass) <= float(mass_floor))
+
+
+# --------------------------------------------------------------------------
+# topic recycling
+# --------------------------------------------------------------------------
+
+def dead_topics(phi: np.ndarray, live_w: int, tol: float) -> np.ndarray:
+    """Topic columns whose live mass fell below ``tol`` x the mean topic
+    mass — themes the decayed stream no longer supports."""
+    mass_k = np.asarray(phi[:live_w], np.float64).sum(axis=0)
+    return np.nonzero(mass_k <= float(tol) * max(mass_k.mean(), 1e-30))[0]
+
+
+def recycle_topics(phi: np.ndarray, live_w: int, tol: float,
+                   seed_frac: float = 0.1,
+                   ) -> Tuple[np.ndarray, List[int]]:
+    """Reseed dead topic columns from high-residual tokens.
+
+    A dead topic (``dead_topics``) is re-pointed at the tokens the model
+    currently explains worst: per live row, the *residual mass*
+    ``row_mass - max_k phi[w, k]`` — mass spread thinly across topics
+    with no dominant owner — ranks emerging words no existing topic has
+    claimed.  Each dead column is seeded with ``seed_frac`` of the top
+    rows' residual mass (deterministic: pure argsort, ties broken by row
+    order), giving the next sweeps a non-degenerate starting point that
+    the data immediately reshapes.  Returns (new_phi, recycled_topics);
+    phi is returned unchanged (same object) when nothing is dead.
+    """
+    dead = dead_topics(phi, live_w, tol)
+    if dead.size == 0:
+        return phi, []
+    live = np.asarray(phi[:live_w], np.float32)
+    row_mass = live.sum(axis=1)
+    residual = row_mass - live.max(axis=1)
+    n_seed = max(8, live_w // 20)
+    top = np.argsort(-residual, kind="stable")[:n_seed]
+    out = np.array(phi, np.float32, copy=True)
+    for k in dead:
+        out[top, k] = seed_frac * residual[top]
+    return out, [int(k) for k in dead]
+
+
+__all__ = ["resize_state", "apply_row_remap", "dead_rows", "dead_topics",
+           "recycle_topics"]

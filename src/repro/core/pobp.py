@@ -497,6 +497,7 @@ def pobp_minibatch(
     model_reducer: Optional[Reducer] = None,
     sync_mode: str = "power",
     live_w=None,
+    decay=None,
 ) -> MinibatchResult:
     """Run one mini-batch to convergence on this shard (all Fig. 4 lines).
 
@@ -513,6 +514,15 @@ def pobp_minibatch(
     of this depends only on live_w (never on the rung), a run that grew
     across rungs and a fresh run allocated at the final rung compute
     identical trajectories.  None keeps the static fixed-W behavior.
+
+    `decay` (a traced f32 scalar, or None) is the Robbins-Monro retention
+    factor 1 - rho_m on the historical statistic (DESIGN.md §14): the
+    Eq. 11 fold-back becomes ``decay * phi_acc + delta_weight * Delta``,
+    so stale mass fades multiplicatively while the current batch enters
+    at full weight.  None (decay_kappa == 0) keeps the exact
+    plain-accumulation expression — bit-exact with the pre-lifecycle
+    trajectory.  The decay pass reads + rewrites the full [W, Kl]
+    statistic once per mini-batch, billed to the meter's ``decay`` phase.
     """
     model_reducer = model_reducer or LocalReducer(meter=data_reducer.meter)
     W = cfg.vocab_size
@@ -648,7 +658,17 @@ def pobp_minibatch(
         raise ValueError(f"unknown sync_mode: {sync_mode}")
 
     # ---- Eq. (11): accumulate this batch's synchronized gradient ----
-    phi_acc_new = phi_acc_wk + delta_weight * (phi_eff - phi_acc_wk)
+    if decay is None:
+        phi_acc_new = phi_acc_wk + delta_weight * (phi_eff - phi_acc_wk)
+    else:
+        # RM decay (§14): retain (1 - rho_m) of the historical statistic.
+        # phi_eff - phi_acc_wk is exactly this batch's synchronized Delta,
+        # so the expression below is the decayed Eq. 11 and reduces to the
+        # branch above at decay == 1.  The full-statistic touch is billed
+        # once per mini-batch (not a psum — decay is shard-local and
+        # identical everywhere, but it is a real [W, Kl] HBM pass).
+        data_reducer.bill(phi_acc_wk, "decay", w_rows=W)
+        phi_acc_new = decay * phi_acc_wk + delta_weight * (phi_eff - phi_acc_wk)
     return MinibatchResult(phi_acc_new=phi_acc_new, iters=t,
                            mean_r=mean_residual(r_w, total_tokens),
                            mu=mu, theta=theta)
@@ -672,20 +692,21 @@ def pobp_minibatch(
 def pobp_shard_body(word_ids, counts, phi_acc, key, delta_weight,
                     cfg: LDAConfig, data_reducer: Reducer,
                     model_reducer: Optional[Reducer] = None,
-                    sync_mode: str = "power", live_w=None):
+                    sync_mode: str = "power", live_w=None, decay=None):
     """One shard's complete mini-batch routine (Fig. 4, one m).
 
     `word_ids`/`counts` are THIS shard's [Dl, L] slice; `phi_acc` is the
     synchronized accumulated statistic.  The global token count is psum'd
     here ("tokens" phase), so callers never pre-reduce anything.
-    `live_w` (traced) enables capacity-ladder W semantics (§12).
+    `live_w` (traced) enables capacity-ladder W semantics (§12); `decay`
+    (traced, or None) the RM retention on the fold-back (§14).
     Returns (phi_acc_new, iters, mean_r, mu, theta).
     """
     batch = MiniBatch(word_ids=word_ids, counts=counts)
     total = data_reducer.psum(jnp.sum(counts), "tokens", compress=False)
     res = pobp_minibatch(batch, phi_acc, key, total, delta_weight, cfg,
                          data_reducer, model_reducer, sync_mode=sync_mode,
-                         live_w=live_w)
+                         live_w=live_w, decay=decay)
     return res.phi_acc_new, res.iters, res.mean_r, res.mu, res.theta
 
 
@@ -701,6 +722,24 @@ def _delta_weight(cfg: LDAConfig, m):
     return (cfg.lr_tau0 + m.astype(jnp.float32)) ** (-cfg.lr_kappa)
 
 
+def _decay_factor(cfg: LDAConfig, m):
+    """Traced RM retention 1 - rho_m for batch m, or None when decay is off.
+
+    rho_m = (decay_tau0 + m)^(-decay_kappa) is the classic Robbins-Monro
+    step size (Hoffman-style online VB, DESIGN.md §14): the historical
+    statistic keeps a (1 - rho_m) fraction per batch, so an untouched row
+    decays multiplicatively toward zero while rho_m -> 0 makes the memory
+    horizon grow as the model matures.  decay_kappa == 0 returns None —
+    a *static* bypass, so the fold-back runs the identical expression the
+    plain-accumulation path always ran (bit-exact, not merely close).
+    """
+    if not cfg.decay_kappa:
+        return None
+    rho = (jnp.float32(cfg.decay_tau0) + m.astype(jnp.float32)
+           ) ** jnp.float32(-cfg.decay_kappa)
+    return jnp.float32(1.0) - rho
+
+
 def init_train_state(cfg: LDAConfig, seed: int = 0) -> LDATrainState:
     """Cold-start carry for `make_train_step` (phi_acc = 0, m = 0).
 
@@ -714,24 +753,11 @@ def init_train_state(cfg: LDAConfig, seed: int = 0) -> LDATrainState:
 
 
 def grow_state(state: LDATrainState, new_vocab_cap: int) -> LDATrainState:
-    """Pure-functional W-capacity growth: pad phi_acc to the next rung.
-
-    The appended rows are guard rows — zero counts that no live word maps
-    to yet — so growing is trajectory-neutral: the padded carry computes
-    the same updates as the unpadded one (DESIGN.md §12).  m and the RNG
-    are untouched; the caller re-derives its step function for the new
-    capacity (one compile per (rung, bucket) pair).
-    """
-    W, K = state.phi_acc.shape
-    if new_vocab_cap < W:
-        raise ValueError(f"cannot shrink phi capacity {W} -> {new_vocab_cap} "
-                         f"(vocab eviction/compaction is not supported)")
-    if new_vocab_cap == W:
-        return state
-    phi = jnp.concatenate(
-        [state.phi_acc,
-         jnp.zeros((new_vocab_cap - W, K), state.phi_acc.dtype)], axis=0)
-    return LDATrainState(phi_acc=phi, m=state.m, rng=state.rng)
+    """Grow-only capacity resize — `core.lifecycle.resize_state` without a
+    fence (DESIGN.md §14 owns the full grow/shrink lifecycle; shrinking
+    here still raises because no live_w fence is provided)."""
+    from repro.core.lifecycle import resize_state
+    return resize_state(state, new_vocab_cap)
 
 
 def make_train_step(cfg: LDAConfig, num_shards: int = 1,
@@ -765,23 +791,26 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
 
     storage = quantize.phi_acc_dtype(cfg)
 
-    def body(wid, cnt, phi_acc, key, weight, live_w):
+    def body(wid, cnt, phi_acc, key, weight, live_w, decay):
         return pobp_shard_body(wid, cnt, phi_acc, key, weight, cfg, reducer,
-                               sync_mode=sync_mode, live_w=live_w)
+                               sync_mode=sync_mode, live_w=live_w,
+                               decay=decay)
 
     def step(state: LDATrainState, word_ids, counts, live_w=None):
         rng, sub = jax.random.split(state.rng)
         weight = _delta_weight(cfg, state.m + 1)
+        decay = _decay_factor(cfg, state.m + 1)
         if num_shards == 1:
             phi, iters, mean_r, _mu, theta = body(word_ids, counts,
                                                   state.phi_acc, sub, weight,
-                                                  live_w)
+                                                  live_w, decay)
         else:
             keys = jax.random.split(sub, num_shards)
             phi, iters, mean_r, _mu, theta = jax.vmap(
-                body, in_axes=(0, 0, None, 0, None, None),
+                body, in_axes=(0, 0, None, 0, None, None, None),
                 axis_name="shards")(
-                    word_ids, counts, state.phi_acc, keys, weight, live_w)
+                    word_ids, counts, state.phi_acc, keys, weight, live_w,
+                    decay)
             # shard-identical by construction: carry shard 0's copy
             phi, iters, mean_r = phi[0], iters[0], mean_r[0]
         if storage != jnp.float32:
@@ -828,7 +857,8 @@ def make_sim_minibatch_fn(cfg: LDAConfig, num_shards: int, sync_mode: str = "pow
 
 
 def make_mesh_shard_fn(cfg: LDAConfig, mesh_axis_names, sync_mode: str = "power",
-                       sync_dtype=jnp.float32, meter: Optional[CommMeter] = None):
+                       sync_dtype=jnp.float32, meter: Optional[CommMeter] = None,
+                       with_decay: bool = False):
     """Per-shard POBP body for ``shard_map`` on a production mesh: documents
     sharded over the data (and pod) axes, topics over the 'model' axis.
 
@@ -836,42 +866,55 @@ def make_mesh_shard_fn(cfg: LDAConfig, mesh_axis_names, sync_mode: str = "power"
     ``launch.lda_train`` (--backend shard_map), so the production cell and
     the streaming driver cannot fork.  Returns (local_fn, meter) with
     ``local_fn(wid, cnt, phi_acc, key, delta_weight) ->
-    (phi_acc_new, iters, mean_r)``.
+    (phi_acc_new, iters, mean_r)``; ``with_decay=True`` (a decayed run,
+    cfg.decay_kappa > 0) appends a trailing RM-retention scalar argument —
+    the arity is static so the undecayed program stays byte-identical.
     """
     dp = tuple(a for a in mesh_axis_names if a in ("pod", "data"))
     meter = meter or CommMeter()
 
-    def local(wid, cnt, phi_acc, key, delta_weight):
+    def run(wid, cnt, phi_acc, key, delta_weight, decay):
         data_red = MeshReducer(dp, meter=meter, sync_dtype=sync_dtype)
         model_red = MeshReducer("model", meter=meter, sync_dtype=sync_dtype)
         phi, iters, mean_r, _mu, _theta = pobp_shard_body(
             wid, cnt, phi_acc, key, delta_weight, cfg, data_red, model_red,
-            sync_mode=sync_mode)
+            sync_mode=sync_mode, decay=decay)
         return phi, iters, mean_r
+
+    if with_decay:
+        local = run
+    else:
+        def local(wid, cnt, phi_acc, key, delta_weight):
+            return run(wid, cnt, phi_acc, key, delta_weight, None)
 
     return local, meter
 
 
 def shard_map_minibatch_fn(cfg: LDAConfig, mesh, sync_mode: str = "power",
                            sync_dtype=jnp.float32,
-                           meter: Optional[CommMeter] = None):
+                           meter: Optional[CommMeter] = None,
+                           with_decay: bool = False):
     """`make_mesh_shard_fn` wrapped in shard_map on `mesh`, partition specs
     included: fn(wid[D, L], cnt[D, L], phi_acc[W, K], key, delta_weight)
     -> (phi_acc_new, iters, mean_r) with documents split over data/pod and
     topics over 'model'.  The ONE wrapper both `launch.dryrun.run_lda_cell`
     (lower/compile) and `launch.lda_train` (execute) use — specs cannot
     fork between the compile-only cell and the production driver.
+    ``with_decay=True`` appends the replicated RM-retention scalar (§14).
     Returns (fn, meter).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     local, meter = make_mesh_shard_fn(cfg, mesh.axis_names, sync_mode,
-                                      sync_dtype, meter)
+                                      sync_dtype, meter,
+                                      with_decay=with_decay)
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    in_specs = (P(dp, None), P(dp, None), P(None, "model"), P(), P())
+    if with_decay:
+        in_specs += (P(),)
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(dp, None), P(dp, None), P(None, "model"),
-                             P(), P()),
+                   in_specs=in_specs,
                    out_specs=(P(None, "model"), P(), P()),
                    check_rep=False)
     return fn, meter

@@ -203,6 +203,19 @@ class Reducer:
         out = self._sum(x)
         return out.astype(orig)
 
+    def bill(self, x: jnp.ndarray, phase: str,
+             w_rows: Optional[int] = None) -> jnp.ndarray:
+        """Record a *local* full-statistic touch without reducing.
+
+        The RM decay step (DESIGN.md §14) rescales every shard's resident
+        phi-accumulator slice in place — no payload crosses the
+        interconnect, but the [W, K] statistic read-modify-write is real
+        memory traffic the cost model must see.  Billed once per
+        mini-batch (the ``decay`` phase is not in ``LOOP_PHASES``),
+        scaled to live W like any vocabulary-proportional record."""
+        self.meter.record(phase, x, w_rows=w_rows)
+        return x
+
 
 class MeshReducer(Reducer):
     """psum over named mesh axes — for shard_map'd POBP."""

@@ -51,6 +51,19 @@ class LDAConfig:
     lr_schedule: str = "paper"      # 'paper' | 'power'
     lr_tau0: float = 1.0            # used by the 'power' schedule (tau0 + m)^-kappa
     lr_kappa: float = 0.9
+    # --- Robbins-Monro forgetting on the phi accumulator (DESIGN.md §14) ---
+    # The Eq. 11 fold-back becomes
+    #     phi_acc <- (1 - rho_m) * phi_acc + delta_weight * Delta_phi,
+    # with rho_m = (decay_tau0 + m)^(-decay_kappa) the classic RM step on
+    # the historical statistic: stale mass fades (a row that stops
+    # receiving tokens decays multiplicatively toward the prior) while the
+    # current batch always enters at full weight.  decay_kappa == 0
+    # statically disables the term — the fold-back is then the *identical
+    # expression* the plain-accumulation path always ran, so kappa=0 runs
+    # are bit-exact with the pre-lifecycle trajectory (pinned in
+    # tests/test_lifecycle.py).
+    decay_tau0: float = 1.0
+    decay_kappa: float = 0.0
     # --- communication payload ---
     sync_dtype: str = "float32"     # 'float32' | 'bfloat16' (beyond-paper byte halving)
     # --- compute backend for the dense sweep ---

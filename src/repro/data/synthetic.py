@@ -148,6 +148,72 @@ def drifting_vocab_docs(
     return _docs_from_token_lists(token_lists, active_vocab)
 
 
+def drifting_news_stream(
+    seed: int,
+    m: int,
+    num_docs: int,
+    vocab_window: int,
+    drift_per_batch: int,
+    num_topics: int,
+    doc_len_mean: int = 40,
+    alpha: float = 0.1,
+    score_cache: dict | None = None,
+    heldout: bool = False,
+):
+    """Batch ``m`` of a news-like SLIDING-vocabulary stream (DESIGN.md §14).
+
+    Unlike ``drifting_vocab_docs`` (vocabulary only grows), this models
+    topic/vocabulary *drift*: batch m draws from the external-id window
+    ``[drift_per_batch * m, drift_per_batch * m + vocab_window)`` — every
+    batch retires ``drift_per_batch`` old words and introduces as many
+    new ones, so the drifting-truth live vocabulary is always exactly
+    ``vocab_window`` while the cumulative vocabulary grows without
+    bound.  A lifecycle-less model must keep a row for every word ever
+    seen (monotone occupancy growth) and keeps spending probability mass
+    on words that can no longer occur; decay + compaction keeps both
+    bounded — the contrast BENCH_drift measures.
+
+    Per-word topic scores are counter-based (one rng per (seed, word),
+    shared with ``drifting_vocab_docs``'s cache layout), so the window's
+    word distributions are prefix-stable and batch m is a pure function
+    of (seed, m, window, drift) — crash-resume replays identical
+    documents.  ``heldout=True`` draws an independent document set from
+    the SAME window distribution (a disjoint rng stream): the sliding
+    held-out set for perplexity that moves with the drift.
+
+    Returns docs with EXTERNAL word ids; feed them through
+    ``data.vocab.VocabMap`` for dense phi rows.
+    """
+    lo = drift_per_batch * m
+    hi = lo + vocab_window
+    cache = score_cache if score_cache is not None else {}
+    scores = cache.get("scores")
+    have = 0 if scores is None else scores.shape[0]
+    if have < hi:
+        new = np.stack([
+            np.random.default_rng([seed, 104_729, w]).gamma(0.5,
+                                                            size=num_topics)
+            for w in range(have, hi)])
+        scores = new if scores is None else np.vstack([scores, new])
+        cache["scores"] = scores
+    act = scores[lo:hi] + 1e-6                          # [window, K]
+    p_wk = act / act.sum(axis=0, keepdims=True)         # per-topic word dist
+
+    rng = np.random.default_rng([seed, 11 if heldout else 7, m])
+    token_lists = []
+    for _ in range(num_docs):
+        n = max(4, int(rng.poisson(doc_len_mean)))
+        theta = rng.dirichlet(np.full(num_topics, alpha + 0.05))
+        z = rng.choice(num_topics, size=n, p=theta)
+        toks = np.empty(n, np.int64)
+        for k in np.unique(z):
+            idx = np.nonzero(z == k)[0]
+            toks[idx] = lo + rng.choice(vocab_window, size=idx.size,
+                                        p=p_wk[:, k])
+        token_lists.append(toks)
+    return _docs_from_token_lists(token_lists, vocab_window)
+
+
 def zipf_corpus(
     seed: int,
     num_docs: int,

@@ -55,17 +55,29 @@ class VocabMap:
 
     Keys may be any hashable JSON-able value (ints for the synthetic
     streams, strings for real corpora).  Admission order IS the row
-    order; rows are never reassigned or reused, so the first ``n`` keys
-    always describe the exact vocabulary after the n-th admission —
-    which is what lets the async driver checkpoint a consistent prefix
-    (``keys_upto``) while a prefetch thread keeps admitting ahead.
+    order; between compaction fences rows are never reassigned or
+    reused, so the first ``n`` keys always describe the exact vocabulary
+    after the n-th admission — which is what lets the async driver
+    checkpoint a consistent prefix (``keys_upto``) while a prefetch
+    thread keeps admitting ahead.  ``compact`` (checkpoint-fenced,
+    DESIGN.md §14) is the ONE exception: dead rows are reclaimed and
+    survivors slide down to a dense prefix, described to the rest of the
+    stack by the returned row remap.
     """
 
-    def __init__(self, keys: Iterable = ()):
+    def __init__(self, keys: Iterable = (), touched: Optional[Iterable] = ()):
         self._keys: List = list(keys)
         self._rows: Dict = {k: i for i, k in enumerate(self._keys)}
         if len(self._rows) != len(self._keys):
             raise ValueError("VocabMap keys must be unique")
+        # last-touched step per row (-1 = never observed with a step).
+        # Touches use max-merge semantics, so replaying an already-consumed
+        # batch prefix (crash-resume) reproduces the same touched vector.
+        t = list(touched) if touched else []
+        if len(t) > len(self._keys):
+            raise ValueError(f"touched covers {len(t)} rows but only "
+                             f"{len(self._keys)} keys exist")
+        self._touched: List[int] = t + [-1] * (len(self._keys) - len(t))
 
     def __len__(self) -> int:
         return len(self._keys)
@@ -78,35 +90,47 @@ class VocabMap:
     def lookup(self, key) -> Optional[int]:
         return self._rows.get(key)
 
-    def admit(self, key) -> int:
-        """Row of ``key``, appending it if unseen."""
+    def admit(self, key, step: Optional[int] = None) -> int:
+        """Row of ``key``, appending it if unseen.
+
+        ``step`` stamps the row's last-touched batch index (max-merge:
+        an out-of-order or replayed touch never moves the stamp
+        backwards), feeding the lifecycle dead-row test (DESIGN.md §14).
+        """
         row = self._rows.get(key)
         if row is None:
             row = len(self._keys)
             self._rows[key] = row
             self._keys.append(key)
+            self._touched.append(-1)
+        if step is not None and self._touched[row] < step:
+            self._touched[row] = step
         return row
 
     def rows(self, keys: Sequence, admit: bool = True,
-             oov_row: Optional[int] = None) -> np.ndarray:
+             oov_row: Optional[int] = None,
+             step: Optional[int] = None) -> np.ndarray:
         """Vectorized key -> row translation.
 
         ``admit=True`` appends unseen keys (training admission);
         ``admit=False`` maps them to ``oov_row`` instead (serving /
-        eval: the vocabulary must not move under a lookup).
+        eval: the vocabulary must not move under a lookup).  ``step``
+        stamps every translated row as touched at that batch index.
         """
         if admit:
-            return np.asarray([self.admit(k) for k in keys], np.int32)
+            return np.asarray([self.admit(k, step=step) for k in keys],
+                              np.int32)
         if oov_row is None:
             raise ValueError("admit=False needs an oov_row")
         get = self._rows.get
         return np.asarray([get(k, oov_row) for k in keys], np.int32)
 
     def map_docs(self, docs: Sequence[Doc], admit: bool = True,
-                 oov_row: Optional[int] = None) -> List[Doc]:
+                 oov_row: Optional[int] = None,
+                 step: Optional[int] = None) -> List[Doc]:
         """Translate a list of (word_keys, counts) docs to row-space docs."""
         return [(self.rows(ids.tolist() if hasattr(ids, "tolist") else ids,
-                           admit=admit, oov_row=oov_row), counts)
+                           admit=admit, oov_row=oov_row, step=step), counts)
                 for ids, counts in docs]
 
     def keys_upto(self, n: int) -> List:
@@ -115,10 +139,37 @@ class VocabMap:
         appends: the prefix of an append-only list is immutable)."""
         return list(self._keys[:n])
 
+    def touched_upto(self, n: int) -> List[int]:
+        """Last-touched step of the first ``n`` rows (manifest payload —
+        same consistent-prefix contract as ``keys_upto``)."""
+        return list(self._touched[:n])
+
+    def compact(self, keep: Sequence[bool]) -> np.ndarray:
+        """Drop dead rows; survivors slide down to a dense prefix.
+
+        ``keep`` is a bool mask over the first ``len(keep)`` rows (rows
+        beyond it — admitted after the dead decision was taken — are
+        always kept).  Returns the int32 remap over the pre-compaction
+        live rows: ``remap[i]`` is row i's new row, -1 where reclaimed —
+        exactly the payload ``core.lifecycle.apply_row_remap`` and the
+        checkpoint row-remap restore consume.  Survivors keep their
+        relative order, so the remap is a deterministic function of the
+        mask alone (hypothesis-pinned).  Freed rows return to the guard
+        pool: the next admissions reuse them before the ladder grows.
+        """
+        keep = np.asarray(list(keep) + [True] * (len(self._keys) - len(keep)),
+                          bool)
+        remap = np.where(keep, np.cumsum(keep) - 1, -1).astype(np.int32)
+        self._keys = [k for k, b in zip(self._keys, keep) if b]
+        self._touched = [t for t, b in zip(self._touched, keep) if b]
+        self._rows = {k: i for i, k in enumerate(self._keys)}
+        return remap
+
     def to_state(self) -> List:
         """JSON-able payload for the checkpoint manifest."""
         return list(self._keys)
 
     @classmethod
-    def from_state(cls, keys: Iterable) -> "VocabMap":
-        return cls(keys)
+    def from_state(cls, keys: Iterable,
+                   touched: Optional[Iterable] = ()) -> "VocabMap":
+        return cls(keys, touched=touched)

@@ -33,17 +33,33 @@ def _step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"{_PREFIX}{step:07d}")
 
 
-def _pad_rows(arr: np.ndarray, rows: int, what: str) -> np.ndarray:
-    """Elastic W-reshard: zero-pad axis 0 up to `rows` (guard rows).
+def _resize_rows(arr: np.ndarray, rows: int, what: str,
+                 row_remap=None) -> np.ndarray:
+    """Elastic W-reshard of one leaf — the ONE place row validation lives
+    (``restore``/``restore_latest``/``restore_phi`` all route through it).
 
-    Shrinking is refused everywhere (vocab eviction/compaction is not
-    supported — ROADMAP backlog); the host-side mirror of
-    ``core.pobp.grow_state``.
+    Growing zero-pads axis 0 up to `rows` (the pad rows are guard rows;
+    the host-side mirror of ``core.lifecycle.resize_state``).  Shrinking
+    or reordering requires `row_remap` — the manifest-versioned
+    compaction remap saved at a checkpoint fence (``extra['dyn']
+    ['row_remap']``; ``remap[i]`` = row i's post-compaction row, -1 for a
+    reclaimed row): surviving rows land at their remapped index, dead and
+    vacated rows come back as zero guard rows.  Without a remap a shrink
+    still raises — bare row-cutting would silently drop live statistics.
     """
+    if row_remap is not None:
+        remap = np.asarray(row_remap, np.int64)
+        out = np.zeros((rows,) + arr.shape[1:], arr.dtype)
+        src = arr[:remap.shape[0]]
+        ok = (remap >= 0) & (remap < rows)
+        out[remap[ok]] = src[ok]
+        return out
     if rows < arr.shape[0]:
         raise ValueError(
             f"cannot shrink {what} from {arr.shape[0]} to {rows} rows "
-            f"(vocab eviction/compaction is not supported)")
+            f"without a compaction remap — vocab eviction is supported "
+            f"only via the checkpoint-fenced remap path (pass row_remap "
+            f"from the fence manifest; DESIGN.md §14)")
     if rows == arr.shape[0]:
         return arr
     return np.concatenate(
@@ -135,25 +151,28 @@ def peek_extra(directory: str, step: Optional[int] = None
 def restore_latest(directory: str, template: Dict[str, Any],
                    shardings: Optional[Dict[str, Any]] = None,
                    grow_rows: Tuple[str, ...] = (),
-                   cast_dtypes: Tuple[str, ...] = ()
+                   cast_dtypes: Tuple[str, ...] = (),
+                   row_remaps: Optional[Dict[str, Any]] = None
                    ) -> Optional[Tuple[Dict[str, Any], Dict[str, Any], int]]:
     """Restore the newest complete checkpoint, or return None.
 
     The cold-start branch of a crash-resume driver collapses to
     ``got = restore_latest(dir, template)`` followed by an ``if got:``.
-    `grow_rows` enables the elastic W-reshard and `cast_dtypes` the
-    dtype up/down-cast for the named leaves (see ``restore``).
+    `grow_rows` enables the elastic W-reshard, `cast_dtypes` the dtype
+    up/down-cast and `row_remaps` the fenced compaction remap for the
+    named leaves (see ``restore``).
     """
     step = latest_step(directory)
     if step is None:
         return None
     return restore(directory, step, template, shardings, grow_rows=grow_rows,
-                   cast_dtypes=cast_dtypes)
+                   cast_dtypes=cast_dtypes, row_remaps=row_remaps)
 
 
 def restore_phi(directory: str, step: Optional[int] = None,
                 leaf: str = "phi_acc", sharding: Optional[Any] = None,
-                w_cap: Optional[int] = None, dtype: Optional[Any] = None
+                w_cap: Optional[int] = None, dtype: Optional[Any] = None,
+                row_remap: Optional[Any] = None
                 ) -> Tuple[Any, Dict[str, Any], int]:
     """Serving entry point: load ONE leaf of a driver checkpoint.
 
@@ -166,7 +185,10 @@ def restore_phi(directory: str, step: Optional[int] = None,
     the array through ``jax.device_put`` for a topic-sharded serving mesh.
     `w_cap` resizes the vocabulary axis across capacity rungs (elastic
     W-reshard, DESIGN.md §12): a phi saved at a smaller rung is zero-padded
-    to `w_cap` rows (the pad rows are guard rows); shrinking raises.
+    to `w_cap` rows (the pad rows are guard rows); shrinking needs the
+    fenced compaction remap — pass `row_remap` (e.g. the manifest's
+    ``extra['dyn']['row_remap']``) to restore a pre-compaction phi into a
+    post-compaction row space (DESIGN.md §14); a bare shrink raises.
     `dtype` casts the restored leaf (compressed-accumulator round-trips,
     DESIGN.md §13: a bf16-trained phi may serve in f32 and vice versa);
     None keeps the saved dtype.
@@ -194,7 +216,7 @@ def restore_phi(directory: str, step: Optional[int] = None,
     arr = np.frombuffer(data[f"leaf_{i}"].tobytes(),
                         np.dtype(rec["dtype"])).reshape(tuple(rec["shape"]))
     if w_cap is not None:
-        arr = _pad_rows(arr, w_cap, repr(leaf))
+        arr = _resize_rows(arr, w_cap, repr(leaf), row_remap=row_remap)
     if dtype is not None and arr.dtype != np.dtype(dtype):
         arr = arr.astype(np.dtype(dtype))
     if sharding is not None:
@@ -207,7 +229,8 @@ def restore_phi(directory: str, step: Optional[int] = None,
 def restore(directory: str, step: int, template: Dict[str, Any],
             shardings: Optional[Dict[str, Any]] = None,
             grow_rows: Tuple[str, ...] = (),
-            cast_dtypes: Tuple[str, ...] = ()
+            cast_dtypes: Tuple[str, ...] = (),
+            row_remaps: Optional[Dict[str, Any]] = None
             ) -> Tuple[Dict[str, Any], Dict[str, Any], int]:
     """Load the checkpoint at `step` into the structure of `template`.
 
@@ -221,8 +244,12 @@ def restore(directory: str, step: int, template: Dict[str, Any],
     `cast_dtypes` (same suffix matching) permits a dtype MISMATCH for the
     named leaves: the saved leaf is cast to the template dtype on load
     (compressed-accumulator round-trips, DESIGN.md §13 — switch a run
-    between float32 and bfloat16 phi_acc at a restore fence).  Any other
-    mismatch, including shrinking, still raises.
+    between float32 and bfloat16 phi_acc at a restore fence).
+    `row_remaps` maps leaf suffixes to a fenced compaction remap
+    (``extra['dyn']['row_remap']``): the named leaves may then shrink or
+    permute their rows — survivors land at ``remap[i]``, reclaimed rows
+    come back as zero guard rows (DESIGN.md §14).  Any other mismatch,
+    including a remap-less shrink, still raises.
     Returns (trees, extra, step).
     """
     path = _step_dir(directory, step)
@@ -246,10 +273,13 @@ def restore(directory: str, step: int, template: Dict[str, Any],
                              f"saved {rec['key']!r} != template {key!r}")
         shape = tuple(rec["shape"])
         want = tuple(np.shape(leaf))
+        remap = next((v for name, v in (row_remaps or {}).items()
+                      if key.endswith(f"['{name}']")), None)
+        rows_ok = len(shape) == len(want) and shape[1:] == want[1:]
         growable = (any(key.endswith(f"['{name}']") for name in grow_rows)
-                    and len(shape) == len(want) and shape[1:] == want[1:]
-                    and shape[0] <= want[0])
-        if shape != want and not growable:
+                    and rows_ok and shape[0] <= want[0])
+        if shape != want and not growable and not (remap is not None
+                                                   and rows_ok):
             raise ValueError(f"shape mismatch for {key}: saved {shape} != "
                              f"template {want}")
         want_dtype = getattr(leaf, "dtype", None)
@@ -263,8 +293,8 @@ def restore(directory: str, step: int, template: Dict[str, Any],
         raw = data[f"leaf_{i}"]
         arr = np.frombuffer(raw.tobytes(), np.dtype(rec["dtype"]))
         arr = arr.reshape(shape)
-        if shape != want:        # growable: pad rows up to the template rung
-            arr = _pad_rows(arr, want[0], key)
+        if remap is not None or shape != want:  # fenced remap / rung pad
+            arr = _resize_rows(arr, want[0], key, row_remap=remap)
         if castable and arr.dtype != np.dtype(want_dtype):
             arr = arr.astype(np.dtype(want_dtype))
         if sh_flat is not None:

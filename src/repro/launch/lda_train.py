@@ -33,6 +33,15 @@ consumes the stream with:
     vocabulary crosses a rung — compiles stay bounded by
     #rungs x #buckets, growth events are checkpoint-fenced, and
     crash-resume reproduces the grown trajectory exactly.
+  - **stream lifecycle** (DESIGN.md §14): ``--decay tau0,kappa`` turns on
+    Robbins-Monro forgetting of the phi statistic (kappa=0 bit-exact with
+    plain accumulation); ``--compact-every N`` adds checkpoint-fenced
+    dead-row compaction (idle + mass-below-prior rows reclaimed, the
+    VocabMap remap persisted in the manifest) with optional topic
+    recycling (``--recycle-tol``); ``--drift-mode slide`` swaps the
+    grow-only stream for the sliding-window news stream whose held-out
+    set drifts with it — a month-long stream stays bounded in live rows
+    AND keeps fitting the present.
 
   PYTHONPATH=src python -m repro.launch.lda_train --shards 4 --sync power \
       --minibatches 24 --ckpt-dir /tmp/lda_ck --crash-at 10
@@ -78,7 +87,39 @@ def build_parser() -> argparse.ArgumentParser:
                          "capacity ladder (--backend sim only)")
     ap.add_argument("--vocab-growth-per-batch", type=int, default=24,
                     help="external words entering circulation per "
-                         "mini-batch (drifting synthetic stream)")
+                         "mini-batch (drifting synthetic stream); in "
+                         "--drift-mode slide, the words RETIRED per batch "
+                         "as well (the window slides)")
+    ap.add_argument("--drift-mode", default="grow",
+                    choices=["grow", "slide"],
+                    help="'grow': vocabulary only accretes "
+                         "(drifting_vocab_docs, DESIGN.md §12); 'slide': "
+                         "news-like drift — each batch retires as many "
+                         "words as it introduces (drifting_news_stream, "
+                         "§14), with --vocab as the window size")
+    # stream lifecycle (DESIGN.md §14)
+    ap.add_argument("--decay", default="1,0",
+                    help="Robbins-Monro forgetting 'tau0,kappa' on the phi "
+                         "fold-back: retain (1 - (tau0+m)^-kappa) of the "
+                         "accumulated statistic each batch; kappa=0 "
+                         "disables (bit-exact with the plain accumulator)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="checkpoint-fenced dead-row compaction every N "
+                         "mini-batches (0 = never): reclaim rows idle "
+                         ">= --compact-min-idle batches whose decayed mass "
+                         "fell below the prior floor, slide survivors to a "
+                         "dense prefix, and reuse the freed rows for new "
+                         "admissions (dynamic vocab only)")
+    ap.add_argument("--compact-min-idle", type=int, default=5,
+                    help="batches a row must be untouched before it is a "
+                         "compaction candidate")
+    ap.add_argument("--compact-mass-tol", type=float, default=25.0,
+                    help="dead-mass floor in units of K*beta: a candidate "
+                         "row dies when its statistic <= tol*K*beta")
+    ap.add_argument("--recycle-tol", type=float, default=0.0,
+                    help="recycle topics whose live mass <= tol x the mean "
+                         "topic mass, reseeding from high-residual tokens "
+                         "at each compaction fence (0 = never)")
     ap.add_argument("--w-cap-min", type=int, default=64,
                     help="first W capacity rung")
     ap.add_argument("--w-growth", type=float, default=2.0,
@@ -150,6 +191,13 @@ def _csv_ints(s: str):
     return tuple(int(x) for x in str(s).split(",") if str(x).strip())
 
 
+def _parse_decay(s: str):
+    parts = [p.strip() for p in str(s).split(",")]
+    if len(parts) != 2:
+        raise ValueError(f"--decay expects 'tau0,kappa', got {s!r}")
+    return float(parts[0]), float(parts[1])
+
+
 def _build_cfg(args, vocab_size=None):
     from repro.core.types import LDAConfig
     buckets = tuple(sorted(_csv_ints(args.len_buckets)))
@@ -158,10 +206,12 @@ def _build_cfg(args, vocab_size=None):
         # would warm up a shape the stream never produces and break the
         # compiles <= #buckets contract
         raise ValueError(f"--len-buckets must be multiples of 8: {buckets}")
+    decay_tau0, decay_kappa = _parse_decay(getattr(args, "decay", "1,0"))
     return LDAConfig(vocab_size=vocab_size or args.vocab,
                      num_topics=args.topics,
                      lambda_w=args.lambda_w, lambda_k_abs=args.lambda_k,
                      inner_iters=args.inner_iters, residual_tol=args.tol,
+                     decay_tau0=decay_tau0, decay_kappa=decay_kappa,
                      sync_dtype=args.sync_dtype, impl=args.impl,
                      sweep_policy=args.sweep_policy,
                      onehot_crossover=args.onehot_crossover,
@@ -208,31 +258,49 @@ def synthetic_stream(args, buckets, start_m: int, stacked: bool):
     return gen
 
 
-def drifting_stream(args, buckets, start_m: int, stacked: bool, vocab):
-    """Deterministic drifting-vocabulary stream (DESIGN.md §12).
+def drifting_stream(args, buckets, start_m: int, stacked: bool, vocab,
+                    end_m: Optional[int] = None):
+    """Deterministic drifting-vocabulary stream (DESIGN.md §12/§14).
 
-    Batch m draws from the first ``vocab + growth*m`` EXTERNAL word ids
-    (counter-based per-word topic scores — a pure function of (seed, m)),
-    then admits them through `vocab` in generation order; the per-batch
-    live_w snapshot is taken right after admission, so it is deterministic
-    however far the prefetch thread runs ahead.  Resume replays: a vocab
-    restored from the checkpoint prefix re-admits known words as no-ops,
-    and new admissions continue at the same rows.
+    ``--drift-mode grow``: batch m draws from the first
+    ``vocab + growth*m`` EXTERNAL word ids; ``--drift-mode slide``: from
+    the sliding window ``[growth*m, growth*m + vocab)`` — words retire as
+    fast as they arrive (``drifting_news_stream``).  Either way word
+    topic scores are counter-based (a pure function of (seed, m)) and
+    admission happens through `vocab` in generation order, stamping each
+    translated row as touched at batch m; the per-batch live_w snapshot
+    is taken right after admission, so it is deterministic however far
+    the prefetch thread runs ahead.  Resume replays: a vocab restored
+    from the checkpoint prefix re-admits known words as no-ops (touch
+    stamps max-merge), and new admissions continue at the same rows.
+
+    ``end_m`` fences the stream: the generator STOPS before batch
+    ``end_m``, so the prefetch thread can never admit or touch past a
+    compaction fence — the fence's dead-row decisions are a pure
+    function of the consumed prefix (DESIGN.md §14).
     Yields (MiniBatch, host_token_count, live_w).
     """
     from repro.data.batching import bucket_len, docs_to_padded, stack_shards
-    from repro.data.synthetic import drifting_vocab_docs
+    from repro.data.synthetic import drifting_news_stream, drifting_vocab_docs
 
     means = _csv_ints(args.doc_len_means)
     cache: Dict[str, Any] = {}
+    stop = args.minibatches if end_m is None else end_m
+    slide = getattr(args, "drift_mode", "grow") == "slide"
 
     def gen():
-        for m in range(start_m, args.minibatches):
-            active = args.vocab + args.vocab_growth_per_batch * m
-            docs, _ = drifting_vocab_docs(
-                args.seed, m, args.docs_per_batch, active, args.topics,
-                doc_len_mean=means[m % len(means)], score_cache=cache)
-            docs = vocab.map_docs(docs, admit=True)
+        for m in range(start_m, stop):
+            if slide:
+                docs, _ = drifting_news_stream(
+                    args.seed, m, args.docs_per_batch, args.vocab,
+                    args.vocab_growth_per_batch, args.topics,
+                    doc_len_mean=means[m % len(means)], score_cache=cache)
+            else:
+                active = args.vocab + args.vocab_growth_per_batch * m
+                docs, _ = drifting_vocab_docs(
+                    args.seed, m, args.docs_per_batch, active, args.topics,
+                    doc_len_mean=means[m % len(means)], score_cache=cache)
+            docs = vocab.map_docs(docs, admit=True, step=m)
             live = vocab.live
             nat = max(len(ids) for ids, _ in docs)
             L = buckets[-1] if args.fixed_len else bucket_len(nat, buckets)
@@ -272,6 +340,22 @@ def _eval_split_dynamic(args):
     return train_test_split_counts(docs, args.seed)
 
 
+def _eval_split_slide(args, m: int):
+    """SLIDING held-out docs for --drift-mode slide: an independent
+    document set (disjoint rng stream, ``heldout=True``) from the SAME
+    window distribution batch ``m`` trains on — the held-out set drifts
+    with the stream, so end-of-stream perplexity measures fit to what the
+    stream looks like NOW, which is exactly where a decay-less model pays
+    for its stale mass (DESIGN.md §14)."""
+    from repro.data.batching import train_test_split_counts
+    from repro.data.synthetic import drifting_news_stream
+
+    docs, _ = drifting_news_stream(args.seed, m, args.eval_docs, args.vocab,
+                                   args.vocab_growth_per_batch, args.topics,
+                                   doc_len_mean=40, heldout=True)
+    return train_test_split_counts(docs, args.seed)
+
+
 def _make_mesh(args):
     import jax
     if args.mesh_shape:
@@ -296,17 +380,22 @@ def make_shardmap_train_step(cfg, mesh, sync_mode="power",
     import jax
     import jax.numpy as jnp
     from repro.core import quantize
-    from repro.core.pobp import _SR_FOLD, _delta_weight, shard_map_minibatch_fn
+    from repro.core.pobp import (_SR_FOLD, _decay_factor, _delta_weight,
+                                 shard_map_minibatch_fn)
     from repro.core.types import LDATrainState
 
     sync_dtype = jnp.float32 if sync_dtype is None else sync_dtype
-    sm, meter = shard_map_minibatch_fn(cfg, mesh, sync_mode, sync_dtype)
+    with_decay = bool(cfg.decay_kappa)
+    sm, meter = shard_map_minibatch_fn(cfg, mesh, sync_mode, sync_dtype,
+                                       with_decay=with_decay)
     storage = quantize.phi_acc_dtype(cfg)
 
     def step(state, word_ids, counts):
         rng, sub = jax.random.split(state.rng)
         weight = _delta_weight(cfg, state.m + 1)
-        phi, iters, mean_r = sm(word_ids, counts, state.phi_acc, sub, weight)
+        extra = ((_decay_factor(cfg, state.m + 1),) if with_decay else ())
+        phi, iters, mean_r = sm(word_ids, counts, state.phi_acc, sub, weight,
+                                *extra)
         if storage != jnp.float32:
             # compressed accumulators (§13): stochastic-rounded fold-back to
             # the storage dtype; the fold_in keeps the split stream (and so
@@ -333,7 +422,9 @@ _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
                 "lambda_w", "lambda_k", "inner_iters", "tol", "sync_dtype",
                 "impl", "docs_per_batch", "doc_len_means", "len_buckets",
                 "fixed_len", "dynamic_vocab", "vocab_growth_per_batch",
-                "w_cap_min", "w_growth")
+                "w_cap_min", "w_growth", "drift_mode", "decay",
+                "compact_every", "compact_min_idle", "compact_mass_tol",
+                "recycle_tol")
 # NB: sweep_policy / onehot_crossover are deliberately NOT resume keys:
 # both formulations compute the same trajectory (within float
 # associativity) and the same sync bytes, so a resumed run may re-resolve
@@ -392,9 +483,8 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
 
     import jax
     import jax.numpy as jnp
-    from repro.core import perplexity
-    from repro.core.pobp import (DiagBuffer, grow_state, init_train_state,
-                                 make_train_step)
+    from repro.core import lifecycle, perplexity
+    from repro.core.pobp import DiagBuffer, init_train_state, make_train_step
     from repro.core.types import LDATrainState
     from repro.data.batching import prefetched
     from repro.data.vocab import VocabMap, next_capacity
@@ -404,6 +494,10 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     if dynamic and args.backend != "sim":
         raise ValueError("--dynamic-vocab currently requires --backend sim "
                          "(shard_map growth is on the ROADMAP backlog)")
+    compact_every = int(getattr(args, "compact_every", 0) or 0)
+    if compact_every and not dynamic:
+        raise ValueError("--compact-every needs --dynamic-vocab: a fixed-W "
+                         "run has no VocabMap to compact (DESIGN.md §14)")
     sync_dtype = jnp.bfloat16 if args.sync_dtype == "bfloat16" else jnp.float32
 
     if args.crash_at and not args.ckpt_dir:
@@ -419,6 +513,8 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     # template can be built, so peek at the manifest extra first (§12).
     vocab = VocabMap()
     live_done = 0            # live vocab as of the last CONSUMED batch
+    vocab_version = 0        # bumped at every compaction fence (§14)
+    last_remap = None        # the latest fence's row remap (manifest payload)
     w_cap = next_capacity(0, 0, args.w_cap_min, args.w_growth)
     if dynamic and args.ckpt_dir:
         peeked = ckpt.peek_extra(args.ckpt_dir)
@@ -426,7 +522,10 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             dyn = peeked[0]["dyn"]
             w_cap = int(dyn["w_cap"])
             live_done = int(dyn["live_w"])
-            vocab = VocabMap(dyn["vocab_keys"])
+            vocab = VocabMap(dyn["vocab_keys"],
+                             touched=dyn.get("touched", ()))
+            vocab_version = int(dyn.get("vocab_version", 0))
+            last_remap = dyn.get("row_remap")
 
     cfg, buckets = _build_cfg(args, vocab_size=w_cap if dynamic else None)
     state = init_train_state(cfg, args.seed)
@@ -489,14 +588,18 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
 
     step_fn, meter = build_step(cfg)
 
-    if dynamic:
-        stream = prefetched(
-            drifting_stream(args, buckets, start_m,
-                            stacked=(args.backend == "sim"), vocab=vocab),
-            args.prefetch)
-    else:
-        stream = prefetched(
-            synthetic_stream(args, buckets, start_m,
+    def make_stream(seg_start: int, seg_end: int):
+        # one prefetched generator per fence segment: the generator stops
+        # BEFORE seg_end, so prefetch admissions/touches can never cross a
+        # compaction fence (§14 determinism)
+        if dynamic:
+            return prefetched(
+                drifting_stream(args, buckets, seg_start,
+                                stacked=(args.backend == "sim"), vocab=vocab,
+                                end_m=seg_end),
+                args.prefetch)
+        return prefetched(
+            synthetic_stream(args, buckets, seg_start,
                              stacked=(args.backend == "sim")),
             args.prefetch)
 
@@ -513,9 +616,15 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     buf = DiagBuffer(block=max(args.log_every, 64))
     ppl_trace = []
     eval_split = None
+    consumed_m = start_m - 1     # last consumed batch index (slide eval)
+    slide = dynamic and getattr(args, "drift_mode", "grow") == "slide"
 
     def heldout():
         nonlocal eval_split
+        if slide:
+            # sliding held-out set: re-drawn from the CURRENT window each
+            # eval, so end-of-stream ppl measures fit to the stream NOW
+            return _eval_split_slide(args, max(consumed_m, 0))
         if eval_split is None:  # built once, reused by every eval
             eval_split = (_eval_split_dynamic(args) if dynamic
                           else _eval_split(args))
@@ -541,80 +650,175 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     def dyn_extra(next_m: int, live: int) -> Dict[str, Any]:
         extra = {"next_m": next_m, "run": _run_signature(args)}
         if dynamic:
+            # touched stamps saved mid-segment may include prefetch-ahead
+            # touches of existing rows — harmless: resume replays those
+            # batches and max-merge regenerates a superset-consistent
+            # vector by the next fence (§14 determinism note).
+            # row_remap is the LATEST fence's remap, the manifest payload
+            # that lets an older (pre-compaction) phi restore into this
+            # row space (dist.checkpoint row_remaps / restore_phi).
             extra["dyn"] = {"w_cap": cfg.vocab_size, "live_w": live,
-                            "vocab_keys": vocab.keys_upto(live)}
+                            "vocab_keys": vocab.keys_upto(live),
+                            "touched": vocab.touched_upto(live),
+                            "vocab_version": vocab_version,
+                            "row_remap": last_remap}
         return extra
 
     tokens = 0.0
     eval_compile_s = 0.0
     growth_s = 0.0
+    compact_s = 0.0
     growth_events = []
+    compaction_events = []
+    occupancy_trace = []
     compiles_prev = 0
     compile_s0 = _COMPILE_CLOCK.total
     t0 = time.time()
-    for m, item in enumerate(stream, start=start_m):
-        if dynamic:
-            batch, ntok, live_b = item
-        else:
-            (batch, ntok), live_b = item, None
-        if dynamic and live_b >= cfg.vocab_size:
-            # capacity-rung crossing: fence the async pipeline, pad the
-            # carry to the next rung (guard rows), rebuild + rewarm the
-            # step, and checkpoint the grown state so a crash right here
-            # resumes cleanly on the new rung (§12).  live_done (the
-            # pre-growth prefix) is what the fence persists — this batch
-            # has not been consumed yet.
-            jax.block_until_ready(state.phi_acc)
-            t_g = time.time()
-            new_cap = next_capacity(live_b, cfg.vocab_size,
-                                    args.w_cap_min, args.w_growth)
-            state = grow_state(state, new_cap)
+
+    def compaction_fence(fence_m: int):
+        """Checkpoint-fenced dead-row compaction + topic recycling (§14).
+
+        Runs with the pipeline drained: the segment generator stopped
+        BEFORE `fence_m`, every yielded batch has been consumed, so
+        ``vocab.live == live_done`` and the touched vector covers exactly
+        the consumed prefix — the dead decision (and hence the remap) is
+        a pure function of (stream, fence step).  The fence persists the
+        post-compaction state + vocab + remap immediately: a crash on
+        either side resumes onto a consistent (phi, vocab) pair.
+        """
+        nonlocal state, cfg, step_fn, meter, compiles_prev, live_done, \
+            vocab_version, last_remap, compact_s
+        jax.block_until_ready(state.phi_acc)
+        t_c = time.time()
+        live = vocab.live
+        phi_host = np.asarray(state.phi_acc[:live]).astype(np.float32)
+        floor = float(args.compact_mass_tol) * cfg.num_topics * cfg.beta
+        dead = lifecycle.dead_rows(
+            phi_host.sum(axis=1), vocab.touched_upto(live), fence_m - 1,
+            args.compact_min_idle, floor)
+        n_dead = int(dead.sum())
+        live_new = live
+        if n_dead:
+            remap = vocab.compact(~dead)
+            state = lifecycle.apply_row_remap(state, remap)
+            live_new = vocab.live
+            last_remap = [int(r) for r in remap]
+            vocab_version += 1
+        recycled = []
+        if args.recycle_tol:
+            phi2, recycled = lifecycle.recycle_topics(
+                np.asarray(state.phi_acc).astype(np.float32), live_new,
+                args.recycle_tol)
+            if recycled:
+                state = LDATrainState(
+                    phi_acc=jnp.asarray(phi2, state.phi_acc.dtype),
+                    m=state.m, rng=state.rng)
+        # drop capacity rungs the compacted vocabulary no longer needs
+        new_cap = next_capacity(live_new, 0, args.w_cap_min, args.w_growth)
+        if new_cap < cfg.vocab_size:
+            state = lifecycle.resize_state(state, new_cap, live_w=live_new)
             compiles_prev += max(_compiles(step_fn), 0)
             cfg = dataclasses.replace(cfg, vocab_size=new_cap)
             step_fn, meter = build_step(cfg)
             if args.warmup_buckets:
                 warm_buckets(step_fn, cfg)
-            if args.ckpt_dir:
-                ckpt.save(args.ckpt_dir, m, _state_tree(state),
-                          extra=dyn_extra(m, live_done))
-            growth_s += time.time() - t_g
-            growth_events.append({"m": m, "w_cap": new_cap, "live_w": live_b})
-            print(f"minibatch {m + 1:5d}  [grow] live_w={live_b} -> "
-                  f"W_cap={new_cap}", flush=True)
-        if dynamic:
-            state, diag = step_fn(state, batch.word_ids, batch.counts,
-                                  jnp.asarray(live_b, jnp.int32))
-        else:
-            state, diag = step_fn(state, batch.word_ids, batch.counts)
-        buf.append(diag["mean_r"], diag["iters"])
-        tokens += ntok
-        if live_b is not None:
-            live_done = live_b
-        step_no = m + 1
-        if args.log_every and step_no % args.log_every == 0:
-            # the ONLY recurring host sync, amortized over --log-every batches
-            dt = time.time() - t0
-            print(f"minibatch {step_no:5d}  mean_r={float(diag['mean_r']):.4f}"
-                  f"  iters={int(diag['iters']):3d}"
-                  f"  tokens/s={tokens / max(dt, 1e-9):,.0f}"
-                  f"  compiles={compiles_prev + _compiles(step_fn)}",
+        live_done = live_new
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, fence_m, _state_tree(state),
+                      extra=dyn_extra(fence_m, live_done))
+        compact_s += time.time() - t_c
+        if n_dead or recycled:
+            compaction_events.append(
+                {"m": fence_m, "dead": n_dead, "live_before": live,
+                 "live_after": live_new, "w_cap": cfg.vocab_size,
+                 "recycled": recycled})
+            print(f"minibatch {fence_m:5d}  [compact] dead={n_dead} "
+                  f"live_w={live} -> {live_new}  W_cap={cfg.vocab_size}"
+                  + (f"  recycled_topics={recycled}" if recycled else ""),
                   flush=True)
-        if args.eval_every and step_no % args.eval_every == 0:
-            c_eval = _COMPILE_CLOCK.total
-            ppl = eval_ppl()
-            eval_compile_s += _COMPILE_CLOCK.total - c_eval
-            ppl_trace.append((step_no, float(ppl)))
-            print(f"minibatch {step_no:5d}  held-out ppl={ppl:.2f}", flush=True)
-        if on_batch is not None:
-            on_batch(step_no, state, diag)
-        if args.crash_at and step_no == args.crash_at and start_m == 0:
-            # fresh runs only: a resumed run sails past the simulated
-            # failure, so "rerun the same command" terminates
-            raise SystemExit(f"[simulated crash] after minibatch {step_no}")
-        if args.ckpt_dir and args.ckpt_every and \
-                step_no % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, step_no, _state_tree(state),
-                      extra=dyn_extra(step_no, live_done))
+        occupancy_trace.append({"m": fence_m, "live_w": live_done,
+                                "w_cap": cfg.vocab_size})
+
+    seg_start = start_m
+    while seg_start < args.minibatches:
+        # compaction fences cut the stream into segments: a fresh
+        # prefetched generator per segment means prefetch can never run
+        # past the fence, so the fence sees a fully-drained pipeline
+        seg_end = (min(args.minibatches,
+                       (seg_start // compact_every + 1) * compact_every)
+                   if compact_every else args.minibatches)
+        for m, item in enumerate(make_stream(seg_start, seg_end),
+                                 start=seg_start):
+            if dynamic:
+                batch, ntok, live_b = item
+            else:
+                (batch, ntok), live_b = item, None
+            if dynamic and live_b >= cfg.vocab_size:
+                # capacity-rung crossing: fence the async pipeline, pad the
+                # carry to the next rung (guard rows), rebuild + rewarm the
+                # step, and checkpoint the grown state so a crash right here
+                # resumes cleanly on the new rung (§12).  live_done (the
+                # pre-growth prefix) is what the fence persists — this batch
+                # has not been consumed yet.
+                jax.block_until_ready(state.phi_acc)
+                t_g = time.time()
+                new_cap = next_capacity(live_b, cfg.vocab_size,
+                                        args.w_cap_min, args.w_growth)
+                state = lifecycle.resize_state(state, new_cap)
+                compiles_prev += max(_compiles(step_fn), 0)
+                cfg = dataclasses.replace(cfg, vocab_size=new_cap)
+                step_fn, meter = build_step(cfg)
+                if args.warmup_buckets:
+                    warm_buckets(step_fn, cfg)
+                if args.ckpt_dir:
+                    ckpt.save(args.ckpt_dir, m, _state_tree(state),
+                              extra=dyn_extra(m, live_done))
+                growth_s += time.time() - t_g
+                growth_events.append({"m": m, "w_cap": new_cap,
+                                      "live_w": live_b})
+                print(f"minibatch {m + 1:5d}  [grow] live_w={live_b} -> "
+                      f"W_cap={new_cap}", flush=True)
+            if dynamic:
+                state, diag = step_fn(state, batch.word_ids, batch.counts,
+                                      jnp.asarray(live_b, jnp.int32))
+            else:
+                state, diag = step_fn(state, batch.word_ids, batch.counts)
+            buf.append(diag["mean_r"], diag["iters"])
+            tokens += ntok
+            if live_b is not None:
+                live_done = live_b
+            consumed_m = m
+            step_no = m + 1
+            if args.log_every and step_no % args.log_every == 0:
+                # the ONLY recurring host sync, amortized over --log-every
+                dt = time.time() - t0
+                print(f"minibatch {step_no:5d}  "
+                      f"mean_r={float(diag['mean_r']):.4f}"
+                      f"  iters={int(diag['iters']):3d}"
+                      f"  tokens/s={tokens / max(dt, 1e-9):,.0f}"
+                      f"  compiles={compiles_prev + _compiles(step_fn)}",
+                      flush=True)
+            if args.eval_every and step_no % args.eval_every == 0:
+                c_eval = _COMPILE_CLOCK.total
+                ppl = eval_ppl()
+                eval_compile_s += _COMPILE_CLOCK.total - c_eval
+                ppl_trace.append((step_no, float(ppl)))
+                print(f"minibatch {step_no:5d}  held-out ppl={ppl:.2f}",
+                      flush=True)
+            if on_batch is not None:
+                on_batch(step_no, state, diag)
+            if args.crash_at and step_no == args.crash_at and start_m == 0:
+                # fresh runs only: a resumed run sails past the simulated
+                # failure, so "rerun the same command" terminates
+                raise SystemExit(f"[simulated crash] after minibatch "
+                                 f"{step_no}")
+            if args.ckpt_dir and args.ckpt_every and \
+                    step_no % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, step_no, _state_tree(state),
+                          extra=dyn_extra(step_no, live_done))
+        seg_start = seg_end
+        if compact_every:
+            compaction_fence(seg_end)
 
     jax.block_until_ready(state.phi_acc)
     wall = time.time() - t0
@@ -625,10 +829,10 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     rows = buf.rows()
     mean_r = [float(r) for r, _ in rows]
     iters = [int(i) for _, i in rows]
-    # steady-state throughput: mid-stream rung growth (compile + rewarm +
-    # fence) is a bounded startup-like cost, excluded the same way the
-    # pre-loop warmup is; wall_s still reports the inclusive time.
-    steady_s = max(wall - growth_s, 1e-9)
+    # steady-state throughput: mid-stream rung growth and compaction
+    # fences (compile + rewarm + fence) are bounded startup-like costs,
+    # excluded the same way the pre-loop warmup is; wall_s is inclusive.
+    steady_s = max(wall - growth_s - compact_s, 1e-9)
     result = {
         "first_m": start_m,
         "mean_r": mean_r,
@@ -653,6 +857,10 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             live_w=live_done,
             growth_s=growth_s,
             growth_events=growth_events,
+            compact_s=compact_s,
+            compaction_events=compaction_events,
+            occupancy_trace=occupancy_trace,
+            vocab_version=vocab_version,
             vocab_keys=vocab.keys_upto(live_done),
             bytes_by_phase_live=dict(meter.bytes_by_phase_at(live_done)),
             per_minibatch_bytes_live=(
@@ -684,6 +892,11 @@ def main(argv=None):
               f"growths={len(res['growth_events'])} "
               f"({res['growth_s']:.1f}s)  per-minibatch bytes at live W="
               f"{res['per_minibatch_bytes_live']:,}")
+        if args.compact_every:
+            print(f"[lifecycle] compactions={len(res['compaction_events'])} "
+                  f"({res['compact_s']:.1f}s)  vocab_version="
+                  f"{res['vocab_version']}  occupancy="
+                  f"{res['live_w']}/{res['w_cap']}")
     return res
 
 

@@ -70,6 +70,8 @@ def serve_lda(args):
           f"p99={s['latency_p99_s'] * 1e3:.1f}ms  "
           f"mean fold iters={s['mean_fold_iters']:.1f}  "
           f"oov rate={s['oov_rate']:.3f}  "
+          f"occupancy={s['live_words']}/{s['w_cap']} "
+          f"({s['occupancy']:.2f})  "
           f"compiles={s['compiles']} (<= {len(s['len_buckets'])} buckets)")
     if s["bytes_by_phase"]:
         print(f"[comm] per-request bytes={s['per_request_bytes']:,.0f} "

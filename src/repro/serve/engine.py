@@ -57,6 +57,7 @@ class ServeResult:
     iters: int                     # fold-in sweeps the batch ran
     mean_r: float                  # batch residual at exit
     oov_tokens: float = 0.0        # token mass folded in via the OOV row
+    phi_version: int = 0           # vocab/phi generation that served it (§14)
 
 
 @dataclasses.dataclass
@@ -66,6 +67,7 @@ class _Dispatch:
     theta: jnp.ndarray                      # device future [D, K]
     iters: jnp.ndarray                      # device scalar
     mean_r: jnp.ndarray                     # device scalar
+    phi_version: int = 0                    # phi generation at dispatch
 
 
 class FoldInEngine:
@@ -99,7 +101,8 @@ class FoldInEngine:
                  sync_dtype=None, normalized: bool = False,
                  impl: Optional[str] = None, seed: int = 0,
                  warmup: bool = True, vocab=None,
-                 live_words: Optional[int] = None):
+                 live_words: Optional[int] = None,
+                 phi_version: int = 0):
         self.len_buckets = tuple(sorted(int(b) for b in len_buckets))
         if any(b % 8 for b in self.len_buckets):
             raise ValueError(f"len_buckets must be multiples of 8 "
@@ -117,6 +120,10 @@ class FoldInEngine:
         self.batch_docs = int(batch_docs)
         self.fold_iters = int(fold_iters)
         self.residual_tol = float(residual_tol)
+        self.phi_version = int(phi_version)
+        self._topic_shards = int(topic_shards)
+        self._sync_dtype = sync_dtype
+        self._impl = impl
         phi_in = jnp.asarray(phi_acc)
         if jnp.issubdtype(phi_in.dtype, jnp.floating) \
                 and phi_in.dtype != jnp.float32:
@@ -124,6 +131,7 @@ class FoldInEngine:
             # arrive bf16 from a phi_acc_dtype='bfloat16' run — serving
             # math (normalization, fold-in) always runs in f32
             phi_in = phi_in.astype(jnp.float32)
+        self.w_cap = int(phi_in.shape[0])   # trained capacity rung (§12/§14)
         self.live_words = (int(live_words) if live_words is not None
                            else int(phi_in.shape[0]))
         if not 0 < self.live_words <= phi_in.shape[0]:
@@ -168,6 +176,7 @@ class FoldInEngine:
         self._t_first: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self.warmup_s = 0.0
+        self._warm = bool(warmup)
         if warmup:
             self._warmup()
 
@@ -189,8 +198,11 @@ class FoldInEngine:
         dyn = extra.get("dyn")
         if dyn is not None:
             # dynamic-vocabulary checkpoint: pick up the vocab table and
-            # live size saved with phi — rows above live_w are guard rows
+            # live size saved with phi — rows above live_w are guard rows.
+            # vocab_version stamps which compaction generation this table
+            # belongs to (served back as phi_version on every result, §14)
             kw.setdefault("live_words", int(dyn["live_w"]))
+            kw.setdefault("phi_version", int(dyn.get("vocab_version", 0)))
             if dyn.get("vocab_keys") is not None:
                 kw.setdefault("vocab", VocabMap(dyn["vocab_keys"]))
         if cfg is None:
@@ -212,6 +224,59 @@ class FoldInEngine:
                             sync_dtype=str(run.get("sync_dtype",
                                                    "float32")))
         return cls(phi_acc, cfg, **kw)
+
+    # ----------------------------------------------------- lifecycle swap
+
+    def swap_phi(self, phi_acc, *, live_words: Optional[int] = None,
+                 vocab=None, phi_version: Optional[int] = None) -> None:
+        """Install a new (phi statistic, vocab table) generation — the
+        serving half of a training-side lifecycle event (DESIGN.md §14:
+        a compaction remap, a decayed refresh, a recycled topic set).
+
+        Torn-remap-proof by construction: requests already queued were
+        admitted (translated to rows) under the OLD vocab, so they are
+        flushed and dispatched against the old phi first — a dispatched
+        batch captures the phi it runs on, and its results keep the old
+        ``phi_version`` stamp.  Everything submitted after the swap
+        translates and folds in under the new generation.  The jitted
+        step is rebuilt only when the serving capacity actually changes
+        (a compaction that dropped a rung); same-capacity swaps — a
+        remap within the rung — reuse the compiled program.
+        """
+        self.flush()
+        phi_in = jnp.asarray(phi_acc)
+        if jnp.issubdtype(phi_in.dtype, jnp.floating) \
+                and phi_in.dtype != jnp.float32:
+            phi_in = phi_in.astype(jnp.float32)
+        self.w_cap = int(phi_in.shape[0])
+        live = (int(live_words) if live_words is not None
+                else int(phi_in.shape[0]))
+        if not 0 < live <= phi_in.shape[0]:
+            raise ValueError(f"live_words={live_words} outside phi's "
+                             f"{phi_in.shape[0]} rows")
+        if live == phi_in.shape[0]:
+            phi_in = jnp.concatenate(
+                [phi_in, jnp.zeros((1, phi_in.shape[1]), phi_in.dtype)])
+        phi_norm = perplexity.normalize_phi(phi_in, self.cfg.beta,
+                                            live_w=live)
+        rebuilt = phi_norm.shape[0] != self._cfg.vocab_size
+        if rebuilt:
+            self._cfg = dataclasses.replace(self._cfg,
+                                            vocab_size=phi_norm.shape[0])
+            self._step, self.meter = infer.make_fold_in_step(
+                self._cfg, fold_iters=self.fold_iters,
+                residual_tol=self.residual_tol,
+                topic_shards=self._topic_shards,
+                sync_dtype=self._sync_dtype, impl=self._impl)
+        self.live_words = live
+        self._oov_row = live
+        if vocab is not None:
+            self._vocab = vocab
+        self._phi = infer.split_topic_shards(phi_norm, self._topic_shards)
+        self.phi_version = (int(phi_version) if phi_version is not None
+                            else self.phi_version + 1)
+        if rebuilt and self._warm:
+            self._warmup()
 
     # ---------------------------------------------------------- admission
 
@@ -277,7 +342,8 @@ class FoldInEngine:
                                           mb.word_ids, mb.counts)
         self._pending.append(_Dispatch(
             bucket=bucket, reqs=[(rid, t, oov) for rid, _, t, oov in take],
-            theta=theta, iters=iters, mean_r=mean_r))
+            theta=theta, iters=iters, mean_r=mean_r,
+            phi_version=self.phi_version))
         self._dispatches += 1
 
     def _warmup(self) -> None:
@@ -314,7 +380,7 @@ class FoldInEngine:
                 results.append(ServeResult(
                     req_id=rid, theta=theta[row], latency_s=lat,
                     bucket=d.bucket, iters=iters, mean_r=mean_r,
-                    oov_tokens=oov))
+                    oov_tokens=oov, phi_version=d.phi_version))
             self._t_last_done = t_done
         self._served += len(results)
         self._pending.clear()
@@ -352,6 +418,12 @@ class FoldInEngine:
             "bytes_by_phase": dict(self.meter.bytes_by_phase),
             "per_request_bytes": per_batch_bytes / max(self.batch_docs, 1),
             "live_words": self.live_words,
+            "w_cap": self.w_cap,
+            # ladder occupancy: how full the trained capacity rung is —
+            # climbing toward 1.0 means the next admission wave grows the
+            # ladder; falling after a swap means compaction reclaimed rows
+            "occupancy": self.live_words / max(self.w_cap, 1),
+            "phi_version": self.phi_version,
             "oov_rate": (self._oov_tokens / self._total_tokens
                          if self._total_tokens else 0.0),
         }

@@ -1,0 +1,340 @@
+"""Stream-lifecycle runtime (ISSUE 7, DESIGN.md §14): Robbins-Monro
+decay on the phi fold-back, checkpoint-fenced dead-row compaction +
+capacity shrink, topic recycling, the manifest-versioned row-remap
+restore, crash-resume across a compaction fence, and version-stamped
+phi hot-swap in the serving engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, init_train_state, lifecycle
+from repro.core.pobp import _decay_factor
+from repro.core.types import LDATrainState
+from repro.data.vocab import VocabMap
+
+K = 8
+
+
+def _args(**over):
+    from repro.launch.lda_train import default_args
+    base = dict(dynamic_vocab=True, drift_mode="slide", minibatches=9,
+                docs_per_batch=16, shards=2, vocab=64,
+                vocab_growth_per_batch=8, w_cap_min=64, w_growth=2.0,
+                topics=K, lambda_k=4, inner_iters=4, tol=1e-9,
+                log_every=0, eval_every=0, len_buckets="16,32",
+                doc_len_means="10,20,30", seed=3)
+    base.update(over)
+    return default_args(**base)
+
+
+# --------------------------------------------------------- decay schedule
+
+def test_decay_factor_schedule():
+    """rho_m = (tau0 + m)^-kappa; the fold-back retains 1 - rho_m.
+    kappa=0 returns None — the STATIC disable that keeps the legacy
+    fold-back expression (and its lowering) bit-exact."""
+    cfg0 = LDAConfig(vocab_size=32, num_topics=K, decay_tau0=1.0,
+                     decay_kappa=0.0)
+    assert _decay_factor(cfg0, jnp.asarray(7, jnp.int32)) is None
+
+    cfg = LDAConfig(vocab_size=32, num_topics=K, decay_tau0=4.0,
+                    decay_kappa=0.5)
+    for m in (1, 5, 40):
+        got = float(_decay_factor(cfg, jnp.asarray(m, jnp.int32)))
+        np.testing.assert_allclose(got, 1.0 - (4.0 + m) ** -0.5, rtol=1e-6)
+    # early stream forgets aggressively, late stream barely
+    assert float(_decay_factor(cfg, jnp.asarray(1, jnp.int32))) < \
+        float(_decay_factor(cfg, jnp.asarray(100, jnp.int32)))
+
+
+def test_kappa_zero_compact_zero_is_bit_exact():
+    """ACCEPTANCE (ISSUE 7): --decay 1,0 --compact-every 0 must be
+    BIT-exact with the plain accumulator driver — same mean_r floats,
+    same phi_acc bits: kappa=0 compiles the pre-lifecycle step (no decay
+    operand in the jaxpr at all)."""
+    from repro.launch.lda_train import train_loop
+
+    plain = train_loop(_args(minibatches=6))
+    gated = train_loop(_args(minibatches=6, decay="1,0", compact_every=0))
+    assert gated["mean_r"] == plain["mean_r"]          # exact, not allclose
+    np.testing.assert_array_equal(gated["phi_acc"], plain["phi_acc"])
+    assert gated["live_w"] == plain["live_w"]
+    assert gated["vocab_version"] == plain["vocab_version"] == 0
+
+
+def test_decay_fades_retired_row_mass():
+    """On a sliding stream, RM decay shrinks the statistic of retired
+    (no-longer-occurring) words relative to the plain accumulator —
+    the signal the dead-row test needs to ever fire."""
+    from repro.launch.lda_train import train_loop
+
+    plain = train_loop(_args())
+    decayed = train_loop(_args(decay="1,0.5"))
+    # rows 0..7 are the first-admitted words, retired early by the slide
+    old_plain = plain["phi_acc"][:8].sum()
+    old_decay = decayed["phi_acc"][:8].sum()
+    assert old_decay < 0.5 * old_plain, (old_decay, old_plain)
+
+
+# --------------------------------------------------- resize + row remap
+
+def test_resize_state_grow_shrink_and_fence():
+    cfg = LDAConfig(vocab_size=64, num_topics=K)
+    s = init_train_state(cfg, 0)
+    g = lifecycle.resize_state(s, 128)
+    assert g.phi_acc.shape == (128, K)
+    assert lifecycle.resize_state(g, 128) is g         # same rung: no-op
+    with pytest.raises(ValueError, match="shrink"):
+        lifecycle.resize_state(g, 64)                  # no fence proof
+    with pytest.raises(ValueError, match="strictly above"):
+        lifecycle.resize_state(g, 64, live_w=64)       # guard-row invariant
+    back = lifecycle.resize_state(g, 72, live_w=60)
+    assert back.phi_acc.shape == (72, K)
+    assert back.phi_acc.dtype == s.phi_acc.dtype
+    assert int(back.m) == int(s.m)
+    np.testing.assert_array_equal(np.asarray(back.rng), np.asarray(s.rng))
+
+
+def test_apply_row_remap_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    W = 24
+    phi = rng.gamma(1.0, size=(W, K)).astype(np.float32)
+    s = LDATrainState(phi_acc=jnp.asarray(phi),
+                      m=jnp.asarray(3, jnp.int32), rng=jax.random.PRNGKey(0))
+    keep = rng.random(16) > 0.4                        # rows 16.. kept
+    v = VocabMap(list(range(16)))
+    remap = v.compact(keep)
+    out = lifecycle.apply_row_remap(s, remap)
+
+    oracle = np.zeros_like(phi)
+    for i, r in enumerate(remap):
+        if r >= 0:
+            oracle[r] = phi[i]
+    np.testing.assert_array_equal(np.asarray(out.phi_acc), oracle)
+    # vacated tail + dead rows are zero guard rows again
+    n_live = int((remap >= 0).sum())
+    assert np.abs(np.asarray(out.phi_acc)[n_live:]).max() == 0.0
+    with pytest.raises(ValueError, match="remap covers"):
+        lifecycle.apply_row_remap(s, np.zeros(W + 1, np.int32))
+
+
+def test_dead_rows_needs_both_signals():
+    """Idle alone is resting; low-mass alone is a rare-but-live word —
+    only the conjunction reclaims."""
+    mass = np.asarray([0.1, 9.0, 0.1, 9.0])
+    touched = np.asarray([0, 0, 9, 9])
+    got = lifecycle.dead_rows(mass, touched, step=10, min_idle=5,
+                              mass_floor=1.0)
+    np.testing.assert_array_equal(got, [True, False, False, False])
+
+
+# ------------------------------------------------------- vocab compaction
+
+def test_vocab_compact_remap_and_touched_roundtrip():
+    v = VocabMap()
+    for m, key in enumerate(["a", "b", "c", "d", "e"]):
+        v.admit(key, step=m)
+    assert v.touched_upto(5) == [0, 1, 2, 3, 4]
+    v.admit("b", step=9)                               # max-merge re-touch
+    assert v.touched_upto(5)[1] == 9
+
+    remap = v.compact([True, False, True])             # rows 3.. auto-kept
+    np.testing.assert_array_equal(remap, [0, -1, 1, 2, 3])
+    assert v.to_state() == ["a", "c", "d", "e"]
+    assert v.touched_upto(4) == [0, 2, 3, 4]
+    # freed rows return to the pool: next admission reuses them densely
+    assert v.admit("f", step=5) == 4
+    assert v.lookup("b") is None
+
+    # the (keys, touched) manifest payload round-trips
+    again = VocabMap.from_state(v.to_state(), touched=v.touched_upto(len(v)))
+    assert again.to_state() == v.to_state()
+    assert again.touched_upto(len(again)) == v.touched_upto(len(v))
+
+
+def test_vocab_compact_is_deterministic():
+    a, b = VocabMap(list("abcdef")), VocabMap(list("abcdef"))
+    keep = [True, False, False, True, True, False]
+    np.testing.assert_array_equal(a.compact(keep), b.compact(keep))
+    assert a.to_state() == b.to_state() == ["a", "d", "e"]
+
+
+# --------------------------------------------- checkpoint row-remap restore
+
+def test_compact_then_restore_equals_restore_then_compact(tmp_path):
+    """ACCEPTANCE (ISSUE 7): the manifest row-remap restore commutes with
+    device-side compaction — restoring a pre-compaction checkpoint
+    through ``row_remaps`` lands on exactly the state the fenced
+    compaction produced."""
+    from repro.dist import checkpoint as ckpt
+
+    rng = np.random.default_rng(1)
+    phi = rng.gamma(1.0, size=(64, K)).astype(np.float32)
+    s = LDATrainState(phi_acc=jnp.asarray(phi),
+                      m=jnp.asarray(4, jnp.int32), rng=jax.random.PRNGKey(2))
+    v = VocabMap(list(range(40)))
+    keep = rng.random(40) > 0.3
+    remap = v.compact(keep)
+
+    # compact-then-(save+restore)
+    compacted = lifecycle.apply_row_remap(s, remap)
+    d1 = str(tmp_path / "post")
+    ckpt.save(d1, 4, {"state": {"phi_acc": compacted.phi_acc}})
+    tmpl = {"state": {"phi_acc": jnp.zeros((64, K))}}
+    post, _, _ = ckpt.restore_latest(d1, tmpl)
+
+    # (save-pre-compaction)-then-restore-with-remap
+    d2 = str(tmp_path / "pre")
+    ckpt.save(d2, 4, {"state": {"phi_acc": s.phi_acc}},
+              extra={"dyn": {"row_remap": [int(r) for r in remap]}})
+    extra, _ = ckpt.peek_extra(d2)
+    pre, _, _ = ckpt.restore_latest(
+        d2, tmpl, row_remaps={"phi_acc": extra["dyn"]["row_remap"]})
+
+    np.testing.assert_array_equal(np.asarray(post["state"]["phi_acc"]),
+                                  np.asarray(pre["state"]["phi_acc"]))
+
+    # the remap path may also drop a rung in the same restore
+    small = {"state": {"phi_acc": jnp.zeros((48, K))}}
+    shrunk, _, _ = ckpt.restore_latest(
+        d2, small, row_remaps={"phi_acc": extra["dyn"]["row_remap"]})
+    np.testing.assert_array_equal(
+        np.asarray(shrunk["state"]["phi_acc"]),
+        np.asarray(compacted.phi_acc)[:48])
+    # without the remap a shrinking restore is still refused loudly
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_latest(d2, small, grow_rows=("phi_acc",))
+
+    # single-leaf serving restore takes the same remap; without it the
+    # refusal names the fenced remap path
+    arr, _, _ = ckpt.restore_phi(d2, w_cap=48,
+                                 row_remap=extra["dyn"]["row_remap"])
+    np.testing.assert_array_equal(np.asarray(arr),
+                                  np.asarray(compacted.phi_acc)[:48])
+    with pytest.raises(ValueError, match="shrink"):
+        ckpt.restore_phi(d2, w_cap=48)
+
+
+# ----------------------------------------------------------- topic recycle
+
+def test_recycle_topics_reseeds_dead_columns_deterministically():
+    rng = np.random.default_rng(3)
+    W, live = 40, 32
+    phi = rng.gamma(1.0, size=(W, K)).astype(np.float32) + 0.5
+    phi[:live, 2] = 1e-9                               # a faded theme
+    dead = lifecycle.dead_topics(phi, live, tol=0.01)
+    np.testing.assert_array_equal(dead, [2])
+
+    out1, rec1 = lifecycle.recycle_topics(phi, live, tol=0.01)
+    out2, rec2 = lifecycle.recycle_topics(phi, live, tol=0.01)
+    assert rec1 == rec2 == [2]
+    np.testing.assert_array_equal(out1, out2)          # pure function
+    # the reseed is seed_frac x the residual mass of the top-residual rows
+    live_rows = phi[:live].astype(np.float32)
+    residual = live_rows.sum(1) - live_rows.max(1)
+    top = np.argsort(-residual, kind="stable")[:max(8, live // 20)]
+    np.testing.assert_allclose(out1[top, 2], 0.1 * residual[top], rtol=1e-6)
+    # untouched columns are bit-identical; nothing dead -> same object
+    keep = [k for k in range(K) if k != 2]
+    np.testing.assert_array_equal(out1[:, keep], phi[:, keep])
+    same, rec = lifecycle.recycle_topics(out1, live, tol=1e-9)
+    assert rec == [] and same is out1
+
+
+# ------------------------------------------------------- driver lifecycle
+
+def test_driver_compaction_bounds_occupancy():
+    """ACCEPTANCE (ISSUE 7): on a sliding stream the lifecycle run holds
+    live_w bounded while the plain dynamic driver grows monotonically."""
+    from repro.launch.lda_train import train_loop
+
+    base = train_loop(_args(minibatches=12))
+    life = train_loop(_args(minibatches=12, decay="1,0.3", compact_every=3,
+                            compact_min_idle=2, compact_mass_tol=60.0))
+    assert len(life["compaction_events"]) >= 3
+    assert life["vocab_version"] == len(life["compaction_events"])
+    assert life["live_w"] < base["live_w"]
+    # occupancy stabilizes: the post-fence trace stops growing
+    tail = [t["live_w"] for t in life["occupancy_trace"][-3:]]
+    assert max(tail) - min(tail) <= 2 * 8               # +- one drift step
+    assert len(life["vocab_keys"]) == life["live_w"]
+
+
+def test_crash_resume_across_compaction_fence(tmp_path):
+    """ACCEPTANCE (ISSUE 7): a --crash-at rerun that replays THROUGH a
+    compaction fence reproduces the uninterrupted run exactly — phi,
+    mean_r suffix, live vocabulary, and the vocab version stamp all
+    round-trip through the manifest row-remap."""
+    from repro.launch.lda_train import train_loop
+
+    kw = dict(minibatches=9, decay="1,0.3", compact_every=3,
+              compact_min_idle=2, compact_mass_tol=60.0)
+    full = train_loop(_args(**kw))
+    assert len(full["compaction_events"]) == 3
+
+    ckdir = str(tmp_path / "ck")
+    with pytest.raises(SystemExit):
+        train_loop(_args(ckpt_dir=ckdir, ckpt_every=2, crash_at=8, **kw))
+    resumed = train_loop(_args(ckpt_dir=ckdir, ckpt_every=2, crash_at=8,
+                               **kw))
+    assert resumed["first_m"] > 0
+    np.testing.assert_allclose(resumed["mean_r"],
+                               full["mean_r"][resumed["first_m"]:],
+                               rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(resumed["phi_acc"], full["phi_acc"],
+                               rtol=1e-6, atol=1e-7)
+    assert resumed["live_w"] == full["live_w"]
+    assert resumed["vocab_keys"] == full["vocab_keys"]
+    assert resumed["vocab_version"] == full["vocab_version"]
+
+
+# ------------------------------------------------------- serving hot-swap
+
+def test_engine_swap_phi_versions_and_occupancy():
+    """swap_phi installs a remapped (phi, vocab) pair without tearing:
+    queued work drains under the old version first, results are stamped
+    with the phi generation that served them, and a same-capacity swap
+    never recompiles."""
+    from repro.serve import FoldInEngine
+
+    rng = np.random.default_rng(0)
+    cap, lw = 64, 40
+    phi = jnp.asarray(rng.gamma(1.0, size=(cap, K)).astype(np.float32))
+    cfg = LDAConfig(vocab_size=cap, num_topics=K)
+    v0 = VocabMap(list(range(1000, 1000 + lw)))
+    eng = FoldInEngine(phi, cfg, len_buckets=(16,), batch_docs=2,
+                       fold_iters=6, live_words=lw, vocab=v0, warmup=False)
+    assert eng.phi_version == 0
+    s = eng.stats()
+    assert s["w_cap"] == cap and s["phi_version"] == 0
+    np.testing.assert_allclose(s["occupancy"], lw / cap)
+
+    eng.submit((np.asarray([1000, 1001]), np.ones(2, np.float32)))
+
+    # a fenced compaction produced a denser phi + a remapped vocab
+    keep = np.ones(lw, bool)
+    keep[::4] = False
+    v1 = VocabMap(list(range(1000, 1000 + lw)))
+    remap = v1.compact(keep)
+    s0 = LDATrainState(phi_acc=phi, m=jnp.asarray(0, jnp.int32),
+                       rng=jax.random.PRNGKey(0))
+    phi1 = lifecycle.apply_row_remap(s0, remap).phi_acc
+    eng.swap_phi(phi1, live_words=len(v1), vocab=v1)
+
+    assert eng.phi_version == 1
+    assert eng.live_words == len(v1)
+    eng.submit((np.asarray([1001, 1002]), np.ones(2, np.float32)))
+    res = sorted(eng.drain(), key=lambda r: r.req_id)
+    # the pre-swap submission was flushed under version 0
+    assert [r.phi_version for r in res] == [0, 1]
+    for r in res:
+        assert np.all(np.isfinite(r.theta))
+    # same serving capacity: the jitted fold-in is reused, not recompiled
+    assert eng.stats()["compiles"] <= len(eng.len_buckets)
+    assert eng.stats()["phi_version"] == 1
+    # evicted key 1000 now folds through the OOV row instead of its old row
+    eng.submit((np.asarray([1000]), np.ones(1, np.float32)))
+    (r,) = eng.drain()
+    assert r.oov_tokens == 1.0 and r.phi_version == 1

@@ -1,0 +1,95 @@
+"""Hypothesis property coverage for the lifecycle compaction remap
+(ISSUE 7, DESIGN.md §14): the remap is a pure, deterministic function of
+the admission sequence + keep mask — same stream, same fence decisions,
+same row assignment — and survivors always form an order-preserving
+dense prefix whose freed rows are reused before the ladder grows."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lifecycle
+from repro.data.vocab import VocabMap
+
+STREAM = st.lists(
+    st.lists(st.integers(0, 60), min_size=1, max_size=12),
+    min_size=1, max_size=8)
+
+
+def _replay(batches, masks):
+    """One consumer: admit batch m at step m, compact after each batch
+    with the corresponding keep mask (padded/truncated to live)."""
+    v = VocabMap()
+    remaps = []
+    for m, (batch, mask) in enumerate(zip(batches, masks)):
+        v.rows(batch, admit=True, step=m)
+        keep = (list(mask) + [True] * len(v))[:len(v)]
+        remaps.append(v.compact(keep).tolist())
+    return v, remaps
+
+
+@settings(max_examples=40, deadline=None)
+@given(batches=STREAM, data=st.data())
+def test_same_stream_same_fences_same_rows(batches, data):
+    """ACCEPTANCE (ISSUE 7): two consumers of the same batch sequence
+    with the same fence decisions produce identical remaps, identical
+    key->row tables, and identical touched vectors — the property
+    crash-resume across a compaction fence stands on."""
+    masks = [data.draw(st.lists(st.booleans(), max_size=80),
+                       label=f"keep[{m}]")
+             for m in range(len(batches))]
+    va, ra = _replay(batches, masks)
+    vb, rb = _replay(batches, masks)
+    assert ra == rb
+    assert va.to_state() == vb.to_state()
+    assert va.touched_upto(len(va)) == vb.touched_upto(len(vb))
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=st.lists(st.integers(0, 200), min_size=1, max_size=40,
+                     unique=True),
+       data=st.data())
+def test_compact_remap_is_order_preserving_dense_prefix(keys, data):
+    keep = data.draw(st.lists(st.booleans(), min_size=len(keys),
+                              max_size=len(keys)), label="keep")
+    v = VocabMap(keys)
+    remap = v.compact(keep)
+
+    survivors = [i for i, b in enumerate(keep) if b]
+    # survivors land on 0..n-1 in their original relative order
+    assert [remap[i] for i in survivors] == list(range(len(survivors)))
+    assert all(remap[i] == -1 for i in range(len(keys)) if not keep[i])
+    assert v.to_state() == [keys[i] for i in survivors]
+    # post-compaction lookup agrees with the remap; dead keys are gone
+    for i, k in enumerate(keys):
+        assert v.lookup(k) == (remap[i] if keep[i] else None)
+    # freed rows are reused before any new row is minted
+    fresh = 1000
+    assert v.admit(fresh) == len(survivors)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 24), data=st.data())
+def test_apply_row_remap_agrees_with_host_oracle(n, data):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.types import LDATrainState
+
+    keep = data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                     label="keep")
+    K, W = 4, n + 4                                    # a few guard rows
+    rng = np.random.default_rng(n)
+    phi = rng.gamma(1.0, size=(W, K)).astype(np.float32)
+    remap = VocabMap(list(range(n))).compact(keep)
+    out = lifecycle.apply_row_remap(
+        LDATrainState(phi_acc=jnp.asarray(phi),
+                      m=jnp.asarray(0, jnp.int32),
+                      rng=jax.random.PRNGKey(0)), remap)
+    oracle = np.zeros_like(phi)
+    for i, r in enumerate(remap):
+        if r >= 0:
+            oracle[r] = phi[i]
+    np.testing.assert_array_equal(np.asarray(out.phi_acc), oracle)
