@@ -119,6 +119,26 @@ def main():
           f"(sum={res.theta.sum():.3f}, oov tokens={res.oov_tokens:.0f}, "
           f"engine oov rate={engine.stats()['oov_rate']:.4f})")
 
+    # ---- pull-based parameter server (DESIGN.md §15) -------------------
+    # The allreduce backends above ship every power-selected row every
+    # iteration.  `--backend ps` row-shards phi across servers and moves
+    # only the rows each mini-batch TOUCHED: push sparse deltas, pull
+    # next batch's slice one segment ahead, tolerate `--staleness S`
+    # versions of lag (S=0 is bit-exact vs allreduce — BENCH_comm pins
+    # the drift at <= 1e-6 and the wire at <= 0.5x):
+    #
+    #   python -m repro.launch.lda_train --backend ps --ps-servers 4 \
+    #       --staleness 1 --ps-latency 0.002
+    #
+    # the same touched-row byte model, standalone (Eq. 6 refined):
+    from repro.core.sync import power_sync_bytes, touched_power_sync_bytes
+
+    P, Pk = cfg.num_power_words, cfg.num_power_topics
+    for touched in (40, 400):
+        print(f"[ps] touched={touched:3d}: "
+              f"{touched_power_sync_bytes(P, Pk, touched):,} bytes/iter vs "
+              f"allreduce {power_sync_bytes(P, Pk, 400):,}")
+
     # ---- stream lifecycle (DESIGN.md §14) ------------------------------
     # A drifting stream must also FORGET: Robbins-Monro decay fades stale
     # phi mass, checkpoint-fenced compaction reclaims rows that went both

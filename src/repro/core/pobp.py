@@ -762,7 +762,7 @@ def grow_state(state: LDATrainState, new_vocab_cap: int) -> LDATrainState:
 
 def make_train_step(cfg: LDAConfig, num_shards: int = 1,
                     sync_mode: str = "power", sync_dtype=jnp.float32,
-                    donate: bool = True):
+                    donate: bool = True, reducer: Optional[Reducer] = None):
     """The production streaming step: one jitted, donated-carry POBP batch.
 
     Returns (step, meter) with ``step(state, word_ids, counts) ->
@@ -782,12 +782,21 @@ def make_train_step(cfg: LDAConfig, num_shards: int = 1,
     ``vocab_size`` is the current rung.  live_w is *traced*, so vocabulary
     growth within a rung never recompiles — only crossing a rung does
     (``grow_state`` + a fresh step; compiles <= #rungs x #buckets).
+
+    ``reducer`` injects an alternative sync provider for the SAME shard
+    body — `launch.lda_train --backend ps` passes a ``sync.PSReducer``
+    (push/pull wire billing; identical in-step math) while the allreduce
+    backends keep the default Local/Mesh reducer.  Injected reducers over
+    a multi-shard body must reduce over axis name ``"shards"``.
     """
-    meter = CommMeter()
-    if num_shards == 1:
-        reducer: Reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+    if reducer is not None:
+        meter = reducer.meter
     else:
-        reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
+        meter = CommMeter()
+        if num_shards == 1:
+            reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+        else:
+            reducer = MeshReducer("shards", meter=meter, sync_dtype=sync_dtype)
 
     storage = quantize.phi_acc_dtype(cfg)
 
@@ -858,7 +867,7 @@ def make_sim_minibatch_fn(cfg: LDAConfig, num_shards: int, sync_mode: str = "pow
 
 def make_mesh_shard_fn(cfg: LDAConfig, mesh_axis_names, sync_mode: str = "power",
                        sync_dtype=jnp.float32, meter: Optional[CommMeter] = None,
-                       with_decay: bool = False):
+                       with_decay: bool = False, reducer_factory=None):
     """Per-shard POBP body for ``shard_map`` on a production mesh: documents
     sharded over the data (and pod) axes, topics over the 'model' axis.
 
@@ -869,12 +878,21 @@ def make_mesh_shard_fn(cfg: LDAConfig, mesh_axis_names, sync_mode: str = "power"
     (phi_acc_new, iters, mean_r)``; ``with_decay=True`` (a decayed run,
     cfg.decay_kappa > 0) appends a trailing RM-retention scalar argument —
     the arity is static so the undecayed program stays byte-identical.
+
+    ``reducer_factory(axis_name, meter, sync_dtype) -> Reducer`` replaces
+    the default ``MeshReducer`` for the DATA reducer (the vocabulary-row
+    sync the parameter-server mode reroutes); the model-axis reducer is
+    always a plain mesh psum — topic shards of one worker live on one
+    host and never cross the PS wire.
     """
     dp = tuple(a for a in mesh_axis_names if a in ("pod", "data"))
     meter = meter or CommMeter()
 
     def run(wid, cnt, phi_acc, key, delta_weight, decay):
-        data_red = MeshReducer(dp, meter=meter, sync_dtype=sync_dtype)
+        if reducer_factory is not None:
+            data_red = reducer_factory(dp, meter, sync_dtype)
+        else:
+            data_red = MeshReducer(dp, meter=meter, sync_dtype=sync_dtype)
         model_red = MeshReducer("model", meter=meter, sync_dtype=sync_dtype)
         phi, iters, mean_r, _mu, _theta = pobp_shard_body(
             wid, cnt, phi_acc, key, delta_weight, cfg, data_red, model_red,

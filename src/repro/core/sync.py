@@ -33,7 +33,13 @@ AxisName = Union[str, Sequence[str]]
 # phases recorded once per *inner-loop iteration* (their psums live in
 # trace-once while bodies — core/pobp.py names every in-body psum with a
 # distinct loop phase); everything else is a once-per-mini-batch payload.
-LOOP_PHASES = ("power", "dense_loop", "model_rw_loop", "model_norm_loop")
+_BASE_LOOP_PHASES = ("power", "dense_loop", "model_rw_loop", "model_norm_loop")
+# the parameter-server reducer splits every vocabulary-proportional wire
+# payload into a ``.push`` and a ``.pull`` leg (see ``PSReducer``); the
+# loop-phase set covers both so ``per_minibatch_bytes`` stays correct
+# under either reducer.
+LOOP_PHASES = _BASE_LOOP_PHASES + tuple(
+    f"{p}{leg}" for p in _BASE_LOOP_PHASES for leg in (".push", ".pull"))
 
 
 class CommMeter:
@@ -257,6 +263,65 @@ class LocalReducer(Reducer):
         return x
 
 
+class PSReducer(Reducer):
+    """Parameter-server billing peer of ``MeshReducer``/``LocalReducer``.
+
+    Under the pull-based PS architecture (DESIGN.md §15,
+    ``dist/paramserver.py``) the in-step math is unchanged — the shard
+    body still reduces the same payloads, so ``PSReducer`` delegates the
+    actual sum to a wrapped inner reducer and the training trajectory at
+    staleness 0 matches the allreduce backend.  What changes is the wire
+    model:
+
+      - every vocabulary-proportional payload (``w_rows``-marked) crosses
+        the interconnect TWICE — once as a touched-row delta *push* to
+        the owning server shards and once as a touched-row slice *pull*
+        for the next mini-batch — so it is billed as two phases,
+        ``{phase}.push`` and ``{phase}.pull``, both ``w_rows``-marked so
+        ``bytes_by_phase_at(live_w)`` scales each leg down to the rows
+        that actually travel (pass the measured mean touched-row count as
+        ``live_w`` for touched-granularity billing);
+      - payloads that are NOT vocabulary rows (per-topic scalars, r_k)
+        never live on the row-sharded servers: with a single worker
+        (``LocalReducer`` inner) they need no communication at all and
+        are not billed; with several workers they still need a worker
+        all-reduce and are billed unchanged.
+
+    The host-side transport (``dist.paramserver.SimTransport``) counts
+    the *measured* wire truth; this reducer is the trace-time model the
+    bench cross-checks it against.
+    """
+
+    def __init__(self, inner: Reducer, **kw):
+        kw.setdefault("meter", inner.meter)
+        kw.setdefault("sync_dtype", inner.sync_dtype)
+        super().__init__(**kw)
+        self.inner = inner
+
+    def psum(self, x: jnp.ndarray, phase: str, compress: bool = True,
+             w_rows: Optional[int] = None, dtype=None) -> jnp.ndarray:
+        orig = x.dtype
+        wire = dtype if dtype is not None else self.sync_dtype
+        if compress and x.dtype != wire:
+            x = x.astype(wire)
+        if w_rows:
+            self.meter.record(f"{phase}.push", x, w_rows=w_rows)
+            self.meter.record(f"{phase}.pull", x, w_rows=w_rows)
+        elif not isinstance(self.inner, LocalReducer):
+            self.meter.record(phase, x)
+        out = self.inner._sum(x)
+        return out.astype(orig)
+
+    def bill(self, x: jnp.ndarray, phase: str,
+             w_rows: Optional[int] = None) -> jnp.ndarray:
+        # local statistic touches (decay) are identical under PS
+        self.meter.record(phase, x, w_rows=w_rows)
+        return x
+
+    def _sum(self, x):
+        return self.inner._sum(x)
+
+
 def dense_sync_bytes(W: int, K: int, itemsize: int = 4) -> int:
     """Eq. (5) per-iteration payload of the MPA baseline: the full phi matrix.
 
@@ -284,3 +349,22 @@ def power_sync_bytes(P: int, Pk: int, W: int, itemsize: int = 4,
     with the rung capacity (DESIGN.md §12).
     """
     return 2 * P * Pk * itemsize + W * rw_itemsize
+
+
+def touched_power_sync_bytes(P: int, Pk: int, touched_w: int,
+                             itemsize: int = 4,
+                             rw_itemsize: int = 4) -> int:
+    """Touched-W refinement of Eq. (6): the per-iteration payload when a
+    worker exchanges only the rows its current mini-batch touched
+    (DESIGN.md §15 — the parameter-server wire model).
+
+    The packed submatrix can cover at most ``min(P, touched_w)`` rows —
+    power-selected rows the batch never touched carry no delta and need
+    no pull — and the word-residual leg shrinks from the full [W] vector
+    to the touched rows.  With the corpus-wide touched fraction ``f``
+    this is ~``f`` × the allreduce payload, which is where the PS mode's
+    measured-bytes win comes from (BENCH_comm gates the measured wire
+    against exactly this model).
+    """
+    Pt = min(P, touched_w)
+    return 2 * Pt * Pk * itemsize + touched_w * rw_itemsize

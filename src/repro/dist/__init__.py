@@ -1,11 +1,15 @@
-"""Distribution utilities: fault-tolerant checkpointing and sharding policy.
+"""Distribution utilities: fault-tolerant checkpointing, sharding policy,
+and the pull-based parameter server.
 
 `checkpoint` persists pytrees of (possibly bf16) arrays atomically with a
 bounded retention window — the crash/restart contract of launch/train.py and
 examples/stream_big_corpus.py.  `sharding` is pure metadata: it maps param /
 batch / cache pytrees to PartitionSpecs for the production meshes
 (launch/mesh.py) and validates divisibility so pjit never sees a
-non-divisible sharded axis (DESIGN.md §6).
+non-divisible sharded axis (DESIGN.md §6).  `paramserver` is the row-sharded
+push/pull sync backend of ``launch.lda_train --backend ps``
+(DESIGN.md §15): touched-row delta pushes, prefetched slice pulls, bounded
+staleness.
 """
 
-from repro.dist import checkpoint, sharding  # noqa: F401
+from repro.dist import checkpoint, paramserver, sharding  # noqa: F401

@@ -154,7 +154,23 @@ def build_parser() -> argparse.ArgumentParser:
     # execution
     ap.add_argument("--shards", type=int, default=4,
                     help="simulated data shards (--backend sim)")
-    ap.add_argument("--backend", default="sim", choices=["sim", "shard_map"])
+    ap.add_argument("--backend", default="sim",
+                    choices=["sim", "shard_map", "ps"])
+    # parameter server (--backend ps, DESIGN.md §15)
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded staleness S for --backend ps: a pull for "
+                         "mini-batch m may be served from a server snapshot "
+                         "missing at most the last S pushes; S=0 barriers "
+                         "every pull behind the previous push (trajectory "
+                         "matches the allreduce backend), S>=1 lets the "
+                         "prefetched pull fully overlap the sweep")
+    ap.add_argument("--ps-servers", type=int, default=4,
+                    help="row-sharded server shards, each owning a "
+                         "contiguous phi row range (--backend ps)")
+    ap.add_argument("--ps-latency", type=float, default=0.0,
+                    help="injected per-operation transport latency in "
+                         "seconds (SimTransport) — makes prefetch overlap "
+                         "measurable on localhost; 0 = in-process speed")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"],
                     help="production mesh for --backend shard_map")
     ap.add_argument("--mesh-shape", default="",
@@ -408,6 +424,20 @@ def make_shardmap_train_step(cfg, mesh, sync_mode="power",
     return jax.jit(step, donate_argnums=(0,) if donate else ()), meter
 
 
+def _with_lookahead(it):
+    """Pair each stream item with its successor (None at the end) so the
+    PS client can prefetch the NEXT mini-batch's touched rows while the
+    current sweep runs (DESIGN.md §15).  Rides on top of the prefetched
+    stream, so generation itself still overlaps too."""
+    prev = None
+    for item in it:
+        if prev is not None:
+            yield prev, item
+        prev = item
+    if prev is not None:
+        yield prev, None
+
+
 def _state_tree(state) -> Dict[str, Any]:
     """The checkpoint payload: exactly the driver carry, with stable keys."""
     return {"state": {"phi_acc": state.phi_acc, "m": state.m,
@@ -424,7 +454,9 @@ _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
                 "fixed_len", "dynamic_vocab", "vocab_growth_per_batch",
                 "w_cap_min", "w_growth", "drift_mode", "decay",
                 "compact_every", "compact_min_idle", "compact_mass_tol",
-                "recycle_tol")
+                "recycle_tol", "staleness", "ps_servers")
+# ps_latency is NOT a resume key: injected transport latency changes wall
+# clock, never the trajectory (pushes are applied in batch order either way).
 # NB: sweep_policy / onehot_crossover are deliberately NOT resume keys:
 # both formulations compute the same trajectory (within float
 # associativity) and the same sync bytes, so a resumed run may re-resolve
@@ -494,6 +526,14 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     if dynamic and args.backend != "sim":
         raise ValueError("--dynamic-vocab currently requires --backend sim "
                          "(shard_map growth is on the ROADMAP backlog)")
+    ps = args.backend == "ps"
+    if ps and _parse_decay(getattr(args, "decay", "1,0"))[1]:
+        raise ValueError("--backend ps with --decay kappa>0 is not supported "
+                         "yet: RM forgetting rescales EVERY phi row each "
+                         "batch, so a touched-row delta push would silently "
+                         "drop the decay on untouched server rows "
+                         "(per-segment decay billing rides the multi-host "
+                         "backlog item, ROADMAP)")
     compact_every = int(getattr(args, "compact_every", 0) or 0)
     if compact_every and not dynamic:
         raise ValueError("--compact-every needs --dynamic-vocab: a fixed-W "
@@ -563,6 +603,21 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
     def build_step(cfg):
         if args.backend == "sim":
             return make_train_step(cfg, args.shards, args.sync, sync_dtype)
+        if ps:
+            # the SAME shard body under the PS wire model (DESIGN.md §15):
+            # in-step math is the sim backend's (N simulated shards reduced
+            # over the vmap axis — the whole step is ONE PS worker), but the
+            # meter bills every vocabulary-row payload as touched-granular
+            # push + pull legs.  The host-side exchange is PSClient below.
+            from repro.core.sync import (CommMeter, LocalReducer, MeshReducer,
+                                         PSReducer)
+            meter = CommMeter()
+            inner = (LocalReducer(meter=meter, sync_dtype=sync_dtype)
+                     if args.shards == 1 else
+                     MeshReducer("shards", meter=meter,
+                                 sync_dtype=sync_dtype))
+            return make_train_step(cfg, args.shards, args.sync, sync_dtype,
+                                   reducer=PSReducer(inner))
         mesh = _make_mesh(args)
         return make_shardmap_train_step(cfg, mesh, args.sync, sync_dtype)
 
@@ -574,7 +629,7 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
         # program is the one the stream will actually run.
         scratch = init_train_state(cfg, args.seed)
         for L in (buckets[-1:] if args.fixed_len else buckets):
-            if args.backend == "sim" and args.shards > 1:
+            if args.backend in ("sim", "ps") and args.shards > 1:
                 shape = (args.shards, args.docs_per_batch // args.shards, L)
             else:
                 shape = (args.docs_per_batch, L)
@@ -588,6 +643,34 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
 
     step_fn, meter = build_step(cfg)
 
+    ps_server = ps_client = ps_transport = touched_rows_of = None
+    if ps:
+        from repro.dist.paramserver import (ParamServer, PSClient,
+                                            SimTransport, touched_rows_of)
+        # the server group owns the authoritative statistic; a resumed run
+        # rehydrates it from the restored carry at version start_m (the
+        # checkpoint was written server-synced, see ps_sync_state)
+        ps_server = ParamServer(np.asarray(state.phi_acc, np.float32),
+                                num_servers=args.ps_servers,
+                                version=start_m)
+        wire_np = (np.float32 if args.sync_dtype == "float32"
+                   else jnp.bfloat16)
+        ps_transport = SimTransport(ps_server, latency_s=args.ps_latency,
+                                    wire_dtype=wire_np)
+        ps_client = PSClient(ps_transport, staleness=args.staleness)
+
+    def ps_sync_state():
+        """Drain the PS pipeline and adopt the server-authoritative phi as
+        the carry (checkpoint fences / end of stream).  At S=0 this is a
+        numerical no-op (replica rows equal the server up to the delta-add
+        ulp); at S>0 it also heals any bounded staleness in the replica."""
+        nonlocal state
+        ps_client.flush()
+        phi_srv, _ = ps_server.snapshot()
+        state = LDATrainState(
+            phi_acc=jnp.asarray(phi_srv, state.phi_acc.dtype),
+            m=state.m, rng=state.rng)
+
     def make_stream(seg_start: int, seg_end: int):
         # one prefetched generator per fence segment: the generator stops
         # BEFORE seg_end, so prefetch admissions/touches can never cross a
@@ -600,7 +683,7 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                 args.prefetch)
         return prefetched(
             synthetic_stream(args, buckets, seg_start,
-                             stacked=(args.backend == "sim")),
+                             stacked=(args.backend in ("sim", "ps"))),
             args.prefetch)
 
     _COMPILE_CLOCK.ensure_registered()
@@ -662,6 +745,12 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                             "touched": vocab.touched_upto(live),
                             "vocab_version": vocab_version,
                             "row_remap": last_remap}
+        if ps:
+            # server-side state in the manifest: saves are written with the
+            # pipeline drained and the carry server-synced (ps_sync_state),
+            # so the phi payload IS the server statistic at this version
+            extra["ps"] = {**ps_server.manifest(),
+                           "staleness": args.staleness}
         return extra
 
     tokens = 0.0
@@ -747,8 +836,13 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
         seg_end = (min(args.minibatches,
                        (seg_start // compact_every + 1) * compact_every)
                    if compact_every else args.minibatches)
-        for m, item in enumerate(make_stream(seg_start, seg_end),
-                                 start=seg_start):
+        stream = make_stream(seg_start, seg_end)
+        if ps:
+            stream = _with_lookahead(stream)
+        for m, item in enumerate(stream, start=seg_start):
+            nxt = None
+            if ps:
+                item, nxt = item
             if dynamic:
                 batch, ntok, live_b = item
             else:
@@ -778,11 +872,28 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                                       "live_w": live_b})
                 print(f"minibatch {m + 1:5d}  [grow] live_w={live_b} -> "
                       f"W_cap={new_cap}", flush=True)
+            if ps:
+                # refresh the replica's touched rows from the server (waits
+                # on the prefetched pull; the wait is the overlap instrument)
+                rows = touched_rows_of(batch.word_ids, batch.counts)
+                state = LDATrainState(
+                    phi_acc=ps_client.begin_batch(m + 1, rows,
+                                                  state.phi_acc),
+                    m=state.m, rng=state.rng)
             if dynamic:
                 state, diag = step_fn(state, batch.word_ids, batch.counts,
                                       jnp.asarray(live_b, jnp.int32))
             else:
                 state, diag = step_fn(state, batch.word_ids, batch.counts)
+            if ps:
+                # prefetch BEFORE the push settles: at S>=1 the pull is
+                # served from a bounded-stale snapshot and fully overlaps;
+                # at S=0 it blocks server-side until this push commits
+                if nxt is not None:
+                    nb = nxt[0]
+                    ps_client.prefetch(
+                        m + 2, touched_rows_of(nb.word_ids, nb.counts))
+                ps_client.end_batch(m + 1, state.phi_acc, rows)
             buf.append(diag["mean_r"], diag["iters"])
             tokens += ntok
             if live_b is not None:
@@ -814,6 +925,8 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                                  f"{step_no}")
             if args.ckpt_dir and args.ckpt_every and \
                     step_no % args.ckpt_every == 0:
+                if ps:
+                    ps_sync_state()
                 ckpt.save(args.ckpt_dir, step_no, _state_tree(state),
                           extra=dyn_extra(step_no, live_done))
         seg_start = seg_end
@@ -821,6 +934,10 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             compaction_fence(seg_end)
 
     jax.block_until_ready(state.phi_acc)
+    if ps:
+        # drain + adopt the authoritative server statistic (part of the
+        # run: a real fleet pays this once at shutdown)
+        ps_sync_state()
     wall = time.time() - t0
     # step-function compiles only: eval jits are accounted separately
     compile_s = _COMPILE_CLOCK.total - compile_s0 - eval_compile_s
@@ -851,6 +968,26 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                                 if iters else 0),
         "phi_acc": np.asarray(state.phi_acc),
     }
+    if ps:
+        st = ps_client.stats()
+        done_b = max(args.minibatches - start_m, 1)
+        mt = max(int(round(st["mean_touched_rows"])), 1)
+        result.update(
+            staleness=args.staleness,
+            ps_wire_bytes=int(st["wire_bytes"]),
+            ps_wire_per_minibatch=st["wire_bytes"] / done_b,
+            ps_pull_wait_s=st["pull_wait_s"],
+            ps_push_wait_s=st["push_wait_s"],
+            mean_touched_rows=st["mean_touched_rows"],
+            ps_bytes_by_link=st["bytes_by_link"],
+            # trace-time push/pull model billed at the measured mean
+            # touched-row count (CommMeter w_rows scaling) — the analytic
+            # cross-check of the measured wire bytes above
+            bytes_by_phase_touched=dict(meter.bytes_by_phase_at(mt)),
+            per_minibatch_bytes_touched=(
+                meter.per_minibatch_bytes(iters[-1], live_w=mt)
+                if iters else 0))
+        ps_transport.close()
     if dynamic:
         result.update(
             w_cap=cfg.vocab_size,
@@ -887,6 +1024,12 @@ def main(argv=None):
           f"(+{res['compile_s']:.1f}s in-stream compile)")
     print(f"[comm] per-minibatch bytes={res['per_minibatch_bytes']:,} "
           f"(phases: {res['bytes_by_phase']})")
+    if args.backend == "ps":
+        print(f"[ps] staleness={res['staleness']}  wire/minibatch="
+              f"{res['ps_wire_per_minibatch']:,.0f}B  mean_touched_rows="
+              f"{res['mean_touched_rows']:.0f}  pull_wait="
+              f"{res['ps_pull_wait_s']:.2f}s  push_wait="
+              f"{res['ps_push_wait_s']:.2f}s")
     if args.dynamic_vocab:
         print(f"[vocab] live_w={res['live_w']}  W_cap={res['w_cap']}  "
               f"growths={len(res['growth_events'])} "

@@ -1,0 +1,221 @@
+"""Pull-based power-slice parameter server (ISSUE 8, DESIGN.md §15):
+row sharding, per-link push/pull byte accounting, bounded-staleness
+semantics, S=0 equivalence with the allreduce backend, and PS
+crash-resume through the server-synced checkpoint manifest."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.paramserver import (JaxDistributedTransport, ParamServer,
+                                    PSClient, RowShards, SimTransport,
+                                    sliced_sum, touched_rows_of)
+from repro.launch.lda_train import default_args, train_loop
+
+
+# ------------------------------------------------------------ row sharding
+
+def test_row_shards_cover_balance_and_split():
+    rs = RowShards(10, 3)
+    assert rs.ranges == [(0, 4), (4, 7), (7, 10)]
+    assert [rs.owner(r) for r in (0, 3, 4, 9)] == [0, 0, 1, 2]
+    split = rs.split(np.array([0, 5, 6, 9]))
+    assert sorted(split) == [0, 1, 2]
+    assert split[1].tolist() == [5, 6]
+    # servers a touched set does not address never appear
+    assert sorted(rs.split(np.array([8, 9]))) == [2]
+    with pytest.raises(ValueError):
+        rs.owner(10)
+    with pytest.raises(ValueError):
+        RowShards(0, 3)
+
+
+def test_touched_rows_of_ignores_padding_slots():
+    wid = np.array([[1, 5, 0], [5, 2, 0]])
+    cnt = np.array([[1.0, 1.0, 0.0], [2.0, 1.0, 0.0]])
+    np.testing.assert_array_equal(touched_rows_of(wid, cnt), [1, 2, 5])
+    # stacked [N, Dl, L] layout flattens the same way; a live word at
+    # row 0 counts, zero-count slots never do
+    wid3 = np.array([[[0, 3]], [[3, 7]]])
+    cnt3 = np.array([[[2.0, 1.0]], [[1.0, 0.0]]])
+    np.testing.assert_array_equal(touched_rows_of(wid3, cnt3), [0, 3])
+
+
+# ------------------------------------------------------- server + transport
+
+def test_server_push_pull_roundtrip_and_version_gate():
+    server = ParamServer(np.zeros((8, 3), np.float32), num_servers=2)
+    t = SimTransport(server)
+    rows = np.array([1, 5])
+    delta = np.arange(6, dtype=np.float32).reshape(2, 3)
+    t.push_batch(1, rows, delta).result()
+    vals, ver = t.pull(rows, min_version=1).result()
+    np.testing.assert_array_equal(vals, delta)
+    assert ver == 1 and server.committed == 1
+    # a pull demanding a version no push ever committed times out loudly
+    with pytest.raises(TimeoutError):
+        server.serve_pull(0, np.array([1]), min_version=5, timeout=0.05)
+    # cross-shard addressing is a hard error, not silent corruption
+    with pytest.raises(ValueError):
+        server.apply_push(0, np.array([7]), np.ones((1, 3), np.float32))
+    t.close()
+
+
+def test_transport_bills_per_link_in_both_directions():
+    server = ParamServer(np.zeros((8, 4), np.float32), num_servers=2)
+    t = SimTransport(server)
+    rows = np.array([0, 1, 6])          # 2 rows on s0, 1 row on s1
+    t.push_batch(1, rows, np.ones((3, 4), np.float32)).result()
+    t.pull(rows, 1).result()
+    per_row = 4 * 4 + 4                 # K float32 values + int32 row id
+    assert t.pushed_bytes == [2 * per_row, per_row]
+    assert t.pulled_bytes == [2 * per_row, per_row]
+    assert t.total_bytes == 2 * 3 * per_row
+    by = t.bytes_by_link()
+    assert by["push:s0"] == 2 * per_row and by["pull:s1"] == per_row
+    t.close()
+
+
+def test_bf16_wire_halves_value_bytes_and_round_trips():
+    server = ParamServer(np.zeros((4, 4), np.float32))
+    t = SimTransport(server, wire_dtype=jnp.bfloat16)
+    v = 1.337
+    t.push_batch(1, np.array([2]),
+                 np.full((1, 4), v, np.float32)).result()
+    assert t.pushed_bytes[0] == 4 * 2 + 4       # values at bf16 width
+    vals, _ = t.pull(np.array([2]), 1).result()
+    want = np.float32(np.asarray(v, jnp.bfloat16))
+    np.testing.assert_array_equal(vals, np.full((1, 4), want))
+    t.close()
+
+
+def test_jax_distributed_transport_refuses_uninitialized():
+    # the multi-host slot must fail loudly rather than silently running
+    # in-process while claiming to be a cluster
+    with pytest.raises(RuntimeError, match="jax.distributed"):
+        JaxDistributedTransport(2)
+
+
+# ----------------------------------------------------------------- client
+
+def test_client_s0_round_trip_is_barriered():
+    server = ParamServer(np.zeros((6, 2), np.float32))
+    client = PSClient(SimTransport(server), staleness=0)
+    rows = np.array([0, 3])
+    phi = client.begin_batch(1, rows, jnp.zeros((6, 2)))
+    phi_new = phi.at[jnp.asarray(rows)].add(1.0)
+    client.end_batch(1, phi_new, rows)          # S=0: blocks until commit
+    assert server.committed == 1
+    phi2 = client.begin_batch(2, rows, phi_new)
+    np.testing.assert_array_equal(np.asarray(phi2)[rows],
+                                  np.asarray(phi_new)[rows])
+    client.flush()
+    client.transport.close()
+
+
+def test_client_staleness_bounds_pending_and_serves_stale_pulls():
+    server = ParamServer(np.zeros((6, 2), np.float32))
+    client = PSClient(SimTransport(server), staleness=1)
+    rows = np.array([1, 4])
+    phi = client.begin_batch(1, rows, jnp.zeros((6, 2)))
+    # S=1: batch 2's prefetch needs committed >= 0 — served although
+    # batch 1's push has not even been issued yet (bounded staleness)
+    client.prefetch(2, rows)
+    phi = client.begin_batch(2, rows, phi)      # must not block
+    client.end_batch(2, phi.at[jnp.asarray(rows)].add(2.0), rows)
+    client.flush()
+    # the push was never lost: the server holds it after the drain
+    vals, _ = server.serve_pull(0, np.array([1]), min_version=2)
+    np.testing.assert_array_equal(vals, [[2.0, 2.0]])
+    assert client.mean_touched_rows == 2.0
+    client.transport.close()
+    with pytest.raises(ValueError):
+        PSClient(SimTransport(ParamServer(np.zeros((2, 2), np.float32))),
+                 staleness=-1)
+
+
+def test_sliced_sum_is_bitexact_with_dense_sum():
+    rng = np.random.default_rng(0)
+    w_cap, k, n = 12, 3, 3
+    deltas, touched = [], []
+    for _ in range(n):
+        rows = np.sort(rng.choice(w_cap, size=4, replace=False))
+        d = np.zeros((w_cap, k), np.float32)
+        d[rows] = rng.normal(size=(4, k)).astype(np.float32)
+        deltas.append(d)
+        touched.append(rows)
+    dense = deltas[0] + deltas[1] + deltas[2]   # same per-row add order
+    np.testing.assert_array_equal(sliced_sum(deltas, touched, w_cap), dense)
+
+
+# ------------------------------------------------------ driver integration
+
+def _common(**kw):
+    base = dict(minibatches=6, docs_per_batch=16, vocab=200, topics=8,
+                lambda_k=4, inner_iters=5, log_every=0, shards=2, seed=11)
+    base.update(kw)
+    return base
+
+
+def test_ps_backend_matches_allreduce_at_s0():
+    """The acceptance pin: --backend ps --staleness 0 reproduces the
+    allreduce trajectory (drift <= 1e-6) and reports touched-row wire
+    bytes."""
+    ar = train_loop(default_args(**_common(), backend="sim"))
+    ps = train_loop(default_args(**_common(), backend="ps", staleness=0,
+                                 ps_servers=3))
+    np.testing.assert_allclose(ps["mean_r"], ar["mean_r"], atol=1e-6)
+    np.testing.assert_allclose(ps["phi_acc"], ar["phi_acc"],
+                               rtol=1e-6, atol=1e-5)
+    assert ps["ps_wire_bytes"] > 0
+    assert 0 < ps["mean_touched_rows"] <= 200
+    # measured wire == the touched-row byte model, exactly: each of the
+    # push and pull legs ships touched * (K * 4 + 4) bytes per batch, so
+    # the total is 2 * (K*4 + 4) * sum(touched) = 2 * (K*4+4) * mean * n
+    n, k = len(ps["mean_r"]), _common()["topics"]
+    assert ps["ps_wire_bytes"] == pytest.approx(
+        2 * (k * 4 + 4) * ps["mean_touched_rows"] * n)
+    # push/pull phase split present in the trace-time model
+    assert any(p.endswith(".push") for p in ps["bytes_by_phase"])
+    assert any(p.endswith(".pull") for p in ps["bytes_by_phase"])
+
+
+def test_ps_staleness_converges():
+    ps2 = train_loop(default_args(**_common(), backend="ps", staleness=2,
+                                  ps_servers=3))
+    assert np.isfinite(ps2["ppl"])
+    assert np.isfinite(ps2["mean_r"]).all()
+    assert ps2["staleness"] == 2
+
+
+def test_ps_crash_resume_matches_uninterrupted(tmp_path):
+    kw = _common(minibatches=8, backend="ps", staleness=0, ps_servers=3,
+                 ckpt_dir=str(tmp_path), ckpt_every=3)
+    with pytest.raises(SystemExit):
+        train_loop(default_args(**kw, crash_at=5))
+    res = train_loop(default_args(**kw))
+    base = train_loop(default_args(**_common(minibatches=8, backend="ps",
+                                             staleness=0, ps_servers=3)))
+    assert res["first_m"] == 3
+    np.testing.assert_allclose(res["mean_r"], base["mean_r"][3:], atol=1e-6)
+    # the manifest carries the server-side state at the fence
+    from repro.dist import checkpoint as ckpt
+    extra, _ = ckpt.peek_extra(str(tmp_path))
+    assert extra["ps"]["num_servers"] == 3
+    assert extra["ps"]["staleness"] == 0
+    assert len(extra["ps"]["ranges"]) == 3
+
+
+def test_ps_resume_rejects_mismatched_staleness(tmp_path):
+    kw = _common(minibatches=6, backend="ps", ps_servers=3,
+                 ckpt_dir=str(tmp_path), ckpt_every=2)
+    train_loop(default_args(**kw, staleness=0))
+    kw["minibatches"] = 10
+    with pytest.raises(ValueError, match="staleness"):
+        train_loop(default_args(**kw, staleness=2))
+
+
+def test_ps_rejects_decay():
+    with pytest.raises(ValueError, match="decay"):
+        train_loop(default_args(**_common(), backend="ps",
+                                decay="64,0.6"))

@@ -1,0 +1,102 @@
+"""Property suite for the sliced PS exchange (ISSUE 8, DESIGN.md §15).
+
+The parameter-server mode's S=0 equivalence with the allreduce backend
+rests on one algebraic fact: when every shard's dense delta is zero off
+its own touched rows (true by construction for POBP's token-scatter
+payloads), summing per-shard TOUCHED-ROW SLICES at the row-sharded
+servers reproduces the dense allreduce ``psum`` BIT-EXACTLY — per row,
+the same floats add in the same order; rows no shard touched contribute
+exactly zero.  These properties pin that fact under
+
+  - arbitrary shard counts, touched sets, and value magnitudes,
+  - live-W guard rows (rows >= live_w are structurally zero on every
+    shard — the §12 capacity-ladder invariant), and
+  - the bf16 sync_dtype wire cast from PR 6 (the cast is applied
+    per-shard-payload on both paths, so equality survives compression).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.dist.paramserver import RowShards, sliced_sum
+
+
+@st.composite
+def shard_payloads(draw):
+    """(deltas [N, W, K], touched per shard, live_w): dense per-shard
+    payloads that are zero off their touched rows and zero on guard
+    rows — the exact structure pobp's token-scatter deltas have."""
+    w = draw(st.integers(3, 24))
+    k = draw(st.integers(1, 6))
+    n = draw(st.integers(1, 4))
+    live_w = draw(st.integers(1, w))
+    deltas, touched = [], []
+    for s in range(n):
+        n_rows = draw(st.integers(0, live_w))
+        rows = np.sort(np.asarray(
+            draw(st.lists(st.integers(0, live_w - 1), min_size=n_rows,
+                          max_size=n_rows, unique=True)), np.int64))
+        d = np.zeros((w, k), np.float32)
+        if rows.size:
+            vals = draw(st.lists(
+                st.floats(-1e4, 1e4, width=32, allow_nan=False),
+                min_size=int(rows.size) * k, max_size=int(rows.size) * k))
+            d[rows] = np.asarray(vals, np.float32).reshape(rows.size, k)
+        deltas.append(d)
+        touched.append(rows)
+    return deltas, touched, w, live_w
+
+
+@given(shard_payloads())
+@settings(max_examples=60, deadline=None)
+def test_union_of_touched_slices_equals_dense_psum(payload):
+    """Sliced exchange == dense allreduce, bit for bit, at S=0."""
+    deltas, touched, w, live_w = payload
+    # the allreduce oracle: lax.psum over a named vmap axis — the exact
+    # collective MeshReducer issues in the sim/mesh backends
+    stacked = jnp.asarray(np.stack(deltas))
+    dense = np.asarray(jax.vmap(lambda d: jax.lax.psum(d, "shards"),
+                                axis_name="shards")(stacked))[0]
+    ps = sliced_sum(deltas, touched, w)
+    np.testing.assert_array_equal(ps, dense)
+    # guard rows (>= live_w) stayed identically zero on both paths
+    assert not ps[live_w:].any()
+
+
+@given(shard_payloads())
+@settings(max_examples=40, deadline=None)
+def test_sliced_psum_survives_bf16_wire_cast(payload):
+    """The PR 6 compressed-sync path: each shard's payload crosses the
+    wire at bf16 and is upcast before the add.  Applying the SAME cast
+    round-trip per shard payload keeps sliced == dense bit-exact — the
+    cast commutes with the slicing, not with the sum."""
+    deltas, touched, w, live_w = payload
+    cast = [np.asarray(jnp.asarray(d).astype(jnp.bfloat16)
+                       .astype(jnp.float32)) for d in deltas]
+    dense = cast[0].copy()
+    for d in cast[1:]:
+        dense = dense + d
+    np.testing.assert_array_equal(sliced_sum(cast, touched, w), dense)
+    assert not sliced_sum(cast, touched, w)[live_w:].any()
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_row_shards_partition_is_exact(w, n):
+    """Every row has exactly one owner; ranges are balanced to one row."""
+    rs = RowShards(w, n)
+    sizes = [hi - lo for lo, hi in rs.ranges]
+    assert sum(sizes) == w
+    assert max(sizes) - min(sizes) <= 1
+    all_rows = np.arange(w)
+    split = rs.split(all_rows)
+    covered = np.sort(np.concatenate([v for v in split.values()]))
+    np.testing.assert_array_equal(covered, all_rows)
+    for s, rows in split.items():
+        lo, hi = rs.ranges[s]
+        assert ((rows >= lo) & (rows < hi)).all()

@@ -281,3 +281,93 @@ def test_driver_shard_map_backend_smoke():
     # including the per-iteration loop phase billed by per_minibatch_bytes
     assert "model_norm" in out.stdout and "model_rw" in out.stdout
     assert "model_rw_loop" in out.stdout
+
+
+# ------------------------------------------ PS billing model (DESIGN.md §15)
+
+def test_ps_reducer_splits_w_rows_payloads_into_push_pull_legs():
+    """Under the parameter server every W-proportional payload crosses the
+    wire twice — delta push + slice pull — and both legs stay w_rows-marked
+    so touched-granularity billing (`bytes_by_phase_at`) scales them."""
+    from repro.core.sync import CommMeter, LocalReducer, PSReducer
+
+    meter = CommMeter()
+    red = PSReducer(LocalReducer(meter=meter))
+    assert red.meter is meter                       # inherited from inner
+    x = jnp.ones((W, K), jnp.float32)
+    out = red.psum(x, "power", compress=False, w_rows=W)
+    np.testing.assert_array_equal(out, x)           # single worker: identity
+    by = meter.bytes_by_phase
+    assert by == {"power.push": W * K * 4, "power.pull": W * K * 4}
+    # touched-row billing: pass the measured touched count as live_w
+    touched = meter.bytes_by_phase_at(30)
+    assert touched["power.push"] == touched["power.pull"] == 30 * K * 4
+    # bf16 wire override halves both legs and round-trips the dtype
+    out16 = red.psum(x, "dense_loop", dtype=jnp.bfloat16, w_rows=W)
+    assert out16.dtype == jnp.float32
+    assert meter.phase_bytes("dense_loop.push") == W * K * 2
+    assert meter.phase_bytes("dense_loop.pull") == W * K * 2
+    # per-topic payloads never live on row-sharded servers; with a single
+    # worker (LocalReducer inner) they need no communication at all
+    red.psum(jnp.ones((K,)), "model_norm", compress=False)
+    assert "model_norm" not in meter.bytes_by_phase
+
+
+def test_ps_reducer_bills_worker_allreduce_and_dedups_retraces():
+    """With several workers (Mesh inner) non-row payloads still need a
+    worker all-reduce and bill unchanged; push/pull legs dedup across
+    plain retraces and max-merge across shape-bucket variants exactly
+    like the allreduce phases they replace."""
+    from repro.core.sync import CommMeter, MeshReducer, PSReducer
+
+    red = PSReducer(MeshReducer("s"))
+    meter = red.meter
+
+    def run(L):
+        def shard(x, y):
+            a = red.psum(x, "power", compress=False, w_rows=W)
+            b = red.psum(y, "model_norm", compress=False)
+            return a, b
+        return jax.jit(lambda x, y: jax.vmap(shard, axis_name="s")(x, y))(
+            jnp.ones((2, W, K)), jnp.ones((2, L)))
+
+    a, b = run(8)
+    np.testing.assert_array_equal(np.asarray(a)[0], np.full((W, K), 2.0))
+    np.testing.assert_array_equal(np.asarray(b)[0], np.full((8,), 2.0))
+    run(8)                                          # plain retrace: no-op
+    run(16)                                         # shape bucket: max-merge
+    by = meter.bytes_by_phase
+    assert by["power.push"] == by["power.pull"] == W * K * 4
+    assert by["model_norm"] == 16 * 4
+
+
+def test_per_minibatch_bytes_counts_push_pull_legs_as_loop_phases():
+    """The power loop's push/pull legs are per-inner-iteration payloads:
+    dense + (iters-1) * sparse must bill them (iters-1) times while the
+    once-per-batch dense legs bill once."""
+    from repro.core.sync import CommMeter, PSReducer, SimReducer
+
+    meter = CommMeter()
+    red = PSReducer(SimReducer(meter=meter))
+    x = jnp.ones((2, 10, K), jnp.float32)           # leading N=2 shard axis
+    out = red.psum(x, "power", compress=False, w_rows=10)
+    np.testing.assert_array_equal(np.asarray(out)[0], np.asarray(out)[1])
+    red.psum(jnp.ones((2, W, K)), "dense", compress=False, w_rows=W)
+    leg_loop, leg_once = 2 * 10 * K * 4, 2 * W * K * 4
+    assert meter.per_minibatch_bytes(4) == 2 * leg_once + 3 * 2 * leg_loop
+
+
+def test_touched_power_sync_bytes_caps_rows_and_threads_itemsize():
+    """Touched-W Eq. 6: the packed exchange covers at most min(P, touched)
+    rows and the residual leg shrinks to the touched rows."""
+    from repro.core.sync import power_sync_bytes, touched_power_sync_bytes
+
+    P, Pk = 50, 8
+    assert touched_power_sync_bytes(P, Pk, 20) == 2 * 20 * Pk * 4 + 20 * 4
+    # more touched rows than power slots: packed legs cap at P
+    assert touched_power_sync_bytes(P, Pk, 90) == 2 * P * Pk * 4 + 90 * 4
+    # touching the whole vocabulary degenerates to the dense-W Eq. 6 model
+    assert touched_power_sync_bytes(P, Pk, W) == power_sync_bytes(P, Pk, W)
+    # compressed payload width threads through the packed legs only
+    assert (touched_power_sync_bytes(P, Pk, 20, itemsize=2)
+            == 2 * 20 * Pk * 2 + 20 * 4)
