@@ -264,6 +264,252 @@ def make_fold_in_step(cfg: LDAConfig, fold_iters: int = 30,
     return jax.jit(step, donate_argnums=donate_argnums), meter
 
 
+# --------------------------------------------------------------------------
+# continuous-batching slab step (DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SlabState:
+    """Persistent in-flight fold-in slab (a jax pytree, donated step-over-step).
+
+    A fixed [B, L] grid of request slots: each live slot holds one
+    document mid-fold-in.  All per-slot state advances together in
+    `make_slab_step`'s jitted step; retirement/refill swaps individual
+    slots from the host without ever changing a compiled shape.
+
+    word_rows: int32 [B, L]   phi rows per token slot (0 when empty)
+    counts:    f32   [B, L]   token counts (0 when empty / padding)
+    mu:        f32   [B*L,Kl] token-major messages ([N, B*L, Kl] sharded)
+    theta:     f32   [B, Kl]  doc-topic statistic  ([N, B, Kl] sharded)
+    r_doc:     f32   [B]      last per-doc residual (early-exit signal)
+    r_prev:    f32   [B]      previous residual (the geometric-tail rho)
+    it:        int32 [B]      fold-in sweeps this slot's document has run
+    live:      bool  [B]      slot holds an un-retired request
+    """
+
+    word_rows: jnp.ndarray
+    counts: jnp.ndarray
+    mu: jnp.ndarray
+    theta: jnp.ndarray
+    r_doc: jnp.ndarray
+    r_prev: jnp.ndarray
+    it: jnp.ndarray
+    live: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    SlabState,
+    data_fields=("word_rows", "counts", "mu", "theta", "r_doc", "r_prev",
+                 "it", "live"),
+    meta_fields=())
+
+
+def make_slab_step(cfg: LDAConfig, *, slots: int, slot_len: int,
+                   refill_cap: Optional[int] = None,
+                   sweeps_per_step: int = 2, fold_iters: int = 30,
+                   residual_tol: float = 1e-2, topic_shards: int = 1,
+                   sync_dtype=jnp.float32, donate: bool = True,
+                   impl: Optional[str] = None):
+    """Continuous-batching serving step: advance every in-flight slot a few
+    fold-in sweeps, retire the converged, refill mid-flight (DESIGN.md §16).
+
+    Replaces bucket-barrier admission: instead of a batch that lives and
+    dies together, a persistent [B = slots, L = slot_len] slab carries one
+    live document per slot.  Each call to the returned ``step``:
+
+      1. **refills**: scatters up to ``refill_cap`` freshly admitted
+         documents into the slot indices the host picked (a retired or
+         never-used slot; index ``slots`` marks an unused refill lane and
+         is scatter-dropped), drawing each new document's random message
+         init — or a warm-start init from a cached theta — in-step;
+      2. **iterates**: runs ``sweeps_per_step`` token-major fold-in sweeps
+         over the whole slab (the exact `fold_in_tokens` update; frozen /
+         empty slots are masked, and on the Pallas path routed to the
+         carry megakernel's guard row);
+      3. **retires**: recomputes each live slot's geometric-tail residual
+         bound; a slot whose remaining theta movement clears
+         ``residual_tol`` per token (or that hit ``fold_iters``) comes
+         back in the ``retired`` mask with its normalized theta.
+
+    Compiles ONCE for the slab geometry — request shapes never reach the
+    compiler, so admission is barrier-free: no request waits for a bucket
+    to fill and no converged document holds its slot while stragglers
+    finish.
+
+    Returns ``(init_state, step, meter)`` where
+
+      init_state() -> SlabState (all slots empty)
+      step(phi_norm, state, refill_rows [R, L], refill_cnt [R, L],
+           refill_slot [R], warm_theta [R, K], warm_mask [R], key)
+        -> (state', retired [B] bool, theta_out [B, K], iters [B] int32,
+            r_doc [B])
+
+    ``phi_norm`` is an argument (one device-resident copy, swap-friendly);
+    with ``topic_shards > 1`` it is the [N, W, K/N] stack from
+    `split_topic_shards` and the body runs under ``jax.vmap`` with psum'd
+    renormalization, byte-metered — the same simulation contract as
+    `make_fold_in_step`.  ``state`` is donated: the slab never reallocates.
+    """
+    B, L = int(slots), int(slot_len)
+    R = B if refill_cap is None else int(refill_cap)
+    if not 0 < R <= B:
+        raise ValueError(f"refill_cap={R} outside [1, slots={B}]")
+    if sweeps_per_step < 1:
+        raise ValueError(f"sweeps_per_step must be >= 1: {sweeps_per_step}")
+    K = cfg.num_topics
+    if K % topic_shards:
+        raise ValueError(f"num_topics={K} does not divide over "
+                         f"{topic_shards} topic shards")
+    Kl = K // topic_shards
+    meter = CommMeter()
+    if topic_shards == 1:
+        reducer: Reducer = LocalReducer(meter=meter, sync_dtype=sync_dtype)
+    else:
+        reducer = MeshReducer("model", meter=meter, sync_dtype=sync_dtype)
+    impl_r = cfg.impl if impl is None else impl
+    use_pallas = impl_r == "pallas" and topic_shards == 1
+    doc_ids = jnp.repeat(jnp.arange(B, dtype=jnp.int32), L)       # [B*L]
+    tol = float(residual_tol)
+
+    def init_state() -> SlabState:
+        lead = () if topic_shards == 1 else (topic_shards,)
+        return SlabState(
+            word_rows=jnp.zeros((B, L), jnp.int32),
+            counts=jnp.zeros((B, L), jnp.float32),
+            mu=jnp.zeros(lead + (B * L, Kl), jnp.float32),
+            theta=jnp.zeros(lead + (B, Kl), jnp.float32),
+            r_doc=jnp.zeros((B,), jnp.float32),
+            r_prev=jnp.ones((B,), jnp.float32),
+            it=jnp.zeros((B,), jnp.int32),
+            live=jnp.zeros((B,), bool))
+
+    def active_slots(r_doc, r_prev, it, live, tok_d):
+        # the fold_in_tokens geometric-tail bound, per slot: remaining
+        # theta movement ~ r * rho / (1 - rho) with rho the sweep-over-
+        # sweep decay (pessimistic floor 0.8, capped below 1)
+        rho = jnp.clip(r_doc / jnp.maximum(r_prev, 1e-30), 0.8, 0.95)
+        tail = r_doc * rho / (1.0 - rho)
+        return live & (it < fold_iters) & (tail > tol * tok_d)
+
+    def body(phi_norm, state: SlabState, refill_rows, refill_cnt,
+             refill_slot, warm_theta, warm_mask, key):
+        valid = refill_slot < B                                    # [R]
+        wid = state.word_rows.at[refill_slot].set(refill_rows, mode="drop")
+        cnt = state.counts.at[refill_slot].set(refill_cnt, mode="drop")
+        live = state.live.at[refill_slot].set(valid, mode="drop")
+
+        # ---- fresh init for refilled slots (in-step, per-slot random) --
+        # drawn at the GLOBAL K and sliced per topic shard, the same
+        # K-invariant contract as _init_messages; warm-started slots seed
+        # their messages from the cached theta instead (one BP half-step:
+        # m_l ∝ theta_cached * phi_w_l), which restarts the fold-in near
+        # the cached posterior so the residual bound clears in fewer sweeps
+        u = jax.random.uniform(key, (R, L, K), minval=0.01, maxval=1.0)
+        if Kl != K:
+            idx = jax.lax.axis_index("model")
+            u = jax.lax.dynamic_slice_in_dim(u, idx * Kl, Kl, axis=2)
+            warm_theta = jax.lax.dynamic_slice_in_dim(
+                warm_theta, idx * Kl, Kl, axis=1)
+        phi_new = jnp.take(phi_norm, refill_rows.reshape(-1),
+                           axis=0).reshape(R, L, Kl)
+        warm_u = warm_theta[:, None, :] * phi_new                 # [R, L, Kl]
+        u = jnp.where(warm_mask[:, None, None], warm_u, u)
+        norm0 = reducer.psum(jnp.sum(u, -1, keepdims=True),
+                             "slab_init_norm", compress=False)
+        mu0 = u / jnp.maximum(norm0, 1e-30)
+        c_new = refill_cnt[..., None]                             # [R, L, 1]
+        theta0 = jnp.sum(c_new * mu0, axis=1)                     # [R, Kl]
+
+        mu = state.mu.reshape(B, L, Kl).at[refill_slot].set(
+            mu0, mode="drop").reshape(B * L, Kl)
+        theta = state.theta.at[refill_slot].set(theta0, mode="drop")
+        r_doc = state.r_doc.at[refill_slot].set(
+            jnp.where(valid, jnp.inf, 0.0), mode="drop")
+        r_prev = state.r_prev.at[refill_slot].set(1.0, mode="drop")
+        it = state.it.at[refill_slot].set(0, mode="drop")
+
+        # ---- iterate: sweeps_per_step token-major fold-in sweeps -------
+        c = cnt.reshape(B * L, 1)
+        tok_d = cnt.sum(axis=1)                                    # [B]
+        wid_t = wid.reshape(B * L)
+        phi_tok = jnp.take(phi_norm, wid_t, axis=0)                # [T, Kl]
+        if use_pallas:
+            from repro.core.sweep_dispatch import carry_vmem_fit
+            from repro.kernels.power_sweep.ops import power_sweep_carry
+            w_rows = phi_norm.shape[0]
+            phi_rows = jnp.concatenate(
+                [phi_norm, jnp.zeros((1, Kl), phi_norm.dtype)], axis=0)
+            mask_dummy = jnp.zeros((1, Kl), jnp.float32)
+            pt_zero = jnp.zeros((Kl,), jnp.float32)
+            kblocked = (cfg.sweep_policy == "kblocked"
+                        or (cfg.sweep_policy == "auto"
+                            and not carry_vmem_fit(Kl, w_rows, B,
+                                                   cfg.vmem_budget_bytes)))
+        for _ in range(sweeps_per_step):
+            act_d = active_slots(r_doc, r_prev, it, live, tok_d)   # [B]
+            act_tok = act_d[doc_ids]                               # [T]
+            if use_pallas:
+                p_tok = jnp.where(act_tok, wid_t, w_rows).astype(jnp.int32)
+                mu_new, th_delta, _, _, r_local = power_sweep_carry(
+                    p_tok, doc_ids, c, mu, theta, pt_zero,
+                    phi_rows, mask_dummy, alpha=cfg.alpha, beta=0.0,
+                    wbeta=1.0, update_phi=False, kblocked=kblocked,
+                    vmem_budget_bytes=cfg.vmem_budget_bytes)
+                theta = theta + th_delta
+            else:
+                th = theta[doc_ids] - c * mu + cfg.alpha
+                unnorm = th * phi_tok
+                norm = reducer.psum(jnp.sum(unnorm, -1, keepdims=True),
+                                    "slab_norm_loop", compress=False)
+                mu_new = unnorm / jnp.maximum(norm, 1e-30)
+                mu_new = jnp.where(act_tok[:, None], mu_new, mu)
+                delta = mu_new - mu
+                theta = theta + (c * delta).reshape(B, L, Kl).sum(axis=1)
+                r_local = (c * jnp.abs(delta)).reshape(B, L, Kl).sum(
+                    axis=(1, 2))
+            r_new = reducer.psum(r_local, "slab_rw_loop", compress=False)
+            r_prev = jnp.where(act_d, r_doc, r_prev)
+            r_doc = jnp.where(act_d, r_new, r_doc)
+            it = it + act_d.astype(jnp.int32)
+            mu = mu_new
+
+        # ---- retire: live slots whose residual bound cleared -----------
+        still = active_slots(r_doc, r_prev, it, live, tok_d)
+        retired = live & ~still
+        th_out = theta + cfg.alpha
+        denom = reducer.psum(jnp.sum(th_out, -1, keepdims=True),
+                             "slab_theta_norm", compress=False)
+        theta_out = th_out / denom                                  # [B, Kl]
+        state = SlabState(word_rows=wid, counts=cnt, mu=mu, theta=theta,
+                          r_doc=r_doc, r_prev=r_prev, it=it, live=still)
+        return state, retired, theta_out, it, r_doc
+
+    def step(phi_norm, state, refill_rows, refill_cnt, refill_slot,
+             warm_theta, warm_mask, key):
+        if topic_shards == 1:
+            return body(phi_norm, state, refill_rows, refill_cnt,
+                        refill_slot, warm_theta, warm_mask, key)
+        in_state = SlabState(word_rows=None, counts=None, mu=0, theta=0,
+                             r_doc=None, r_prev=None, it=None, live=None)
+        out_st, retired, theta_out, it, r_doc = jax.vmap(
+            body, in_axes=(0, in_state, None, None, None, None, None, None),
+            axis_name="model")(phi_norm, state, refill_rows, refill_cnt,
+                               refill_slot, warm_theta, warm_mask, key)
+        # shared fields come back shard-replicated: keep shard 0; the
+        # sharded mu/theta keep their leading [N] axis
+        state = SlabState(word_rows=out_st.word_rows[0],
+                          counts=out_st.counts[0], mu=out_st.mu,
+                          theta=out_st.theta, r_doc=out_st.r_doc[0],
+                          r_prev=out_st.r_prev[0], it=out_st.it[0],
+                          live=out_st.live[0])
+        # [N, B, K/N] local mixtures -> [B, K] global
+        theta_out = jnp.transpose(theta_out, (1, 0, 2)).reshape(B, -1)
+        return state, retired[0], theta_out, it[0], r_doc[0]
+
+    donate_argnums = (1,) if donate else ()
+    return init_state, jax.jit(step, donate_argnums=donate_argnums), meter
+
+
 def split_topic_shards(phi_norm_wk: jnp.ndarray, topic_shards: int
                        ) -> jnp.ndarray:
     """[W, K] -> [N, W, K/N] contiguous topic shards (the layout

@@ -12,8 +12,10 @@ from repro.data.batching import (  # noqa: F401
     minibatch_stream,
     prefetched,
     sharded_minibatch_stream,
+    slab_refill,
     stack_shards,
     train_test_split_counts,
+    truncate_doc,
     shard_docs,
     vocab_mapped_minibatch_stream,
 )

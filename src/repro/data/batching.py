@@ -26,14 +26,23 @@ from repro.data.synthetic import Doc
 _SENTINEL = object()
 
 
+def truncate_doc(ids: np.ndarray, counts: np.ndarray, max_len: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Keep a document's ``max_len`` highest-count words (the tail carries
+    negligible probability mass — same truncation argument the paper uses
+    for the vocabulary).  No-op for documents that already fit."""
+    if len(ids) > max_len:
+        keep = np.argsort(-counts)[:max_len]
+        return ids[keep], counts[keep]
+    return ids, counts
+
+
 def docs_to_padded(docs: Sequence[Doc], max_len: int | None = None,
                    pad_multiple: int = 8) -> MiniBatch:
     """Pack a list of (word_ids, counts) docs into a padded MiniBatch.
 
     Pads L up to a multiple of ``pad_multiple`` (TPU lane friendliness).
-    Documents longer than max_len keep their ``max_len`` highest-count words
-    (the tail carries negligible probability mass — same truncation argument
-    the paper uses for the vocabulary).
+    Documents longer than max_len are truncated via ``truncate_doc``.
     """
     import jax.numpy as jnp
 
@@ -44,12 +53,42 @@ def docs_to_padded(docs: Sequence[Doc], max_len: int | None = None,
     wid = np.zeros((D, max_len), np.int32)
     cnt = np.zeros((D, max_len), np.float32)
     for i, (ids, counts) in enumerate(docs):
-        if len(ids) > max_len:
-            keep = np.argsort(-counts)[:max_len]
-            ids, counts = ids[keep], counts[keep]
+        ids, counts = truncate_doc(ids, counts, max_len)
         wid[i, : len(ids)] = ids
         cnt[i, : len(ids)] = counts
     return MiniBatch(word_ids=jnp.asarray(wid), counts=jnp.asarray(cnt))
+
+
+def slab_refill(docs: Sequence[Doc], slot_ids: Sequence[int], *,
+                capacity: int, slot_len: int, pad_slot: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pack pending documents into fixed-size slab refill buffers
+    (DESIGN.md §16 — the host half of ``core.infer.make_slab_step``).
+
+    Takes up to ``min(len(docs), len(slot_ids), capacity)`` documents and
+    lays each into one row of a [capacity, slot_len] (word_rows, counts)
+    buffer pair, truncating over-long documents via ``truncate_doc``.
+    Unused refill lanes carry ``pad_slot`` as their slot index (the step's
+    scatter drops them — ``pad_slot`` must be the slab's slot count).
+
+    Returns ``(word_rows [capacity, slot_len] int32,
+    counts [capacity, slot_len] float32, slots [capacity] int32, taken)``
+    where ``taken`` is how many documents were actually packed — the
+    caller pops exactly that many from its queue and marks that many slot
+    ids occupied.
+    """
+    n = min(len(docs), len(slot_ids), capacity)
+    wid = np.zeros((capacity, slot_len), np.int32)
+    cnt = np.zeros((capacity, slot_len), np.float32)
+    slot = np.full((capacity,), int(pad_slot), np.int32)
+    for i in range(n):
+        ids, counts = truncate_doc(np.asarray(docs[i][0]),
+                                   np.asarray(docs[i][1], np.float32),
+                                   slot_len)
+        wid[i, : len(ids)] = ids
+        cnt[i, : len(ids)] = counts
+        slot[i] = int(slot_ids[i])
+    return wid, cnt, slot, n
 
 
 def shard_docs(docs: Sequence[Doc], num_shards: int) -> List[List[Doc]]:

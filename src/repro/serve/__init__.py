@@ -1,9 +1,18 @@
-"""Production serving layer for trained LDA models (DESIGN.md §11).
+"""Production serving layer for trained LDA models (DESIGN.md §11, §16).
 
-`engine.FoldInEngine` wraps the shared fixed-phi inference body
-(`core.infer.fold_in_tokens`) in a request queue with shape-bucketed
-admission, AOT-warmed jitted fold-in steps, asynchronous dispatch and
-per-request latency / communication-byte accounting.
+`engine.SlabEngine` is the continuous-batching runtime (§16): a fixed
+in-flight slab with mid-flight admission, per-tenant theta caching and an
+OOV retraining trigger.  `engine.FoldInEngine` is the bucket-ladder
+baseline (§11): shape-bucketed admission with AOT-warmed jitted fold-in
+steps.  Both wrap the shared fixed-phi inference bodies in `core.infer`
+with asynchronous dispatch and per-request latency / communication-byte
+accounting.
 """
 
-from repro.serve.engine import FoldInEngine, ServeResult  # noqa: F401
+from repro.serve.cache import ThetaCache, doc_digest  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    FoldInEngine,
+    OOVTrigger,
+    ServeResult,
+    SlabEngine,
+)

@@ -338,3 +338,47 @@ def test_engine_swap_phi_versions_and_occupancy():
     eng.submit((np.asarray([1000]), np.ones(1, np.float32)))
     (r,) = eng.drain()
     assert r.oov_tokens == 1.0 and r.phi_version == 1
+
+
+def test_slab_engine_swap_phi_versions_and_vocab_remap():
+    """The same fenced compaction hot-swap against the continuous-batching
+    slab (DESIGN.md §16): queued work pumps dry under the admitting
+    generation, results carry the generation stamp, a remapped vocab
+    routes evicted keys to the OOV row, and the single slab step shape
+    never recompiles on a same-capacity swap."""
+    from repro.serve import SlabEngine
+
+    rng = np.random.default_rng(0)
+    cap, lw = 64, 40
+    phi = jnp.asarray(rng.gamma(1.0, size=(cap, K)).astype(np.float32))
+    cfg = LDAConfig(vocab_size=cap, num_topics=K)
+    v0 = VocabMap(list(range(1000, 1000 + lw)))
+    eng = SlabEngine(phi, cfg, slots=4, slot_len=16, fold_iters=6,
+                     live_words=lw, vocab=v0)
+    assert eng.phi_version == 0
+    np.testing.assert_allclose(eng.stats()["occupancy"], lw / cap)
+
+    eng.submit((np.asarray([1000, 1001]), np.ones(2, np.float32)))
+
+    keep = np.ones(lw, bool)
+    keep[::4] = False
+    v1 = VocabMap(list(range(1000, 1000 + lw)))
+    remap = v1.compact(keep)
+    s0 = LDATrainState(phi_acc=phi, m=jnp.asarray(0, jnp.int32),
+                       rng=jax.random.PRNGKey(0))
+    phi1 = lifecycle.apply_row_remap(s0, remap).phi_acc
+    eng.swap_phi(phi1, live_words=len(v1), vocab=v1)
+
+    assert eng.phi_version == 1
+    assert eng.live_words == len(v1)
+    assert eng.in_flight() == 0          # the swap pumped the slab dry
+    eng.submit((np.asarray([1001, 1002]), np.ones(2, np.float32)))
+    res = sorted(eng.drain() + eng.poll(), key=lambda r: r.req_id)
+    assert [r.phi_version for r in res] == [0, 1]
+    for r in res:
+        assert np.all(np.isfinite(r.theta))
+    # one slab geometry, one compile — swaps never add shapes
+    assert eng.stats()["compiles"] == 1
+    eng.submit((np.asarray([1000]), np.ones(1, np.float32)))
+    (r,) = eng.drain()
+    assert r.oov_tokens == 1.0 and r.phi_version == 1

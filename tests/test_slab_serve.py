@@ -1,0 +1,306 @@
+"""Continuous-batching slab serving (DESIGN.md §16): in-flight admission,
+theta parity with run-to-convergence, per-retired-doc byte billing,
+hot-swap fencing under queued load, and the per-tenant theta cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import LDAConfig
+from repro.data.batching import slab_refill, truncate_doc
+from repro.data.synthetic import lda_corpus
+from repro.serve import OOVTrigger, SlabEngine, ThetaCache, doc_digest
+
+W, K = 200, 16
+CFG = LDAConfig(vocab_size=W, num_topics=K, alpha=0.1, beta=0.01)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    docs, _, phi_true = lda_corpus(0, 64, W, K, doc_len_mean=30)
+    # converged stand-in statistic: the true topics at plausible counts
+    phi_acc = jnp.asarray(phi_true.T) * 200.0
+    return docs, phi_acc
+
+
+def _mixed_docs(seed, n, w_hi=W, lo=4, hi=90):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        L = int(rng.integers(lo, hi))
+        ids = rng.choice(w_hi, size=min(L, w_hi), replace=False)
+        cnt = np.maximum(rng.poisson(1.5, len(ids)), 1)
+        out.append((ids.astype(np.int32), cnt.astype(np.float32)))
+    return out
+
+
+# ------------------------------------------------------------- host side
+
+
+def test_slab_refill_packs_truncates_and_pads():
+    docs = [(np.arange(3, dtype=np.int32), np.ones(3, np.float32)),
+            (np.arange(10, dtype=np.int32),
+             np.arange(10, dtype=np.float32))]
+    wid, cnt, slot, taken = slab_refill(docs, [5, 2], capacity=4,
+                                        slot_len=8, pad_slot=16)
+    assert wid.shape == (4, 8) and cnt.shape == (4, 8)
+    assert taken == 2
+    assert slot.tolist() == [5, 2, 16, 16]      # unused lanes -> pad_slot
+    assert cnt[0, :3].tolist() == [1, 1, 1] and cnt[0, 3:].sum() == 0
+    # over-long doc keeps its top-count 8 of 10 tokens
+    keep_ids, keep_cnt = truncate_doc(docs[1][0], docs[1][1], 8)
+    assert sorted(keep_ids.tolist()) == sorted(wid[1].tolist())
+    assert cnt[1].sum() == keep_cnt.sum() == float(np.arange(2, 10).sum())
+
+
+def test_oov_trigger_emits_hot_batches():
+    tr = OOVTrigger(rate_threshold=0.1, min_docs=3, batch_keys=2)
+    tr.observe([900, 901], [5.0, 1.0], 10.0)
+    tr.observe([900], [4.0], 10.0)
+    assert tr.emitted == 0                      # min_docs not reached
+    tr.observe([], [], 10.0)
+    assert tr.emitted == 1                      # 10/30 tokens OOV >= 0.1
+    (batch,) = tr.take()
+    keys, cnts = batch[0]
+    assert keys.tolist() == [900, 901]          # hottest first, capped at 2
+    assert cnts.tolist() == [9.0, 1.0]
+    assert tr.take() == []                      # window reset
+    tr.observe([5], [0.1], 100.0)
+    tr.observe([5], [0.1], 100.0)
+    tr.observe([5], [0.1], 100.0)
+    assert tr.emitted == 1                      # under threshold: no emit
+
+
+# ------------------------------------------------------- the slab engine
+
+
+def test_slab_serves_all_with_one_compile_and_refill(trained):
+    """More documents than slots: retirement/refill keeps ONE compiled
+    step while every request is served with a normalized theta."""
+    _, phi_acc = trained
+    docs = _mixed_docs(3, 40)
+    eng = SlabEngine(phi_acc, CFG, slots=8, slot_len=96, seed=1)
+    ids = [eng.submit(d) for d in docs]
+    res = eng.drain()
+    assert sorted(r.req_id for r in res) == sorted(ids)
+    th = np.stack([r.theta for r in res])
+    np.testing.assert_allclose(th.sum(axis=1), 1.0, atol=1e-4)
+    s = eng.stats()
+    assert s["compiles"] == 1
+    assert s["served"] == len(docs)
+    assert 0 < s["slot_occupancy"] <= 1.0
+    assert s["steps"] > len(docs) // 8          # refilled mid-flight
+
+
+def test_slab_truncates_overlong_documents(trained):
+    _, phi_acc = trained
+    eng = SlabEngine(phi_acc, CFG, slots=4, slot_len=16, seed=1)
+    long_doc = (np.arange(64, dtype=np.int32),
+                np.linspace(1, 4, 64).astype(np.float32))
+    eng.submit(long_doc)
+    (r,) = eng.drain()
+    assert r.iters > 0 and abs(float(np.sum(r.theta)) - 1.0) < 1e-4
+
+
+def test_slab_theta_within_tol_of_run_to_convergence(trained):
+    """The §16 serving guarantee, pinned: a slot that retires on the
+    geometric-tail residual bound serves a theta within residual_tol
+    (per-doc L1) of folding the same document to convergence."""
+    _, phi_acc = trained
+    docs, _, _ = lda_corpus(7, 6, W, K, doc_len_mean=30)
+    tol = 2e-2
+    kw = dict(slots=8, slot_len=64, fold_iters=100, seed=5)
+    early = SlabEngine(phi_acc, CFG, residual_tol=tol, **kw)
+    full = SlabEngine(phi_acc, CFG, residual_tol=1e-9, **kw)
+    for d in docs:                 # <= slots docs: identical per-step keys
+        early.submit(d)
+        full.submit(d)
+    re = {r.req_id: r for r in early.drain()}
+    rf = {r.req_id: r for r in full.drain()}
+    for rid in re:
+        assert re[rid].iters < rf[rid].iters
+        l1 = float(np.abs(re[rid].theta - rf[rid].theta).sum())
+        assert l1 <= tol, (rid, l1)
+
+
+def test_slab_swap_under_queued_load_versions_and_no_torn_phi(trained):
+    """Satellite: swap_phi with requests queued AND in flight.  Every
+    pre-swap request retires under the admitting generation's stamp and
+    phi; post-swap submissions carry the new stamp.  No request is lost
+    or served twice."""
+    _, phi_acc = trained
+    docs = _mixed_docs(11, 24)
+    eng = SlabEngine(phi_acc, CFG, slots=4, slot_len=96, seed=2)
+    pre = [eng.submit(d) for d in docs[:16]]
+    eng.step()                       # some in flight, some still queued
+    eng.step()
+    assert eng.in_flight() > 0
+    phi2 = np.asarray(phi_acc) * 0.5 + 1.0
+    eng.swap_phi(phi2)
+    assert eng.in_flight() == 0      # fence: pumped dry before install
+    post = [eng.submit(d) for d in docs[16:]]
+    res = {r.req_id: r for r in eng.drain() + eng.poll()}
+    assert sorted(res) == sorted(pre + post)
+    assert all(res[i].phi_version == 0 for i in pre)
+    assert all(res[i].phi_version == 1 for i in post)
+    # same-capacity swap reuses the compiled step
+    assert eng.stats()["compiles"] == 1
+
+
+def test_slab_sharded_billing_per_retired_document(trained):
+    """Satellite: requests share a slab step, so sync bytes are billed
+    per retired document (its own iteration count), not per batch —
+    and the sharded slab serves the same theta as the unsharded one."""
+    _, phi_acc = trained
+    docs, _, _ = lda_corpus(9, 6, W, K, doc_len_mean=25)
+    kw = dict(slots=8, slot_len=48, fold_iters=60, residual_tol=1e-2,
+              seed=3)
+    solo = SlabEngine(phi_acc, CFG, **kw)
+    shard = SlabEngine(phi_acc, CFG, topic_shards=4, **kw)
+    for d in docs:
+        solo.submit(d)
+        shard.submit(d)
+    rs = {r.req_id: r for r in solo.drain()}
+    rh = {r.req_id: r for r in shard.drain()}
+    for rid in rs:
+        np.testing.assert_allclose(rs[rid].theta, rh[rid].theta,
+                                   atol=1e-5)
+        assert rs[rid].comm_bytes == 0.0          # local reducer: no wire
+        assert rh[rid].comm_bytes > 0.0
+    # per-document bills scale with the document's OWN iters
+    by_iters = sorted((r.iters, r.comm_bytes) for r in rh.values())
+    for (i1, b1), (i2, b2) in zip(by_iters, by_iters[1:]):
+        if i2 > i1:
+            assert b2 > b1
+    # totals reconcile: stats' per-request mean matches the results
+    s = shard.stats()
+    total = sum(r.comm_bytes for r in rh.values())
+    assert s["per_request_bytes"] == pytest.approx(total / len(rh))
+
+
+# ------------------------------------------------------------ theta cache
+
+
+def test_theta_cache_hit_matches_fold_in_and_version_invalidates(trained):
+    """Satellite: a cache hit returns the exact theta the fold-in
+    produced; a phi_version bump turns hits into misses (no stale theta
+    is ever served across a swap)."""
+    _, phi_acc = trained
+    doc = _mixed_docs(21, 1)[0]
+    eng = SlabEngine(phi_acc, CFG, slots=4, slot_len=96, seed=4,
+                     theta_cache=8)
+    eng.submit(doc, tenant="a")
+    (cold,) = eng.drain()
+    assert not cold.cached
+    eng.submit(doc, tenant="a")
+    (hit,) = eng.drain()
+    assert hit.cached and hit.iters == 0
+    np.testing.assert_array_equal(hit.theta, cold.theta)
+    # another tenant's identical content is a separate key
+    eng.submit(doc, tenant="b")
+    (other,) = eng.drain()
+    assert not other.cached
+    # swap invalidates: same submission re-folds under the new phi
+    eng.swap_phi(np.asarray(phi_acc)[:, ::-1].copy())
+    eng.submit(doc, tenant="a")
+    (after,) = eng.drain()
+    assert not after.cached and after.phi_version == 1
+    assert float(np.abs(after.theta - cold.theta).sum()) > 1e-3
+    st = eng.cache.stats()
+    assert st["stale_evictions"] >= 1
+
+
+def test_theta_cache_warm_mode_fewer_sweeps_within_tol(trained):
+    """Satellite: warm mode still folds in (fresh phi-consistent theta)
+    but restarts from the cached posterior — fewer sweeps, same answer
+    within the residual tolerance."""
+    _, phi_acc = trained
+    docs, _, _ = lda_corpus(13, 4, W, K, doc_len_mean=30)
+    tol = 1e-2
+    eng = SlabEngine(phi_acc, CFG, slots=4, slot_len=64, seed=6,
+                     residual_tol=tol, fold_iters=100,
+                     theta_cache=ThetaCache(16), cache_mode="warm")
+    for d in docs:
+        eng.submit(d)
+    cold = {r.req_id: r for r in eng.drain()}
+    ids = {}
+    for d in docs:
+        ids[eng.submit(d)] = d
+    warm = {r.req_id: r for r in eng.drain()}
+    cold_list = sorted(cold.values(), key=lambda r: r.req_id)
+    warm_list = sorted(warm.values(), key=lambda r: r.req_id)
+    assert all(not r.cached for r in warm_list)   # warm mode still folds
+    for c, w in zip(cold_list, warm_list):
+        assert w.iters <= c.iters
+        assert float(np.abs(w.theta - c.theta).sum()) <= 2 * tol
+    s = eng.stats()
+    assert s["warm_starts"] == len(docs)
+    assert s["warm_fold_iters"] < s["cold_fold_iters"]
+
+
+def test_doc_digest_is_content_keyed():
+    a = (np.array([1, 2, 3]), np.array([1.0, 2.0, 1.0]))
+    assert doc_digest(*a) == doc_digest(np.array([1, 2, 3]),
+                                        np.array([1.0, 2.0, 1.0]))
+    assert doc_digest(*a) != doc_digest(np.array([1, 2, 4]),
+                                        np.array([1.0, 2.0, 1.0]))
+    assert doc_digest(*a) != doc_digest(np.array([1, 2, 3]),
+                                        np.array([1.0, 2.0, 2.0]))
+
+
+# ---------------------------------------------------- serve -> train loop
+
+
+def test_slab_oov_admission_feeds_retrain_batches(trained):
+    """OOV tokens route through the guard row (finite theta, counted in
+    oov_rate) and the trigger turns sustained OOV pressure into
+    admission batches of raw external keys."""
+    _, phi_acc = trained
+    eng = SlabEngine(phi_acc, CFG, slots=4, slot_len=32, seed=8,
+                     oov_trigger=OOVTrigger(rate_threshold=0.05,
+                                            min_docs=2, batch_keys=4))
+    hot = np.array([W + 7, W + 9], np.int32)
+    for _ in range(4):
+        eng.submit((np.concatenate([hot, np.arange(5, dtype=np.int32)]),
+                    np.ones(7, np.float32)))
+    res = eng.drain()
+    assert all(r.oov_tokens == 2.0 for r in res)
+    assert all(np.isfinite(r.theta).all() for r in res)
+    assert eng.stats()["oov_rate"] == pytest.approx(2 / 7)
+    batches = eng.take_retrain_batches()
+    assert batches and eng.stats()["retrain_batches"] >= 1
+    keys, cnts = batches[0][0]
+    assert set(keys.tolist()) == {W + 7, W + 9}
+
+
+# ------------------------------------------------------------ CLI report
+
+
+def test_serve_cli_slab_report_json(tmp_path, trained):
+    """Satellite: --report-json writes the latency/goodput/oov report;
+    the slab path with open-loop load, swap and SLO check end-to-end."""
+    import json
+
+    from repro.dist import checkpoint as ckpt
+    from repro.launch import serve as serve_mod
+
+    _, phi_acc = trained
+    ckpt.save(str(tmp_path), 1,
+              {"state": {"phi_acc": phi_acc,
+                         "m": jnp.asarray(1, jnp.int32),
+                         "rng": jax.random.PRNGKey(0)}},
+              extra={"next_m": 1, "run": {"vocab": W, "topics": K}})
+    rep = tmp_path / "report.json"
+    serve_mod.main(["--mode", "lda", "--ckpt-dir", str(tmp_path),
+                    "--requests", "24", "--slots", "8",
+                    "--qps", "400", "--swap-at", "0.5",
+                    "--slo-ms", "5000", "--theta-cache", "16",
+                    "--report-json", str(rep)])
+    r = json.loads(rep.read_text())
+    assert r["admission"] == "slab"
+    assert r["requests"] == 24
+    assert r["slo_met"] is True
+    assert r["stats"]["served"] == 24
+    assert r["stats"]["phi_version"] == 1
+    assert r["goodput_docs_per_s"] > 0
