@@ -1144,11 +1144,172 @@ def bench_powerlaw(quick=False):
 
 
 # ------------------------------------------------------------------
+# this repo's chaos-hardened runtime (ISSUE 10, DESIGN.md §17).
+# train: a seeded fault schedule (drops + duplicate deliveries + one
+# server crash/restart) over the PS backend at S=0 must commit phi
+# BIT-EXACT with the clean PS run — sequence-number dedup applies each
+# delta exactly once and the replay fence restores version order — so
+# perplexity holds trivially (gated <= 1.02x for the artifact), and
+# the audit logs must show recovery actually completed.  serve: a
+# SlabEngine burst against an admission SLO sheds typed and bounded
+# (0 < shed_frac <= 0.95) while goodput stays positive, and a
+# poisoned request is quarantined without souring the slab.
+# ------------------------------------------------------------------
+
+def bench_fault(quick=False):
+    from repro.core.types import LDAConfig
+    from repro.data.synthetic import lda_corpus
+    from repro.launch.lda_train import default_args, train_loop
+    from repro.serve import Shed, SlabEngine
+
+    common = dict(minibatches=8 if quick else 16, docs_per_batch=32,
+                  shards=2, vocab=2000 if quick else 4000,
+                  topics=16, lambda_k=8, inner_iters=8, tol=1e-9,
+                  log_every=0, eval_every=0,
+                  doc_len_means="12,24,40", len_buckets="16,32,48",
+                  ps_servers=4, seed=0)
+    chaos_kw = dict(chaos_seed=7, chaos_drop=0.25, chaos_dup=0.25,
+                    chaos_crash="1@6", chaos_restart_after=2)
+    out = {"config": dict(common, **chaos_kw)}
+    gates = []
+
+    ar = train_loop(default_args(**common, backend="sim"))
+    clean = train_loop(default_args(**common, backend="ps", staleness=0))
+    chaos = train_loop(default_args(**common, backend="ps", staleness=0,
+                                    **chaos_kw))
+
+    bitexact = bool(np.array_equal(np.asarray(chaos["phi_acc"]),
+                                   np.asarray(clean["phi_acc"])))
+    ppl_x = chaos["ppl"] / max(clean["ppl"], 1e-9)
+    drift = max(abs(a - b) for a, b in zip(clean["mean_r"], ar["mean_r"]))
+    ev = chaos["chaos_events"]
+    recovered = sum(e["event"] == "recovered"
+                    for e in chaos["ps_recovery_log"])
+    out["train"] = {
+        "bitexact_phi_vs_clean": bitexact,
+        "ppl_clean": clean["ppl"], "ppl_chaos": chaos["ppl"],
+        "ppl_ratio": ppl_x,
+        "mean_r_drift_s0_vs_allreduce": drift,
+        "chaos_events": ev,
+        "ps_retries": chaos["ps_retries"],
+        "ps_replayed_pushes": chaos["ps_replayed_pushes"],
+        "ps_recoveries": chaos["ps_recoveries"],
+        "ps_duplicates_dropped": chaos["ps_duplicates_dropped"],
+        "ps_retry_wire_bytes": chaos["ps_retry_wire_bytes"],
+        "ps_recovery_log": chaos["ps_recovery_log"],
+        "wire_bytes_clean": clean["ps_wire_bytes"],
+        "wire_bytes_chaos": chaos["ps_wire_bytes"],
+    }
+    _emit("fault/train/bitexact_phi", bitexact,
+          "acceptance: chaos phi == clean PS phi at S=0")
+    _emit("fault/train/ppl_ratio", f"{ppl_x:.4f}",
+          f"chaos {chaos['ppl']:.2f} vs clean {clean['ppl']:.2f}; "
+          "acceptance <= 1.02")
+    _emit("fault/train/recoveries", recovered,
+          f"events={ev} retries={chaos['ps_retries']} "
+          f"replayed={chaos['ps_replayed_pushes']} "
+          f"dups_dropped={chaos['ps_duplicates_dropped']}")
+    _emit("fault/train/s0_drift_vs_allreduce", f"{drift:.2e}",
+          "acceptance <= 1e-6")
+    gates.append(("chaos phi not bit-exact with the clean PS run",
+                  bitexact))
+    gates.append((f"chaos ppl ratio {ppl_x:.4f} > 1.02", ppl_x <= 1.02))
+    gates.append((f"recovery never completed: "
+                  f"log={chaos['ps_recovery_log']}", recovered >= 1))
+    gates.append((f"fault schedule too tame to gate on: events={ev} "
+                  f"dups_dropped={chaos['ps_duplicates_dropped']}",
+                  ev.get("drop", 0) > 0 and ev.get("crash", 0) == 1
+                  and chaos["ps_duplicates_dropped"] > 0))
+    gates.append((f"clean S=0 drift {drift:.2e} > 1e-6 vs allreduce",
+                  drift <= 1e-6))
+
+    # ---- serve: SLO-aware admission shedding + poison quarantine ----
+    # slot_len 32 with 24-token docs -> 1 doc/slot; tenure = fold/sweeps
+    # = 8 steps; refill_cap = slots//4 = 2 -> dispatch rate = 1 doc/step.
+    # Phase A runs MATCHED load (1 submit per step, the drain rate) long
+    # enough for the step EMA to converge past the warm-up compile
+    # spikes; the admission SLO is then pinned at 1.5x the empty-queue
+    # wait estimate, so the 4x-overload phase B self-regulates: the
+    # queue hovers at the boundary, ~3/4 of the excess sheds, the rest
+    # is served within the estimate — bounded degradation, not collapse.
+    K, W = 32, 500
+    cfg = LDAConfig(vocab_size=W, num_topics=K)
+    _, _, phi_true = lda_corpus(100, 8, W, K, doc_len_mean=24)
+    phi_acc = jnp.asarray(phi_true.T) * 200.0
+    rng = np.random.default_rng(3)
+    n_req = 64 if quick else 192
+
+    def doc():
+        ids = rng.choice(W, size=24, replace=False)
+        return ids.astype(np.int32), np.ones(24, np.float32)
+
+    # residual_tol pinned tiny so every doc runs its full fold tenure —
+    # early residual exits would drain the slab faster than the burst
+    # arrives and the queue (hence the shed boundary) would never build
+    eng = SlabEngine(phi_acc, cfg, slots=8, slot_len=32,
+                     sweeps_per_step=2, fold_iters=16, residual_tol=1e-9,
+                     seed=1, admission_slo_s=10.0)
+    for _ in range(40):                     # phase A: matched load
+        eng.submit(doc())
+        eng.step()
+    ema = eng.stats()["step_ema_s"]
+    tenure = max(1.0, eng.fold_iters / eng.sweeps_per_step)
+    eng.admission_slo_s = ema * tenure * 1.5
+
+    sheds = []
+    for i in range(n_req):                  # phase B: 4x overload
+        res = eng.submit(doc())
+        if isinstance(res, Shed):
+            sheds.append(res)
+        if i % 4 == 3:
+            eng.step()
+    bad = eng.submit((np.arange(4, dtype=np.int32),
+                      np.array([1.0, np.inf, 1.0, np.nan], np.float32)))
+    done = eng.drain()
+    st = eng.stats()
+    poison = [r for r in done if r.req_id == bad]
+    good = [r for r in done if r.error is None]
+    out["serve"] = {
+        "requests": n_req, "admission_slo_s": eng.admission_slo_s,
+        "step_ema_s": ema, "shed": st["shed"],
+        "shed_frac": st["shed_frac"], "served_ok": len(good),
+        "quarantined": st["quarantined"],
+        "shed_est_wait_p50_s": (float(np.median(
+            [s.est_wait_s for s in sheds])) if sheds else 0.0),
+    }
+    _emit("fault/serve/shed_frac", f"{st['shed_frac']:.2f}",
+          f"{st['shed']} shed / {len(good)} served ok; "
+          "acceptance: 0 < frac <= 0.95")
+    _emit("fault/serve/quarantined", st["quarantined"],
+          "poisoned request isolated, slab stays healthy")
+    gates.append((f"no sheds under {n_req}-deep overload burst",
+                  st["shed"] > 0))
+    gates.append((f"shed_frac {st['shed_frac']:.2f} outside (0, 0.95] — "
+                  "shedding collapsed to all-or-nothing",
+                  0 < st["shed_frac"] <= 0.95))
+    gates.append(("overloaded slab served nothing cleanly",
+                  len(good) > 0))
+    gates.append((f"poison not quarantined: {poison}",
+                  len(poison) == 1
+                  and poison[0].error == "nonfinite_input"
+                  and st["quarantined"] >= 1))
+    gates.append(("typed Shed lost its diagnostics",
+                  all(s.est_wait_s > s.slo_s and s.queue_depth >= 0
+                      for s in sheds)))
+
+    # artifact first, gates second: a failed gate still leaves the
+    # numbers on disk for the CI artifact
+    _save("BENCH_fault_quick" if quick else "BENCH_fault", out)
+    failures = [msg for msg, ok in gates if not ok]
+    assert not failures, (failures, out)
+
+
+# ------------------------------------------------------------------
 
 ALL = [bench_comm_volume, bench_comm, bench_lambda_sweep, bench_accuracy,
        bench_speed, bench_inner_loop, bench_e2e, bench_serve,
-       bench_serve_sustained, bench_vocab_growth, bench_drift,
-       bench_scalability, bench_memory, bench_complexity,
+       bench_serve_sustained, bench_fault, bench_vocab_growth,
+       bench_drift, bench_scalability, bench_memory, bench_complexity,
        bench_convergence, bench_powerlaw]
 
 

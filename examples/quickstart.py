@@ -166,6 +166,26 @@ def main():
               f"{touched_power_sync_bytes(P, Pk, touched):,} bytes/iter vs "
               f"allreduce {power_sync_bytes(P, Pk, 400):,}")
 
+    # ---- chaos-hardened runtime (DESIGN.md §17) ------------------------
+    # The PS backend survives a hostile network: a seed-replayable
+    # FaultPlan drops/duplicates/delays ops and crashes one server
+    # mid-stream; retries + sequence-number dedup + version-ordered
+    # retained-delta replay keep S=0 training BIT-EXACT with the clean
+    # run (BENCH_fault gates it):
+    #
+    #   python -m repro.launch.lda_train --backend ps --staleness 0 \
+    #       --chaos-seed 7 --chaos-drop 0.25 --chaos-dup 0.25 \
+    #       --chaos-crash 1@6
+    #
+    # every fault is a pure function of (seed, op kind, op index):
+    from repro.dist.faults import FaultPlan
+
+    plan = FaultPlan(seed=7, drop_push=0.25, dup_push=0.25)
+    fates = [plan.decide("push", i) for i in range(200)]
+    print(f"[chaos] seed 7, 200 push ops: "
+          f"{sum(f.drop for f in fates)} dropped, "
+          f"{sum(f.duplicate for f in fates)} duplicated — same every run")
+
     # ---- stream lifecycle (DESIGN.md §14) ------------------------------
     # A drifting stream must also FORGET: Robbins-Monro decay fades stale
     # phi mass, checkpoint-fenced compaction reclaims rows that went both

@@ -112,6 +112,19 @@ class CommMeter:
             self._live[tid] = entry
         entry[1].append(sig)
 
+    def record_host(self, phase: str, nbytes: int,
+                    w_rows: int = 0) -> None:
+        """Register host-side wire traffic that never flows through a
+        traced psum — parameter-server retry re-issues and
+        crash-recovery replays (DESIGN.md §17).  Accumulates per call
+        (eager path), under its own phase (``ps.retry.push``,
+        ``ps.retry.pull``, ``ps.replay``) so clean-run Eq. 5/6 phases
+        stay untouched and the overhead is separately auditable."""
+        nbytes = int(nbytes)
+        sig = (phase, (), "host", nbytes, int(w_rows))
+        self.calls.append(f"{phase}:host:{nbytes}")
+        self._eager.append(sig)
+
     def _logs(self) -> List[Tuple[Tuple, ...]]:
         return self._archived + [tuple(log) for _, log in self._live.values()]
 

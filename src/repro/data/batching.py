@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from typing import Callable, Iterator, List, Sequence, Tuple
 
 import numpy as np
@@ -148,6 +149,7 @@ def prefetched(gen_factory: Callable[[], Iterator], prefetch: int) -> Iterator:
 
     t = threading.Thread(target=worker, daemon=True, name="repro-prefetch")
     t.start()
+    raised = False
     try:
         while True:
             item = q.get()
@@ -155,12 +157,27 @@ def prefetched(gen_factory: Callable[[], Iterator], prefetch: int) -> Iterator:
                 break
             yield item
         if err:
+            raised = True
             raise err[0]
     finally:
         # normal exhaustion, consumer exception, or GeneratorExit: the
         # worker always observes `stop` within one put poll and terminates.
         stop.set()
         t.join(timeout=10.0)
+        if t.is_alive():
+            # a silent leak otherwise: the daemon thread would park in
+            # gen_factory() past this generator's lifetime
+            warnings.warn(
+                "prefetch worker 'repro-prefetch' failed to stop within "
+                "10s of shutdown and was leaked (stuck in the source "
+                "generator?)", RuntimeWarning, stacklevel=2)
+        if err and not raised:
+            # the consumer is shutting down (GeneratorExit / early close),
+            # so raising would be swallowed — at least make it loud
+            warnings.warn(
+                f"prefetch worker died with {err[0]!r}; the exception was "
+                f"masked by consumer shutdown", RuntimeWarning,
+                stacklevel=2)
 
 
 def minibatch_stream(

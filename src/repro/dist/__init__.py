@@ -9,7 +9,11 @@ batch / cache pytrees to PartitionSpecs for the production meshes
 non-divisible sharded axis (DESIGN.md §6).  `paramserver` is the row-sharded
 push/pull sync backend of ``launch.lda_train --backend ps``
 (DESIGN.md §15): touched-row delta pushes, prefetched slice pulls, bounded
-staleness.
+staleness.  `faults` makes failure a reproducible fixture (DESIGN.md §17):
+a seed-replayable ``FaultPlan`` + ``ChaosTransport`` inject drops,
+duplicates, delays, partitions, and scheduled server crash/restart into
+any transport; the hardened client/server survive them via sequence-number
+idempotence, backoff retry, and retained-delta replay.
 """
 
-from repro.dist import checkpoint, paramserver, sharding  # noqa: F401
+from repro.dist import checkpoint, faults, paramserver, sharding  # noqa: F401

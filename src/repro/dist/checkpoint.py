@@ -9,10 +9,17 @@ Layout on disk (one directory per step):
 
 Writes are atomic: everything lands in a ``.tmp-<step>`` staging directory
 that is ``os.rename``d into place — a crash mid-save can never leave a
-half-written checkpoint that ``latest_step`` would pick up.  Restore is
-template-driven: the caller supplies a pytree of like-shaped arrays (or
-ShapeDtypeStructs) and gets the same structure back; any mismatch is a
-``ValueError`` rather than a silently reshaped parameter.
+half-written checkpoint that ``latest_step`` would pick up.  Against
+corruption that atomic rename can't rule out (a torn write below the
+filesystem, bit rot, an operator truncating a file), ``restore_latest``
+verifies integrity newest-first — manifest parses, data.npz opens, every
+leaf's byte count matches its manifest shape × dtype — and falls back to
+the next retained step with a loud warning instead of crashing the
+resume (DESIGN.md §17).  Restore is template-driven: the caller supplies
+a pytree of like-shaped arrays (or ShapeDtypeStructs) and gets the same
+structure back; any mismatch is a ``ValueError`` rather than a silently
+reshaped parameter (a template mismatch is a caller bug, never a
+fall-back).
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -131,18 +139,60 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def verify_step(directory: str, step: int) -> Optional[str]:
+    """Integrity-check one retained checkpoint WITHOUT a template.
+
+    Returns None when the step is intact, else a human-readable
+    description of the corruption: manifest missing / unparseable,
+    data.npz missing / not a zip, a leaf entry absent, or a leaf whose
+    byte count disagrees with its manifest shape × dtype (the signature
+    of a torn or truncated write).  Cheap relative to a restore — bytes
+    are length-checked, not decoded into arrays.
+    """
+    path = _step_dir(directory, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "data.npz")) as data:
+            for i, rec in enumerate(manifest["leaves"]):
+                want = (int(np.prod(rec["shape"])) if rec["shape"] else 1) \
+                    * np.dtype(rec["dtype"]).itemsize
+                if f"leaf_{i}" not in data:
+                    return f"data.npz is missing leaf_{i} ({rec['key']})"
+                got = int(data[f"leaf_{i}"].nbytes)
+                if got != want:
+                    return (f"leaf_{i} ({rec['key']}) holds {got} bytes, "
+                            f"manifest says {want} — torn write?")
+    except Exception as e:  # noqa: BLE001 — any decode failure IS the answer
+        return f"{type(e).__name__}: {e}"
+    return None
+
+
 def peek_extra(directory: str, step: Optional[int] = None
                ) -> Optional[Tuple[Dict[str, Any], int]]:
     """Read only the manifest `extra` dict (no array bytes), or None.
 
     The dynamic-vocabulary driver needs the saved capacity rung BEFORE it
     can build a restore template of the right shape (DESIGN.md §12) —
-    this is the cheap first half of that handshake.
+    this is the cheap first half of that handshake.  Auto-picking
+    (``step=None``) skips a step whose manifest fails to parse — the
+    restore that follows falls back to the same older step, so the two
+    halves of the handshake stay consistent; an explicit `step` raises.
     """
     if step is None:
-        step = latest_step(directory)
-        if step is None:
-            return None
+        for s in sorted(_all_steps(directory), reverse=True):
+            try:
+                with open(os.path.join(_step_dir(directory, s),
+                                       "manifest.json")) as f:
+                    manifest = json.load(f)
+            except Exception as e:  # noqa: BLE001
+                warnings.warn(
+                    f"manifest of {_step_dir(directory, s)} is unreadable "
+                    f"({type(e).__name__}: {e}); peeking the previous "
+                    f"retained step", RuntimeWarning, stacklevel=2)
+                continue
+            return manifest.get("extra", {}), int(manifest["step"])
+        return None
     with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
         manifest = json.load(f)
     return manifest.get("extra", {}), int(manifest["step"])
@@ -161,12 +211,34 @@ def restore_latest(directory: str, template: Dict[str, Any],
     `grow_rows` enables the elastic W-reshard, `cast_dtypes` the dtype
     up/down-cast and `row_remaps` the fenced compaction remap for the
     named leaves (see ``restore``).
+
+    Retained steps are tried newest-first with ``verify_step`` integrity
+    checks: a corrupt newest checkpoint (torn write, truncation, bit rot
+    — the failures atomic rename can't rule out) warns loudly and falls
+    back to the previous retained step instead of crashing the resume.
+    Only corruption falls back; a template mismatch on an INTACT step is
+    a caller bug and still raises (DESIGN.md §17).
     """
-    step = latest_step(directory)
-    if step is None:
-        return None
-    return restore(directory, step, template, shardings, grow_rows=grow_rows,
-                   cast_dtypes=cast_dtypes, row_remaps=row_remaps)
+    skipped = 0
+    for step in sorted(_all_steps(directory), reverse=True):
+        bad = verify_step(directory, step)
+        if bad is not None:
+            warnings.warn(
+                f"checkpoint {_step_dir(directory, step)} is corrupt "
+                f"({bad}); falling back to the previous retained step",
+                RuntimeWarning, stacklevel=2)
+            skipped += 1
+            continue
+        if skipped:
+            warnings.warn(
+                f"resuming from step {step} after skipping {skipped} "
+                f"corrupt newer checkpoint(s) — up to that many save "
+                f"intervals of work will be recomputed",
+                RuntimeWarning, stacklevel=2)
+        return restore(directory, step, template, shardings,
+                       grow_rows=grow_rows, cast_dtypes=cast_dtypes,
+                       row_remaps=row_remaps)
+    return None
 
 
 def restore_phi(directory: str, step: Optional[int] = None,

@@ -60,6 +60,22 @@ import numpy as np
 _ROW_ID_BYTES = 4      # int32 row ids accompany every pushed/pulled slice
 
 
+class TransportError(RuntimeError):
+    """Base class for retryable transport-layer failures: the op did not
+    take effect (or its effect is unknown) and may be safely re-issued —
+    pushes are idempotent under the per-client sequence-number protocol
+    (DESIGN.md §17)."""
+
+
+class ServerUnavailableError(TransportError):
+    """An op addressed a server shard that is currently down."""
+
+    def __init__(self, server: int, detail: str = ""):
+        self.server = int(server)
+        super().__init__(f"server shard {server} is down"
+                         + (f": {detail}" if detail else ""))
+
+
 # --------------------------------------------------------------------------
 # row sharding metadata
 # --------------------------------------------------------------------------
@@ -119,16 +135,37 @@ class ParamServer:
     through ``commit(version)``.  Pulls carry a ``min_version``: the
     caller blocks until at least that many batch pushes have committed —
     the server-side half of the bounded-staleness contract.
+
+    Chaos hardening (DESIGN.md §17): pushes may carry a per-client
+    monotonic ``(client_id, seq)`` tag — a shard applies each tag at most
+    once per shard lifetime, so duplicated or replayed deliveries are
+    idempotent.  ``crash(s)`` loses a shard's in-memory rows and dedup
+    memory; ``restart(s)`` restores the rows from the last server-synced
+    snapshot (``mark_synced()``, the checkpoint-fence handshake) and
+    holds pulls from that shard until a client replays its retained
+    post-fence deltas and calls ``mark_recovered(s)``.
     """
 
     def __init__(self, phi0: np.ndarray, num_servers: int = 1,
-                 version: int = 0):
+                 version: int = 0, pull_timeout: float = 60.0):
         phi0 = np.asarray(phi0, np.float32)
         self.shards = RowShards(phi0.shape[0], num_servers)
         self._phi = phi0.copy()
         self._locks = [threading.Lock() for _ in range(num_servers)]
         self._cv = threading.Condition()
         self._committed = int(version)
+        self.pull_timeout = float(pull_timeout)
+        # -- fault-tolerance state --
+        self._down: set = set()           # crashed shard ids
+        self._replaying: set = set()      # restarted, awaiting delta replay
+        self._applied: List[Dict[str, set]] = [dict()
+                                               for _ in range(num_servers)]
+        # the last server-synced snapshot: stands in for the checkpoint
+        # bytes the fence persisted — what a restarted shard reloads
+        self._sync_phi = phi0.copy()
+        self._sync_version = int(version)
+        self.duplicates_dropped = 0
+        self.recovery_log: List[Dict[str, Any]] = []
 
     @property
     def committed(self) -> int:
@@ -136,14 +173,37 @@ class ParamServer:
             return self._committed
 
     def apply_push(self, server: int, rows: np.ndarray,
-                   deltas: np.ndarray) -> None:
+                   deltas: np.ndarray, client_id: Optional[str] = None,
+                   seq: Optional[int] = None, replay: bool = False) -> bool:
+        """Apply a delta push to one shard; returns False when the
+        ``(client_id, seq)`` tag was already applied (duplicate/replay).
+
+        A shard awaiting replay accepts ONLY replay-tagged pushes: letting
+        an in-flight retry land before the replayed backlog would re-sum
+        the shard's rows in a different order (float addition is not
+        associative) and break the S=0 bit-exactness pin.
+        """
+        with self._cv:
+            if server in self._down:
+                raise ServerUnavailableError(server, "push rejected")
+            if server in self._replaying and not replay:
+                raise ServerUnavailableError(
+                    server, "shard replaying retained deltas; ordinary "
+                            "pushes fenced until recovery")
         lo, hi = self.shards.ranges[server]
         rows = np.asarray(rows, np.int64)
         if rows.size and not ((rows >= lo) & (rows < hi)).all():
             raise ValueError(f"push to server {server} carries rows outside "
                              f"[{lo}, {hi})")
         with self._locks[server]:
+            if client_id is not None and seq is not None:
+                seen = self._applied[server].setdefault(client_id, set())
+                if seq in seen:
+                    self.duplicates_dropped += 1
+                    return False
+                seen.add(seq)
             np.add.at(self._phi, rows, np.asarray(deltas, np.float32))
+        return True
 
     def commit(self, version: int) -> None:
         with self._cv:
@@ -151,23 +211,92 @@ class ParamServer:
             self._cv.notify_all()
 
     def serve_pull(self, server: int, rows: np.ndarray, min_version: int,
-                   timeout: float = 60.0) -> Tuple[np.ndarray, int]:
+                   timeout: Optional[float] = None) -> Tuple[np.ndarray, int]:
+        if timeout is None:
+            timeout = self.pull_timeout
+        lo, hi = self.shards.ranges[server]
         with self._cv:
-            ok = self._cv.wait_for(lambda: self._committed >= min_version,
-                                   timeout=timeout)
+            # ready, OR down (wake to fail fast so the client can back
+            # off + recover instead of burning the whole timeout)
+            ok = self._cv.wait_for(
+                lambda: (server in self._down
+                         or (self._committed >= min_version
+                             and server not in self._replaying)),
+                timeout=timeout)
+            if server in self._down:
+                raise ServerUnavailableError(server, "pull rejected")
             if not ok:
                 raise TimeoutError(
-                    f"pull waited {timeout}s for committed version "
-                    f">= {min_version} (at {self._committed}); a push was "
-                    f"lost or never committed")
+                    f"pull from server shard {server} (rows [{lo}, {hi})) "
+                    f"waited {timeout}s for committed version "
+                    f">= {min_version} (at {self._committed}"
+                    + (", shard awaiting delta replay"
+                       if server in self._replaying else "")
+                    + "); a push was lost or never committed")
             version = self._committed
-        lo, hi = self.shards.ranges[server]
         rows = np.asarray(rows, np.int64)
         if rows.size and not ((rows >= lo) & (rows < hi)).all():
             raise ValueError(f"pull from server {server} asks rows outside "
                              f"[{lo}, {hi})")
         with self._locks[server]:
             return self._phi[rows].copy(), version
+
+    # ---- crash / recovery state machine (DESIGN.md §17) ----
+    def is_up(self, server: int) -> bool:
+        with self._cv:
+            return server not in self._down
+
+    def needs_replay(self) -> frozenset:
+        with self._cv:
+            return frozenset(self._replaying)
+
+    def crash(self, server: int) -> None:
+        """Lose a shard: its rows and its dedup memory are gone (the
+        replica of a real process death).  In-flight ops observe
+        ``ServerUnavailableError``."""
+        lo, hi = self.shards.ranges[server]
+        with self._locks[server]:
+            with self._cv:
+                self._down.add(server)
+                self._cv.notify_all()
+            self._phi[lo:hi] = 0.0
+            self._applied[server] = dict()
+        self.recovery_log.append({"event": "crash", "server": int(server)})
+
+    def restart(self, server: int) -> None:
+        """Bring a crashed shard back: rows reload from the last synced
+        snapshot; the shard then refuses pulls until a client replays
+        its retained post-fence deltas (``mark_recovered``)."""
+        lo, hi = self.shards.ranges[server]
+        with self._locks[server]:
+            self._phi[lo:hi] = self._sync_phi[lo:hi]
+            with self._cv:
+                self._down.discard(server)
+                self._replaying.add(server)
+                self._cv.notify_all()
+        self.recovery_log.append({"event": "restart", "server": int(server),
+                                  "restored_version": self._sync_version})
+
+    def mark_recovered(self, server: int) -> None:
+        with self._cv:
+            self._replaying.discard(server)
+            self._cv.notify_all()
+        self.recovery_log.append({"event": "recovered",
+                                  "server": int(server)})
+
+    def mark_synced(self) -> None:
+        """Checkpoint-fence handshake: the current committed state is now
+        durable — it becomes the restart-recovery base, and clients may
+        trim their retained delta logs (``PSClient.mark_durable``)."""
+        for lock in self._locks:
+            lock.acquire()
+        try:
+            with self._cv:
+                self._sync_version = self._committed
+            self._sync_phi = self._phi.copy()
+        finally:
+            for lock in self._locks:
+                lock.release()
 
     # ---- checkpoint handshake (DESIGN.md §15): the server copy is the
     # authoritative statistic a fence persists / a resume rehydrates.
@@ -211,7 +340,9 @@ class Transport:
         self.pulled_bytes = [0] * num_servers
 
     def push_batch(self, version: int, rows: np.ndarray,
-                   deltas: np.ndarray) -> Future:
+                   deltas: np.ndarray, *, client_id: Optional[str] = None,
+                   seq: Optional[int] = None,
+                   replay: bool = False) -> Future:
         raise NotImplementedError
 
     def pull(self, rows: np.ndarray, min_version: int) -> Future:
@@ -220,6 +351,22 @@ class Transport:
 
     def close(self) -> None:
         pass
+
+    # ---- recovery surface (no-ops for transports without failures) ----
+    def needs_replay(self) -> frozenset:
+        """Shard ids that restarted and await client delta replay."""
+        return frozenset()
+
+    def mark_recovered(self, server: int) -> None:
+        pass
+
+    def crash_server(self, server: int) -> None:
+        raise NotImplementedError(f"{type(self).__name__} cannot inject "
+                                  "server crashes")
+
+    def restart_server(self, server: int) -> None:
+        raise NotImplementedError(f"{type(self).__name__} cannot restart "
+                                  "servers")
 
     # ---- shared accounting ----
     def _bill(self, counter: List[int], server: int, n_rows: int,
@@ -266,17 +413,25 @@ class SimTransport(Transport):
             return values.astype(self.wire_dtype).astype(np.float32)
         return np.asarray(values, np.float32)
 
-    def _do_push(self, version, by_server, deltas, k):
+    def _do_push(self, version, by_server, deltas, k, client_id, seq,
+                 replay):
         if self.latency_s:
             time.sleep(self.latency_s)
         for s, (rows, idx) in by_server.items():
-            self.server.apply_push(s, rows, deltas[idx])
+            # bill before applying: the payload is on the wire whether
+            # the shard dedupes it (duplicate) or rejects it (down) —
+            # retry/duplicate overhead shows up in the measured truth
             self._bill(self.pushed_bytes, s, len(rows), k,
                        self.wire_dtype.itemsize)
+            self.server.apply_push(s, rows, deltas[idx],
+                                   client_id=client_id, seq=seq,
+                                   replay=replay)
         self.server.commit(version)
 
     def push_batch(self, version: int, rows: np.ndarray,
-                   deltas: np.ndarray) -> Future:
+                   deltas: np.ndarray, *, client_id: Optional[str] = None,
+                   seq: Optional[int] = None,
+                   replay: bool = False) -> Future:
         rows = np.asarray(rows, np.int64)
         deltas = self._encode(np.asarray(deltas))
         k = deltas.shape[1] if deltas.ndim == 2 else 1
@@ -286,7 +441,8 @@ class SimTransport(Transport):
         for s, sel in self.server.shards.split(rows_s).items():
             mask = np.isin(rows_s, sel)
             by_server[s] = (rows_s[mask], idx_s[mask])
-        return self._pool.submit(self._do_push, version, by_server, deltas, k)
+        return self._pool.submit(self._do_push, version, by_server, deltas,
+                                 k, client_id, seq, replay)
 
     def _do_pull(self, by_server, n_rows, k, min_version):
         if self.latency_s:
@@ -314,6 +470,19 @@ class SimTransport(Transport):
     def close(self) -> None:
         self._pool.shutdown(wait=True)
 
+    # ---- recovery surface: delegate to the live server group ----
+    def needs_replay(self) -> frozenset:
+        return self.server.needs_replay()
+
+    def mark_recovered(self, server: int) -> None:
+        self.server.mark_recovered(server)
+
+    def crash_server(self, server: int) -> None:
+        self.server.crash(server)
+
+    def restart_server(self, server: int) -> None:
+        self.server.restart(server)
+
 
 class JaxDistributedTransport(Transport):
     """Multi-host slot: the same push/pull contract over
@@ -337,7 +506,7 @@ class JaxDistributedTransport(Transport):
                 "(--backend ps defaults to it)")
         super().__init__(num_servers)
 
-    def push_batch(self, version, rows, deltas) -> Future:
+    def push_batch(self, version, rows, deltas, **kw) -> Future:
         raise NotImplementedError(
             "multi-host PS push is the ROADMAP backlog head: encode "
             "(rows, deltas) per owning host and send over a "
@@ -370,6 +539,18 @@ def _pad_rows(rows: np.ndarray,
         b *= 2
     return np.concatenate([rows, np.full(b - n, rows[0], rows.dtype)]), b - n
 
+@dataclasses.dataclass
+class _PushRec:
+    """One issued delta push, retained until a checkpoint fence makes it
+    durable — the unit of retry re-issue and crash-recovery replay."""
+
+    seq: int
+    version: int
+    rows: np.ndarray
+    delta: np.ndarray
+    future: Optional[Future] = None
+
+
 class PSClient:
     """Keeps one worker's full-capacity device replica fresh through
     touched-row pulls and emits touched-row delta pushes.
@@ -392,23 +573,179 @@ class PSClient:
       ``end_batch(m, phi_new, rows)``  gathers the updated touched rows,
           pushes ``new - pulled_base`` as version ``m``, and bounds the
           number of uncommitted pushes by S + 1.
+
+    Chaos hardening (DESIGN.md §17): every push carries a monotonic
+    ``(client_id, seq)`` tag so re-issue is idempotent; failed push/pull
+    ops retry with exponential backoff + deterministic jitter under a
+    per-op ``retry_deadline_s``; every push since the last durable fence
+    is retained (``mark_durable`` trims), and when a restarted shard
+    advertises ``needs_replay`` the client replays the retained log in
+    version order — at S=0 the recovered phi is bit-exact with the
+    clean run.  Retry/replay wire overhead is billed into ``meter``
+    under ``ps.retry.*`` / ``ps.replay`` phases (core/sync.py).
     """
 
-    def __init__(self, transport: Transport, staleness: int = 0):
+    _RETRYABLE = (TransportError, TimeoutError)
+
+    def __init__(self, transport: Transport, staleness: int = 0,
+                 client_id: str = "w0", retry_deadline_s: float = 60.0,
+                 backoff0_s: float = 0.01, backoff_max_s: float = 0.5,
+                 meter=None):
         if staleness < 0:
             raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.transport = transport
         self.staleness = int(staleness)
+        self.client_id = str(client_id)
+        self.retry_deadline_s = float(retry_deadline_s)
+        self.backoff0_s = float(backoff0_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.meter = meter
         self.pull_wait_s = 0.0
         self.push_wait_s = 0.0
         self.touched_history: List[int] = []
+        self.retries = 0
+        self.replayed_pushes = 0
+        self.recoveries = 0
+        self.retry_wire_bytes = 0
         self._prefetched: Optional[Tuple[int, np.ndarray, Future]] = None
         self._base_rows: Optional[np.ndarray] = None       # pulled values
-        self._pending_pushes: List[Future] = []
+        self._k: Optional[int] = None                      # replica width
+        self._pending: List[_PushRec] = []
+        self._retained: List[_PushRec] = []   # since the last durable fence
+        self._seq = 0
+        self._retry_counter = 0
+        import zlib
+        self._jitter_key = zlib.crc32(self.client_id.encode())
 
     # -- helpers ----------------------------------------------------------
     def _min_version(self, m: int) -> int:
         return max(0, m - 1 - self.staleness)
+
+    def _wire_itemsize(self) -> int:
+        return np.dtype(getattr(self.transport, "wire_dtype",
+                                np.float32)).itemsize
+
+    def _op_nbytes(self, rows: np.ndarray, k: int) -> int:
+        return int(rows.size) * (k * self._wire_itemsize() + _ROW_ID_BYTES)
+
+    def _bill_retry(self, phase: str, nbytes: int) -> None:
+        self.retry_wire_bytes += nbytes
+        if self.meter is not None:
+            self.meter.record_host(phase, nbytes)
+
+    def _backoff(self, attempt: int) -> None:
+        """Exponential backoff with deterministic jitter: the sleep for
+        retry ``n`` of this client is a pure function of
+        ``(client_id, retry counter)`` — chaos runs stay replayable."""
+        base = min(self.backoff_max_s, self.backoff0_s * (2.0 ** attempt))
+        rng = np.random.default_rng((self._jitter_key, self._retry_counter))
+        self._retry_counter += 1
+        time.sleep(base * (0.5 + rng.random()))
+
+    # -- retry / recovery core --------------------------------------------
+    def _recover_if_needed(self) -> None:
+        """If any shard restarted and awaits replay, re-push the retained
+        post-fence deltas in version order, then clear the barrier.
+        Dedup on still-healthy shards makes the replay a no-op there;
+        the restarted shard re-applies exactly the deltas it lost."""
+        need = sorted(self.transport.needs_replay())
+        if not need:
+            return
+        self.recoveries += len(need)
+        for rec in self._retained:
+            k = rec.delta.shape[1] if rec.delta.ndim == 2 else 1
+            self._bill_retry("ps.replay", self._op_nbytes(rec.rows, k))
+            # replay=True: a replaying shard fences ordinary pushes, so
+            # the retained backlog re-applies in version order BEFORE any
+            # in-flight retry can land out of order (float adds are not
+            # associative — order is part of the bit-exactness contract)
+            fut = self.transport.push_batch(rec.version, rec.rows, rec.delta,
+                                            client_id=self.client_id,
+                                            seq=rec.seq, replay=True)
+            t0, attempt = time.time(), 0
+            while True:
+                try:
+                    fut.result()
+                    break
+                except self._RETRYABLE as e:
+                    if time.time() - t0 > self.retry_deadline_s:
+                        raise TimeoutError(
+                            f"replay of push seq {rec.seq} (version "
+                            f"{rec.version}) exceeded retry deadline "
+                            f"{self.retry_deadline_s}s: {e}") from e
+                    self._backoff(attempt)
+                    attempt += 1
+                    self.retries += 1
+                    self._bill_retry("ps.replay",
+                                     self._op_nbytes(rec.rows, k))
+                    fut = self.transport.push_batch(
+                        rec.version, rec.rows, rec.delta,
+                        client_id=self.client_id, seq=rec.seq, replay=True)
+            self.replayed_pushes += 1
+        for s in need:
+            self.transport.mark_recovered(s)
+
+    def _await_push(self, rec: _PushRec) -> None:
+        t0, attempt = time.time(), 0
+        while True:
+            try:
+                rec.future.result()
+                return
+            except self._RETRYABLE as e:
+                self._recover_if_needed()
+                if time.time() - t0 > self.retry_deadline_s:
+                    raise TimeoutError(
+                        f"push seq {rec.seq} (version {rec.version}) by "
+                        f"client {self.client_id!r} exceeded retry deadline "
+                        f"{self.retry_deadline_s}s: {e}") from e
+                self._backoff(attempt)
+                attempt += 1
+                self.retries += 1
+                k = rec.delta.shape[1] if rec.delta.ndim == 2 else 1
+                self._bill_retry("ps.retry.push",
+                                 self._op_nbytes(rec.rows, k))
+                rec.future = self.transport.push_batch(
+                    rec.version, rec.rows, rec.delta,
+                    client_id=self.client_id, seq=rec.seq)
+
+    def _repair_pending(self) -> None:
+        """Re-issue any in-flight push whose future already failed — a
+        pull timeout is often downstream of our own dropped push."""
+        for rec in self._pending:
+            if rec.future.done() and rec.future.exception() is not None:
+                exc = rec.future.exception()
+                if not isinstance(exc, self._RETRYABLE):
+                    continue
+                self.retries += 1
+                k = rec.delta.shape[1] if rec.delta.ndim == 2 else 1
+                self._bill_retry("ps.retry.push",
+                                 self._op_nbytes(rec.rows, k))
+                rec.future = self.transport.push_batch(
+                    rec.version, rec.rows, rec.delta,
+                    client_id=self.client_id, seq=rec.seq)
+
+    def _pull_with_retry(self, rows: np.ndarray, min_version: int,
+                         fut: Optional[Future] = None):
+        if fut is None:
+            fut = self.transport.pull(rows, min_version)
+        t0, attempt = time.time(), 0
+        while True:
+            try:
+                return fut.result()
+            except self._RETRYABLE as e:
+                self._recover_if_needed()
+                self._repair_pending()
+                if time.time() - t0 > self.retry_deadline_s:
+                    raise TimeoutError(
+                        f"pull (min_version {min_version}, {rows.size} "
+                        f"rows) by client {self.client_id!r} exceeded retry "
+                        f"deadline {self.retry_deadline_s}s: {e}") from e
+                self._backoff(attempt)
+                attempt += 1
+                self.retries += 1
+                self._bill_retry("ps.retry.pull",
+                                 self._op_nbytes(rows, self._k or 1))
+                fut = self.transport.pull(rows, min_version)
 
     def prefetch(self, m_next: int, rows_next: np.ndarray) -> None:
         if self._prefetched is not None:
@@ -429,16 +766,21 @@ class PSClient:
         t0 = time.time()
         if (self._prefetched is not None and self._prefetched[0] == m
                 and np.array_equal(self._prefetched[1], rows)):
-            vals, _ = self._prefetched[2].result()
+            vals, _ = self._pull_with_retry(rows, self._min_version(m),
+                                            fut=self._prefetched[2])
         else:
             if self._prefetched is not None:
-                self._prefetched[2].result()     # drain a mismatched pull
-            vals, _ = self.transport.pull(rows,
-                                          self._min_version(m)).result()
+                try:                             # drain a mismatched pull
+                    self._prefetched[2].result()
+                except self._RETRYABLE:
+                    pass                         # value unused; not retried
+            vals, _ = self._pull_with_retry(rows, self._min_version(m))
         self._prefetched = None
         self.pull_wait_s += time.time() - t0
         self.touched_history.append(int(rows.size))
         self._base_rows = vals
+        if vals.ndim == 2:
+            self._k = int(vals.shape[1])
         if not rows.size:
             return phi
         # the device scatter runs at a BUCKETED row count (_pad_rows):
@@ -469,22 +811,37 @@ class PSClient:
             raise RuntimeError("end_batch without a matching begin_batch")
         delta = new_rows - self._base_rows
         self._base_rows = None
-        self._pending_pushes.append(
-            self.transport.push_batch(m, rows, delta))
+        rec = _PushRec(seq=self._seq, version=m, rows=rows, delta=delta)
+        self._seq += 1
+        rec.future = self.transport.push_batch(
+            m, rows, delta, client_id=self.client_id, seq=rec.seq)
+        # retained until the next durable fence: the crash-recovery
+        # replay source (trimmed by mark_durable, bounded by ckpt_every)
+        self._retained.append(rec)
+        self._pending.append(rec)
         # bounded staleness also bounds worker memory: at most S + 1
         # pushes may be uncommitted before the oldest must land
         t0 = time.time()
-        while len(self._pending_pushes) > self.staleness:
-            self._pending_pushes.pop(0).result()
+        while len(self._pending) > self.staleness:
+            self._await_push(self._pending.pop(0))
         self.push_wait_s += time.time() - t0
 
     def flush(self) -> None:
         """Commit every outstanding push (checkpoint fences, shutdown)."""
-        while self._pending_pushes:
-            self._pending_pushes.pop(0).result()
+        while self._pending:
+            self._await_push(self._pending.pop(0))
         if self._prefetched is not None:
-            self._prefetched[2].result()
+            try:
+                self._prefetched[2].result()
+            except self._RETRYABLE:
+                pass          # value unused; the next begin_batch re-pulls
             self._prefetched = None
+
+    def mark_durable(self) -> None:
+        """Checkpoint-fence handshake: every retained push is now covered
+        by a server-synced snapshot (``ParamServer.mark_synced``) — the
+        replay log can be trimmed."""
+        self._retained.clear()
 
     @property
     def mean_touched_rows(self) -> float:
@@ -497,7 +854,12 @@ class PSClient:
                 "push_wait_s": self.push_wait_s,
                 "mean_touched_rows": self.mean_touched_rows,
                 "wire_bytes": self.transport.total_bytes,
-                "bytes_by_link": self.transport.bytes_by_link()}
+                "bytes_by_link": self.transport.bytes_by_link(),
+                "retries": self.retries,
+                "replayed_pushes": self.replayed_pushes,
+                "recoveries": self.recoveries,
+                "retry_wire_bytes": self.retry_wire_bytes,
+                "retained_pushes": len(self._retained)}
 
 
 def touched_rows_of(word_ids, counts) -> np.ndarray:

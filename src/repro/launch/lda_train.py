@@ -171,6 +171,48 @@ def build_parser() -> argparse.ArgumentParser:
                     help="injected per-operation transport latency in "
                          "seconds (SimTransport) — makes prefetch overlap "
                          "measurable on localhost; 0 = in-process speed")
+    ap.add_argument("--ps-pull-timeout", type=float, default=60.0,
+                    help="server-side pull wait in seconds before a "
+                         "TimeoutError names the shard and awaited version "
+                         "(--backend ps); the client retry deadline is "
+                         "2x this")
+    # chaos / fault tolerance (DESIGN.md §17)
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FaultPlan seed: replaying the same run replays "
+                         "the same drop/dup/delay decisions")
+    ap.add_argument("--chaos-drop", type=float, default=0.0,
+                    help="per-op drop probability for pushes AND pulls "
+                         "(< 1; retries draw fresh fates)")
+    ap.add_argument("--chaos-dup", type=float, default=0.0,
+                    help="per-op duplicate-delivery probability for pushes "
+                         "(exercises sequence-number dedup)")
+    ap.add_argument("--chaos-delay", type=float, default=0.0,
+                    help="injected issue-side delay in seconds when a "
+                         "delay fires")
+    ap.add_argument("--chaos-delay-prob", type=float, default=0.0,
+                    help="per-op probability of the --chaos-delay")
+    ap.add_argument("--chaos-crash", default="",
+                    help="scheduled server loss as SERVER@PUSHOP (e.g. "
+                         "'1@6'): shard SERVER crashes when the push op "
+                         "counter reaches PUSHOP, restarts "
+                         "--chaos-restart-after ops later, and recovers "
+                         "from the last synced snapshot + client replay")
+    ap.add_argument("--chaos-restart-after", type=int, default=2,
+                    help="push ops between scheduled crash and restart")
+    # elastic worker membership (--backend ps, staleness 0)
+    ap.add_argument("--elastic-workers", default="w0",
+                    help="comma-separated initial logical worker ids; each "
+                         "gets its own PSClient (own seq space + retained "
+                         "replay log) over the shared transport, and "
+                         "mini-batch m goes to active[m %% len(active)]")
+    ap.add_argument("--elastic-events", default="",
+                    help="comma-separated membership events "
+                         "'join:NAME@M', 'leave:NAME@M', 'crash:NAME@M' "
+                         "applied at mini-batch index M (0-based): join/"
+                         "leave repartition the stream at the batch fence; "
+                         "crash kills NAME mid-batch — its un-pushed batch "
+                         "is replayed by a surviving worker (trajectory "
+                         "parity at S=0)")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"],
                     help="production mesh for --backend shard_map")
     ap.add_argument("--mesh-shape", default="",
@@ -205,6 +247,28 @@ def default_args(**overrides) -> argparse.Namespace:
 
 def _csv_ints(s: str):
     return tuple(int(x) for x in str(s).split(",") if str(x).strip())
+
+
+def _parse_elastic_events(spec: str) -> Dict[int, list]:
+    """``"join:w1@4,leave:w0@8,crash:w1@12"`` -> {batch index: [(kind,
+    name), ...]}, applied at that 0-based mini-batch (DESIGN.md §17)."""
+    events: Dict[int, list] = {}
+    for tok in str(spec).split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        try:
+            kind, rest = tok.split(":")
+            name, at = rest.split("@")
+            at = int(at)
+        except ValueError:
+            raise ValueError(f"bad --elastic-events entry {tok!r}; expected "
+                             f"kind:NAME@M (e.g. 'join:w1@4')") from None
+        if kind not in ("join", "leave", "crash"):
+            raise ValueError(f"unknown elastic event kind {kind!r} in "
+                             f"{tok!r} (join/leave/crash)")
+        events.setdefault(at, []).append((kind, name))
+    return events
 
 
 def _parse_decay(s: str):
@@ -457,6 +521,11 @@ _RESUME_KEYS = ("seed", "sync", "backend", "shards", "vocab", "topics",
                 "recycle_tol", "staleness", "ps_servers")
 # ps_latency is NOT a resume key: injected transport latency changes wall
 # clock, never the trajectory (pushes are applied in batch order either way).
+# The chaos_* / ps_pull_timeout / elastic_* flags are likewise not resume
+# keys: chaos faults are retried/replayed to the SAME committed state (the
+# §17 bit-exactness pin), and elastic membership at S=0 only re-labels which
+# client pushes a batch — the trajectory is identical (elastic requires
+# staleness 0 for exactly this reason).
 # NB: sweep_policy / onehot_crossover are deliberately NOT resume keys:
 # both formulations compute the same trajectory (within float
 # associativity) and the same sync bytes, so a resumed run may re-resolve
@@ -534,6 +603,32 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                          "drop the decay on untouched server rows "
                          "(per-segment decay billing rides the multi-host "
                          "backlog item, ROADMAP)")
+    chaos_on = bool(getattr(args, "chaos_drop", 0.0)
+                    or getattr(args, "chaos_dup", 0.0)
+                    or getattr(args, "chaos_delay_prob", 0.0)
+                    or getattr(args, "chaos_crash", ""))
+    elastic_events = _parse_elastic_events(
+        getattr(args, "elastic_events", ""))
+    worker_names = [w.strip()
+                    for w in getattr(args, "elastic_workers", "w0").split(",")
+                    if w.strip()] or ["w0"]
+    if len(set(worker_names)) != len(worker_names):
+        raise ValueError(f"duplicate --elastic-workers ids: {worker_names}")
+    if not ps and (chaos_on or elastic_events or worker_names != ["w0"]):
+        raise ValueError("--chaos-* and --elastic-* flags require "
+                         "--backend ps (DESIGN.md §17)")
+    if elastic_events and args.staleness != 0:
+        raise ValueError("--elastic-events requires --staleness 0: crash "
+                         "replay parity holds only when every pull reflects "
+                         "every prior push (DESIGN.md §17)")
+    if (getattr(args, "chaos_crash", "")
+            and (len(worker_names) > 1 or elastic_events)):
+        raise ValueError(
+            "--chaos-crash with multiple/elastic workers is unsupported: "
+            "shard recovery replays the RETAINED LOG OF ONE CLIENT, so a "
+            "multi-writer shard would come back missing the other "
+            "clients' post-fence deltas (DESIGN.md §17 records this "
+            "limitation; use a single worker for server-crash chaos)")
     compact_every = int(getattr(args, "compact_every", 0) or 0)
     if compact_every and not dynamic:
         raise ValueError("--compact-every needs --dynamic-vocab: a fixed-W "
@@ -643,8 +738,13 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
 
     step_fn, meter = build_step(cfg)
 
-    ps_server = ps_client = ps_transport = touched_rows_of = None
+    ps_server = ps_transport = touched_rows_of = None
+    ps_workers: Dict[str, Any] = {}
+    ps_active: list = []
+    ps_retired: list = []       # left/crashed workers, kept for stats
+    elastic_log: list = []
     if ps:
+        from repro.dist.faults import ChaosTransport, FaultPlan
         from repro.dist.paramserver import (ParamServer, PSClient,
                                             SimTransport, touched_rows_of)
         # the server group owns the authoritative statistic; a resumed run
@@ -652,21 +752,47 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
         # checkpoint was written server-synced, see ps_sync_state)
         ps_server = ParamServer(np.asarray(state.phi_acc, np.float32),
                                 num_servers=args.ps_servers,
-                                version=start_m)
+                                version=start_m,
+                                pull_timeout=args.ps_pull_timeout)
         wire_np = (np.float32 if args.sync_dtype == "float32"
                    else jnp.bfloat16)
         ps_transport = SimTransport(ps_server, latency_s=args.ps_latency,
                                     wire_dtype=wire_np)
-        ps_client = PSClient(ps_transport, staleness=args.staleness)
+        if chaos_on:
+            crash_server, crash_at = FaultPlan.parse_crash(args.chaos_crash)
+            plan = FaultPlan(
+                seed=args.chaos_seed, drop_push=args.chaos_drop,
+                drop_pull=args.chaos_drop, dup_push=args.chaos_dup,
+                delay_s=args.chaos_delay,
+                delay_prob=args.chaos_delay_prob,
+                crash_server=crash_server, crash_at_push=crash_at,
+                restart_after_pushes=args.chaos_restart_after)
+            ps_transport = ChaosTransport(ps_transport, plan)
+
+        def make_worker(name: str) -> "PSClient":
+            return PSClient(ps_transport, staleness=args.staleness,
+                            client_id=name,
+                            retry_deadline_s=2.0 * args.ps_pull_timeout,
+                            meter=meter)
+
+        ps_workers = {name: make_worker(name) for name in worker_names}
+        ps_active = list(worker_names)
 
     def ps_sync_state():
         """Drain the PS pipeline and adopt the server-authoritative phi as
         the carry (checkpoint fences / end of stream).  At S=0 this is a
         numerical no-op (replica rows equal the server up to the delta-add
-        ulp); at S>0 it also heals any bounded staleness in the replica."""
+        ulp); at S>0 it also heals any bounded staleness in the replica.
+        The fence is also the durability handshake (DESIGN.md §17): the
+        snapshot becomes the crash-recovery base, so every worker may trim
+        its retained replay log."""
         nonlocal state
-        ps_client.flush()
+        for w in ps_workers.values():
+            w.flush()
         phi_srv, _ = ps_server.snapshot()
+        ps_server.mark_synced()
+        for w in ps_workers.values():
+            w.mark_durable()
         state = LDATrainState(
             phi_acc=jnp.asarray(phi_srv, state.phi_acc.dtype),
             m=state.m, rng=state.rng)
@@ -872,13 +998,50 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
                                       "live_w": live_b})
                 print(f"minibatch {m + 1:5d}  [grow] live_w={live_b} -> "
                       f"W_cap={new_cap}", flush=True)
+            crash_victims = []
             if ps:
+                # elastic membership events fence at batch index m (§17):
+                # joins/leaves repartition the round-robin stream BEFORE
+                # assignment; a crash fires AFTER the step (the victim
+                # dies mid-batch, its push is lost)
+                for kind, name in elastic_events.get(m, ()):
+                    if kind == "join":
+                        if name not in ps_workers:
+                            ps_workers[name] = make_worker(name)
+                        if name not in ps_active:
+                            ps_active.append(name)
+                        elastic_log.append({"m": m, "event": "join",
+                                            "worker": name})
+                    elif kind == "leave":
+                        if name not in ps_active:
+                            raise ValueError(f"elastic leave of unknown "
+                                             f"worker {name!r} at batch {m}")
+                        if len(ps_active) == 1:
+                            raise ValueError(f"elastic leave of {name!r} at "
+                                             f"batch {m} leaves no workers")
+                        ps_workers[name].flush()
+                        ps_retired.append(ps_workers.pop(name))
+                        ps_active.remove(name)
+                        elastic_log.append({"m": m, "event": "leave",
+                                            "worker": name})
+                    else:
+                        crash_victims.append(name)
+                cli = ps_workers[ps_active[m % len(ps_active)]]
                 # refresh the replica's touched rows from the server (waits
                 # on the prefetched pull; the wait is the overlap instrument)
                 rows = touched_rows_of(batch.word_ids, batch.counts)
+                state_pre = None
+                if crash_victims:
+                    # crash-replay restore point: DEEP copies, because the
+                    # victim's step donates every carry leaf (m, rng,
+                    # phi_acc) and the survivor must re-run from intact
+                    # buffers
+                    state_pre = LDATrainState(
+                        phi_acc=jnp.array(state.phi_acc),
+                        m=jnp.array(state.m), rng=jnp.array(state.rng))
                 state = LDATrainState(
-                    phi_acc=ps_client.begin_batch(m + 1, rows,
-                                                  state.phi_acc),
+                    phi_acc=cli.begin_batch(m + 1, rows,
+                                            state.phi_acc),
                     m=state.m, rng=state.rng)
             if dynamic:
                 state, diag = step_fn(state, batch.word_ids, batch.counts,
@@ -886,14 +1049,49 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             else:
                 state, diag = step_fn(state, batch.word_ids, batch.counts)
             if ps:
+                for name in crash_victims:
+                    if name not in ps_active:
+                        continue           # already left/crashed
+                    if len(ps_active) == 1:
+                        raise ValueError(f"elastic crash of {name!r} at "
+                                         f"batch {m} leaves no survivor")
+                    assigned = ps_active[m % len(ps_active)] == name
+                    ps_retired.append(ps_workers.pop(name))
+                    ps_active.remove(name)
+                    elastic_log.append({"m": m, "event": "crash",
+                                        "worker": name,
+                                        "replayed": assigned})
+                    if assigned:
+                        # the victim died before pushing this batch: a
+                        # survivor replays it from the pre-batch carry.
+                        # begin_batch re-pulls the same committed rows
+                        # (the victim never pushed) and the step re-runs
+                        # with the same rng, so the trajectory is
+                        # identical to an uncrashed run at S=0 (pinned)
+                        cli = ps_workers[ps_active[m % len(ps_active)]]
+                        state = LDATrainState(
+                            phi_acc=cli.begin_batch(m + 1, rows,
+                                                    state_pre.phi_acc),
+                            m=state_pre.m, rng=state_pre.rng)
+                        if dynamic:
+                            state, diag = step_fn(
+                                state, batch.word_ids, batch.counts,
+                                jnp.asarray(live_b, jnp.int32))
+                        else:
+                            state, diag = step_fn(state, batch.word_ids,
+                                                  batch.counts)
                 # prefetch BEFORE the push settles: at S>=1 the pull is
                 # served from a bounded-stale snapshot and fully overlaps;
-                # at S=0 it blocks server-side until this push commits
+                # at S=0 it blocks server-side until this push commits.
+                # The prefetch is issued on the worker the NEXT batch is
+                # assigned to (membership events at m+1 may reroute it —
+                # the mismatched prefetch is then drained, not leaked).
                 if nxt is not None:
                     nb = nxt[0]
-                    ps_client.prefetch(
+                    nxt_cli = ps_workers[ps_active[(m + 1) % len(ps_active)]]
+                    nxt_cli.prefetch(
                         m + 2, touched_rows_of(nb.word_ids, nb.counts))
-                ps_client.end_batch(m + 1, state.phi_acc, rows)
+                cli.end_batch(m + 1, state.phi_acc, rows)
             buf.append(diag["mean_r"], diag["iters"])
             tokens += ntok
             if live_b is not None:
@@ -969,7 +1167,18 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
         "phi_acc": np.asarray(state.phi_acc),
     }
     if ps:
-        st = ps_client.stats()
+        # aggregate worker-side stats over every client that ever ran
+        # (elastic membership: retired workers still did work)
+        all_workers = list(ps_workers.values()) + ps_retired
+        touched_all = [t for w in all_workers for t in w.touched_history]
+        st = {
+            "wire_bytes": ps_transport.total_bytes,
+            "bytes_by_link": ps_transport.bytes_by_link(),
+            "pull_wait_s": sum(w.pull_wait_s for w in all_workers),
+            "push_wait_s": sum(w.push_wait_s for w in all_workers),
+            "mean_touched_rows": (float(np.mean(touched_all))
+                                  if touched_all else 0.0),
+        }
         done_b = max(args.minibatches - start_m, 1)
         mt = max(int(round(st["mean_touched_rows"])), 1)
         result.update(
@@ -980,6 +1189,18 @@ def train_loop(args, on_batch=None) -> Dict[str, Any]:
             ps_push_wait_s=st["push_wait_s"],
             mean_touched_rows=st["mean_touched_rows"],
             ps_bytes_by_link=st["bytes_by_link"],
+            # fault-tolerance instruments (DESIGN.md §17)
+            ps_retries=sum(w.retries for w in all_workers),
+            ps_replayed_pushes=sum(w.replayed_pushes for w in all_workers),
+            ps_recoveries=sum(w.recoveries for w in all_workers),
+            ps_retry_wire_bytes=sum(w.retry_wire_bytes
+                                    for w in all_workers),
+            ps_duplicates_dropped=ps_server.duplicates_dropped,
+            ps_recovery_log=list(ps_server.recovery_log),
+            chaos_events=(ps_transport.event_counts()
+                          if chaos_on else {}),
+            elastic_log=elastic_log,
+            ps_workers=sorted(ps_workers),
             # trace-time push/pull model billed at the measured mean
             # touched-row count (CommMeter w_rows scaling) — the analytic
             # cross-check of the measured wire bytes above
@@ -1030,6 +1251,15 @@ def main(argv=None):
               f"{res['mean_touched_rows']:.0f}  pull_wait="
               f"{res['ps_pull_wait_s']:.2f}s  push_wait="
               f"{res['ps_push_wait_s']:.2f}s")
+        if res.get("chaos_events") or res.get("ps_retries"):
+            print(f"[chaos] events={res['chaos_events']}  "
+                  f"retries={res['ps_retries']}  "
+                  f"replayed={res['ps_replayed_pushes']}  "
+                  f"recoveries={res['ps_recoveries']}  "
+                  f"dup_dropped={res['ps_duplicates_dropped']}")
+        if res.get("elastic_log"):
+            print(f"[elastic] workers={res['ps_workers']}  "
+                  f"events={res['elastic_log']}")
     if args.dynamic_vocab:
         print(f"[vocab] live_w={res['live_w']}  W_cap={res['w_cap']}  "
               f"growths={len(res['growth_events'])} "

@@ -118,7 +118,9 @@ def serve_lda(args):
             theta_cache=args.theta_cache or None,
             cache_mode=args.cache_mode,
             oov_trigger=(OOVTrigger(args.oov_retrain_rate)
-                         if args.oov_retrain_rate > 0 else None))
+                         if args.oov_retrain_rate > 0 else None),
+            admission_slo_s=(args.admission_slo_ms / 1e3
+                             if args.admission_slo_ms else None))
         geom = (f"slab {engine.slots}x{engine.slot_len} "
                 f"({engine.sweeps_per_step} sweeps/step)")
     else:
@@ -188,6 +190,11 @@ def serve_lda(args):
               f"cache_served={s['cache_served']}  "
               f"warm_starts={s['warm_starts']}  "
               f"retrain_batches={s['retrain_batches']}")
+        if s["shed"] or s["quarantined"]:
+            print(f"[shed] {s['shed']} requests shed "
+                  f"({s['shed_frac']:.2%} of offered load, SLO "
+                  f"{s['admission_slo_s']}s)  "
+                  f"quarantined={s['quarantined']}")
     if s["bytes_by_phase"]:
         print(f"[comm] per-request bytes={s['per_request_bytes']:,.0f} "
               f"(phases: {s['bytes_by_phase']})")
@@ -279,6 +286,10 @@ def main(argv=None):
                          "request stream")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="p99 latency objective to check the run against")
+    ap.add_argument("--admission-slo-ms", type=float, default=None,
+                    help="slab: shed a request at submit when the "
+                         "drain-model wait estimate exceeds this deadline "
+                         "(typed Shed result; default: queue unboundedly)")
     ap.add_argument("--max-age-ms", type=float, default=50.0,
                     help="bucket: flush a bucket once its oldest request "
                          "waited this long (open-loop only)")

@@ -14,5 +14,6 @@ from repro.serve.engine import (  # noqa: F401
     FoldInEngine,
     OOVTrigger,
     ServeResult,
+    Shed,
     SlabEngine,
 )

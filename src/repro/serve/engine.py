@@ -65,6 +65,23 @@ class ServeResult:
     comm_bytes: float = 0.0        # sync bytes billed to this request (§16)
     cached: bool = False           # served straight from the theta cache
     tenant: Optional[Hashable] = None
+    error: Optional[str] = None    # quarantine flag: "nonfinite_input" /
+    #                                "nonfinite_theta" — theta is the prior
+    #                                mixture, never cached (§17)
+
+
+@dataclasses.dataclass
+class Shed:
+    """A typed admission rejection (DESIGN.md §17): the queue would blow
+    the SLO deadline, so the request is refused at submit time instead of
+    queueing unboundedly.  Returned by ``SlabEngine.submit`` when
+    ``admission_slo_s`` is set; never mixed into served results."""
+
+    req_id: int
+    est_wait_s: float              # drain-model estimate that tripped it
+    slo_s: float
+    queue_depth: int
+    tenant: Optional[Hashable] = None
 
 
 def _prepare_phi(phi_acc, cfg: LDAConfig, live_words: Optional[int],
@@ -633,7 +650,8 @@ class SlabEngine:
                  live_words: Optional[int] = None, phi_version: int = 0,
                  theta_cache=None, cache_mode: str = "serve",
                  oov_trigger: Optional[OOVTrigger] = None,
-                 pipeline: int = 4):
+                 pipeline: int = 4,
+                 admission_slo_s: Optional[float] = None):
         if cache_mode not in ("serve", "warm"):
             raise ValueError(f"cache_mode must be 'serve' or 'warm': "
                              f"{cache_mode!r}")
@@ -699,6 +717,11 @@ class SlabEngine:
         self._t_first: Optional[float] = None
         self._t_last_done: Optional[float] = None
         self._rates: Optional[Tuple[float, float]] = None
+        self.admission_slo_s = (float(admission_slo_s)
+                                if admission_slo_s is not None else None)
+        self._shed_count = 0
+        self._quarantined = 0
+        self._step_ema_s: Optional[float] = None
         self.warmup_s = 0.0
         self._warm_flag = bool(warmup)
         if warmup:
@@ -741,17 +764,38 @@ class SlabEngine:
 
     def submit(self, doc: Tuple[np.ndarray, np.ndarray],
                req_id: Optional[int] = None,
-               tenant: Optional[Hashable] = None) -> int:
+               tenant: Optional[Hashable] = None) -> "int | Shed":
         """Admit one document; never blocks on device work.  A theta-cache
         hit in ``serve`` mode completes immediately (harvest via
         ``poll``/``drain``); otherwise the request queues for the next
-        free slot."""
+        free slot.  With ``admission_slo_s`` set, a request whose
+        drain-model wait estimate exceeds the SLO is refused with a
+        typed ``Shed`` instead of queueing (DESIGN.md §17); a document
+        with non-finite counts retires immediately with
+        ``error='nonfinite_input'`` instead of poisoning the slab."""
         if req_id is None:
             req_id = self._next_id
         self._next_id = max(self._next_id, req_id) + 1
         now = time.time()
         if self._t_first is None:
             self._t_first = now
+        if not np.isfinite(np.asarray(doc[1], np.float32)).all():
+            # poisoned payload: quarantine at admission — flat-prior theta
+            # with an error flag, never a slab crash, never cached
+            self._quarantined += 1
+            t_done = time.time()
+            lat = t_done - now
+            self._done.append(ServeResult(
+                req_id=req_id,
+                theta=np.full((self._K,), 1.0 / self._K, np.float32),
+                latency_s=lat, bucket=-1, iters=0, mean_r=0.0,
+                oov_tokens=0.0, phi_version=self.phi_version,
+                comm_bytes=0.0, cached=False, tenant=tenant,
+                error="nonfinite_input"))
+            self._latencies.append(lat)
+            self._served += 1
+            self._t_last_done = t_done
+            return req_id
         # digest hashes the RAW payload, before vocab translation: repeat
         # content collides whatever rows this generation maps it to
         digest = (doc_digest(doc[0], doc[1])
@@ -776,8 +820,27 @@ class SlabEngine:
                     self._t_last_done = t_done
                     return req_id
                 req.warm = np.asarray(hit, np.float32)
+        if self.admission_slo_s is not None:
+            est = self._est_wait_s()
+            if est > self.admission_slo_s:
+                self._shed_count += 1
+                return Shed(req_id=req_id, est_wait_s=est,
+                            slo_s=self.admission_slo_s,
+                            queue_depth=len(self._queue), tenant=tenant)
         self._queue.append((req, rows, counts))
         return req_id
+
+    def _est_wait_s(self) -> float:
+        """Drain-model wait estimate for a request queued NOW: queue-ahead
+        dispatch delay plus one slot tenure, priced at the measured step
+        EMA.  Dispatch rate per step is bounded by both the refill lanes
+        and the steady-state slot turnover (slots freed per step at mean
+        tenure).  Cold engine (no step yet) estimates 0 — always admit."""
+        if self._step_ema_s is None:
+            return 0.0
+        tenure = max(1.0, self.fold_iters / self.sweeps_per_step)
+        rate = max(1e-9, min(float(self._refill_cap), self.slots / tenure))
+        return self._step_ema_s * (len(self._queue) / rate + tenure)
 
     # ------------------------------------------------------------ iterate
 
@@ -796,6 +859,7 @@ class SlabEngine:
         bounded pipeline window, so consecutive steps chain on the device
         while the host runs ahead.  Returns how many documents were
         harvested (possibly from earlier steps)."""
+        t0 = time.time()
         n_take = min(len(self._queue), len(self._free), self._refill_cap)
         take = [self._queue.popleft() for _ in range(n_take)]
         slot_ids = [self._free.popleft() for _ in range(n_take)]
@@ -818,7 +882,11 @@ class SlabEngine:
         self._steps += 1
         self._pending.append(_StepOut(retired, theta_out, iters, r_doc,
                                       self.phi_version))
-        return self._harvest(block=len(self._pending) > self._pipeline)
+        n = self._harvest(block=len(self._pending) > self._pipeline)
+        dt = time.time() - t0
+        self._step_ema_s = (dt if self._step_ema_s is None
+                            else 0.8 * self._step_ema_s + 0.2 * dt)
+        return n
 
     def _harvest(self, block: bool = False) -> int:
         """Materialize finished steps off the pipeline head.  ``block``
@@ -860,14 +928,22 @@ class SlabEngine:
             bytes_d = sweep_b * doc_iters + once_b
             lat = t_done - req.t_submit
             theta_d = th[s]
-            if self.cache is not None and req.digest is not None:
+            # NaN/Inf quarantine: one poisoned document retires with an
+            # error flag (and never enters the cache) instead of crashing
+            # the slab or serving garbage to a repeat request (§17)
+            finite = bool(np.isfinite(theta_d).all())
+            if not finite:
+                self._quarantined += 1
+            if (self.cache is not None and req.digest is not None
+                    and finite):
                 self.cache.put(req.tenant, req.digest, out.phi_version,
                                theta_d)
             self._done.append(ServeResult(
                 req_id=req.req_id, theta=theta_d, latency_s=lat,
                 bucket=s, iters=doc_iters, mean_r=float(rn[s]),
                 oov_tokens=req.oov, phi_version=out.phi_version,
-                comm_bytes=bytes_d, cached=False, tenant=req.tenant))
+                comm_bytes=bytes_d, cached=False, tenant=req.tenant,
+                error=None if finite else "nonfinite_theta"))
             self._latencies.append(lat)
             self._iters_sum += doc_iters
             if req.warm is not None:
@@ -1029,6 +1105,16 @@ class SlabEngine:
             "warm_starts": self._warm_served,
             "retrain_batches": (self.trigger.emitted if self.trigger
                                 else 0),
+            # graceful-degradation counters (§17): sheds are refused at
+            # submit and never enter served/latency stats
+            "shed": self._shed_count,
+            "shed_frac": (self._shed_count
+                          / max(1, self._shed_count + self._served
+                                + self.in_flight())),
+            "quarantined": self._quarantined,
+            "admission_slo_s": self.admission_slo_s,
+            "step_ema_s": (self._step_ema_s if self._step_ema_s is not None
+                           else 0.0),
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats()

@@ -84,3 +84,71 @@ def test_elastic_restore_via_device_put(tmp_path):
                              shardings={"params": sh})
     np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
                                   np.asarray(tree["w"]))
+
+
+# ------------------------------------------------- torn-write robustness (§17)
+
+def test_restore_latest_falls_back_past_torn_newest(tmp_path):
+    """Garbage written over the newest retained data.npz (a torn write
+    below the atomic rename) warns loudly and restores the PREVIOUS
+    retained step instead of crashing the resume."""
+    tree = make_tree(jax.random.PRNGKey(5))
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, {"t": tree}, extra={"next_step": s})
+    with open(tmp_path / "step_0000003" / "data.npz", "wb") as f:
+        f.write(b"\x00garbage, not a zip\xff" * 7)
+    assert ckpt.verify_step(str(tmp_path), 3) is not None
+    assert ckpt.verify_step(str(tmp_path), 2) is None
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        got = ckpt.restore_latest(str(tmp_path), {"t": tree})
+    assert got is not None
+    out, extra, step = got
+    assert step == 2 and extra == {"next_step": 2}
+    np.testing.assert_array_equal(np.asarray(out["t"]["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_restore_latest_detects_truncated_leaf_bytes(tmp_path):
+    """A data.npz that still opens as a zip but whose leaf bytes disagree
+    with the manifest (truncation) is corruption, not a template error."""
+    tree = make_tree(jax.random.PRNGKey(6))
+    ckpt.save(str(tmp_path), 1, {"t": tree})
+    ckpt.save(str(tmp_path), 2, {"t": tree})
+    trunc = {f"leaf_{i}": np.zeros(1, np.uint8) for i in range(3)}
+    np.savez(str(tmp_path / "step_0000002" / "data.npz"), **trunc)
+    bad = ckpt.verify_step(str(tmp_path), 2)
+    assert bad is not None and "torn write" in bad
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        _, _, step = ckpt.restore_latest(str(tmp_path), {"t": tree})
+    assert step == 1
+
+
+def test_restore_latest_all_corrupt_returns_none(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(7))
+    ckpt.save(str(tmp_path), 1, {"t": tree})
+    with open(tmp_path / "step_0000001" / "manifest.json", "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert ckpt.restore_latest(str(tmp_path), {"t": tree}) is None
+
+
+def test_template_mismatch_on_intact_step_still_raises(tmp_path):
+    """Fallback is for CORRUPTION only: a caller-side template bug on an
+    intact checkpoint must raise, never silently restore an older step."""
+    tree = make_tree(jax.random.PRNGKey(8))
+    ckpt.save(str(tmp_path), 1, {"t": tree})
+    ckpt.save(str(tmp_path), 2, {"t": tree})
+    bad = {"t": {"a": jnp.zeros((9, 4)), "nest": tree["nest"]}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_latest(str(tmp_path), bad)
+
+
+def test_peek_extra_skips_unreadable_newest_manifest(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(9))
+    ckpt.save(str(tmp_path), 1, {"t": tree}, extra={"next_step": 1})
+    ckpt.save(str(tmp_path), 2, {"t": tree}, extra={"next_step": 2})
+    with open(tmp_path / "step_0000002" / "manifest.json", "w") as f:
+        f.write("{broken")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        extra, step = ckpt.peek_extra(str(tmp_path))
+    assert step == 1 and extra == {"next_step": 1}

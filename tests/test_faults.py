@@ -1,0 +1,384 @@
+"""Chaos hardening (ISSUE 10, DESIGN.md §17): deterministic fault
+injection, PS retry/failover, elastic worker membership, and the slab's
+graceful degradation.
+
+The load-bearing claim: at ``--staleness 0`` the committed phi under ANY
+eventually-delivering fault schedule (drops, duplicates, delays,
+partitions, one crash/restart) is BIT-EXACT with the clean run — every
+push applies exactly once (sequence-number idempotence) in the same
+version order, and a restarted shard rebuilds from the synced snapshot
+plus the client's retained-delta replay (same floats, same add order).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.dist.faults import (ChaosTransport, FaultInjectedError,
+                               FaultPlan, _decision_bits)
+from repro.dist.paramserver import ParamServer, PSClient, SimTransport
+from repro.launch.lda_train import default_args, train_loop
+
+
+# -------------------------------------------------------------- FaultPlan
+
+def test_fault_plan_decisions_are_pure_and_seeded():
+    a = FaultPlan(seed=3, drop_push=0.5, dup_push=0.5, delay_prob=0.5,
+                  delay_s=0.1)
+    b = FaultPlan(seed=3, drop_push=0.5, dup_push=0.5, delay_prob=0.5,
+                  delay_s=0.1)
+    fates_a = [a.decide("push", i) for i in range(64)]
+    assert fates_a == [b.decide("push", i) for i in range(64)]
+    # a different seed reshuffles fates; push and pull draws are distinct
+    c = FaultPlan(seed=4, drop_push=0.5)
+    assert any(a.decide("push", i).drop != c.decide("push", i).drop
+               for i in range(64))
+    assert not np.array_equal(_decision_bits(3, "push", 7),
+                              _decision_bits(3, "pull", 7))
+    # a retry is a NEW op index: some dropped op's successor survives
+    assert any(f.drop for f in fates_a) and any(not f.drop for f in fates_a)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="drop_push"):
+        FaultPlan(drop_push=1.0)            # total drop = no eventual delivery
+    with pytest.raises(ValueError, match="together"):
+        FaultPlan(crash_server=1)
+    with pytest.raises(ValueError, match="partition"):
+        FaultPlan(partitions=(("push", 5, 2),))
+    with pytest.raises(ValueError, match="SERVER@PUSHOP"):
+        FaultPlan.parse_crash("nonsense")
+    assert FaultPlan.parse_crash("1@6") == (1, 6)
+    assert FaultPlan.parse_crash("") == (None, None)
+    assert not FaultPlan().active
+    assert FaultPlan(drop_pull=0.1).active
+
+
+def test_partition_window_drops_every_op_inside():
+    plan = FaultPlan(partitions=(("push", 2, 5),))
+    assert [plan.decide("push", i).drop for i in range(7)] == \
+        [False, False, True, True, True, False, False]
+    assert not plan.decide("pull", 3).drop
+
+
+# -------------------------------------------- transport-level parity
+
+def _run_workload(transport, server, *, n_batches=8, w=12, k=3, seed=0,
+                  sync_at=(), staleness=0, client_id="w0"):
+    """A tiny deterministic push/pull workload; returns (client, phi)."""
+    rng = np.random.default_rng(seed)
+    phi = jnp.zeros((w, k))
+    client = PSClient(transport, staleness=staleness, client_id=client_id,
+                      retry_deadline_s=10.0, backoff0_s=1e-4,
+                      backoff_max_s=2e-3)
+    for m in range(1, n_batches + 1):
+        rows = np.sort(rng.choice(w, size=4, replace=False))
+        phi = client.begin_batch(m, rows, phi)
+        delta = rng.normal(size=(4, k)).astype(np.float32)
+        phi = phi.at[jnp.asarray(rows)].add(jnp.asarray(delta))
+        client.end_batch(m, phi, rows)
+        if m in sync_at:
+            client.flush()
+            server.mark_synced()
+            client.mark_durable()
+    client.flush()
+    return client
+
+
+def _committed_phi(plan=None, **kw):
+    server = ParamServer(np.zeros((12, 3), np.float32), num_servers=3,
+                         pull_timeout=5.0)
+    inner = SimTransport(server)
+    transport = inner if plan is None else ChaosTransport(inner, plan)
+    client = _run_workload(transport, server, **kw)
+    phi, version = server.snapshot()
+    stats = client.stats()
+    transport.close()
+    return phi, version, stats, server, transport
+
+
+def test_drops_retry_to_bitexact_parity():
+    clean, v0, _, _, _ = _committed_phi()
+    plan = FaultPlan(seed=7, drop_push=0.4, drop_pull=0.4)
+    chaos, v1, stats, server, _ = _committed_phi(plan=plan)
+    assert v1 == v0
+    np.testing.assert_array_equal(chaos, clean)
+    assert stats["retries"] > 0
+    assert server.duplicates_dropped == 0   # a dropped push never arrived
+
+
+def test_duplicates_are_deduped_bitexact():
+    clean, _, _, _, _ = _committed_phi()
+    plan = FaultPlan(seed=1, dup_push=1.0)  # EVERY push delivered twice
+    chaos, _, _, server, t = _committed_phi(plan=plan)
+    np.testing.assert_array_equal(chaos, clean)
+    # a duplicated push dedups once per shard it addressed, so the
+    # shard-level counter is at least the op-level event count
+    assert server.duplicates_dropped >= t.event_counts()["duplicate"] > 0
+
+
+def test_crash_restart_replay_reaches_bitexact_parity():
+    clean, v0, _, _, _ = _committed_phi(sync_at=(4,))
+    plan = FaultPlan(seed=2, drop_push=0.25, dup_push=0.25,
+                     crash_server=1, crash_at_push=6)
+    chaos, v1, stats, server, t = _committed_phi(plan=plan, sync_at=(4,))
+    assert v1 == v0
+    np.testing.assert_array_equal(chaos, clean)
+    assert stats["recoveries"] >= 1 and stats["replayed_pushes"] > 0
+    events = [e["event"] for e in server.recovery_log]
+    assert events[:2] == ["crash", "restart"] and "recovered" in events
+    counts = t.event_counts()
+    assert counts["crash"] == 1 and counts["restart"] == 1
+
+
+def test_partitioned_client_retries_through_the_window():
+    clean, _, _, _, _ = _committed_phi()
+    plan = FaultPlan(partitions=(("push", 1, 4), ("pull", 2, 5)))
+    chaos, _, stats, _, _ = _committed_phi(plan=plan)
+    np.testing.assert_array_equal(chaos, clean)
+    assert stats["retries"] > 0
+
+
+def test_retry_deadline_raises_a_named_timeout():
+    server = ParamServer(np.zeros((6, 2), np.float32), pull_timeout=0.2)
+    # a permanent partition: every push fails until the deadline
+    plan = FaultPlan(partitions=(("push", 0, 10**9),))
+    t = ChaosTransport(SimTransport(server), plan)
+    client = PSClient(t, staleness=0, client_id="w9",
+                      retry_deadline_s=0.05, backoff0_s=1e-3,
+                      backoff_max_s=1e-2)
+    rows = np.array([1])
+    phi = client.begin_batch(1, rows, jnp.zeros((6, 2)))
+    with pytest.raises(TimeoutError, match="w9"):
+        client.end_batch(1, phi.at[jnp.asarray(rows)].add(1.0), rows)
+        client.flush()
+    t.close()
+
+
+def test_retry_wire_bytes_are_billed_on_top_of_clean():
+    clean_t_bytes = _committed_phi()[4].total_bytes
+    # drops die at the injection boundary (the payload never reaches a
+    # server), so the SERVER-side wire matches clean and the retry cost
+    # shows up in the client's host-side retry meter instead
+    plan = FaultPlan(seed=7, drop_push=0.4, drop_pull=0.4)
+    _, _, stats, _, t = _committed_phi(plan=plan)
+    assert stats["retry_wire_bytes"] > 0
+    assert t.total_bytes == clean_t_bytes
+    # duplicates DO reach the servers: measured wire exceeds clean
+    _, _, _, _, t2 = _committed_phi(plan=FaultPlan(seed=1, dup_push=1.0))
+    assert t2.total_bytes > clean_t_bytes
+
+
+# ----------------------------------------- eventual-delivery property
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    @settings(max_examples=10, deadline=None)
+    @given(drop=st.floats(0.0, 0.6), dup=st.floats(0.0, 1.0),
+           seed=st.integers(0, 1000),
+           crash=st.sampled_from([None, (0, 3), (2, 5)]))
+    def test_any_eventually_delivering_schedule_is_bitexact(drop, dup,
+                                                            seed, crash):
+        """The §17 pin as a property: any (drop < 1, dup, crash/restart)
+        schedule commits the SAME phi as the clean run at S=0."""
+        clean, v0, _, _, _ = _committed_phi(n_batches=5, sync_at=(2,))
+        plan = FaultPlan(seed=seed, drop_push=drop, drop_pull=drop,
+                         dup_push=dup,
+                         crash_server=None if crash is None else crash[0],
+                         crash_at_push=None if crash is None else crash[1])
+        chaos, v1, _, _, _ = _committed_phi(plan=plan, n_batches=5,
+                                            sync_at=(2,))
+        assert v1 == v0
+        np.testing.assert_array_equal(chaos, clean)
+
+
+# ------------------------------------------------ driver integration
+
+def _common(**kw):
+    base = dict(minibatches=8, docs_per_batch=16, vocab=200, topics=8,
+                lambda_k=4, inner_iters=5, log_every=0, shards=2, seed=11,
+                backend="ps", staleness=0, ps_servers=3)
+    base.update(kw)
+    return base
+
+
+def test_driver_rejects_chaos_without_ps_backend():
+    with pytest.raises(ValueError, match="backend ps"):
+        train_loop(default_args(**_common(backend="sim"), chaos_drop=0.1))
+    with pytest.raises(ValueError, match="staleness 0"):
+        train_loop(default_args(**_common(staleness=2),
+                                elastic_events="join:w1@2"))
+    # server-crash recovery replays ONE client's retained log, so the
+    # driver refuses crash schedules with multiple/elastic workers
+    with pytest.raises(ValueError, match="single"):
+        train_loop(default_args(**_common(), chaos_crash="1@6",
+                                elastic_workers="w0,w1"))
+
+
+@pytest.mark.chaos
+def test_driver_chaos_run_is_bitexact_with_clean_ps():
+    """The acceptance pin: a seeded ChaosTransport schedule with drops,
+    duplicates and one server crash/restart reaches bit-exact phi parity
+    with the clean PS run at --staleness 0."""
+    clean = train_loop(default_args(**_common()))
+    chaos = train_loop(default_args(**_common(), chaos_seed=5,
+                                    chaos_drop=0.3, chaos_dup=0.3,
+                                    chaos_crash="1@6",
+                                    chaos_restart_after=2))
+    np.testing.assert_array_equal(np.asarray(chaos["phi_acc"]),
+                                  np.asarray(clean["phi_acc"]))
+    np.testing.assert_array_equal(chaos["mean_r"], clean["mean_r"])
+    assert chaos["ps_retries"] > 0
+    assert chaos["chaos_events"].get("drop", 0) > 0
+    assert chaos["chaos_events"].get("crash", 0) == 1
+    assert [e["event"] for e in chaos["ps_recovery_log"]].count(
+        "recovered") >= 1
+
+
+@pytest.mark.chaos
+def test_driver_elastic_membership_is_bitexact_with_clean_ps():
+    """Workers join/leave mid-stream and one crashes right after its
+    batch: the survivor replays the un-pushed segment, and the committed
+    trajectory matches the static single-worker run exactly (S=0: the
+    same deltas commit in the same order, whoever pushes them)."""
+    kw = _common(minibatches=12)
+    clean = train_loop(default_args(**kw))
+    elastic = train_loop(default_args(
+        **kw, elastic_workers="w0,w1",
+        elastic_events="join:w2@3,leave:w0@6,crash:w2@9"))
+    np.testing.assert_array_equal(np.asarray(elastic["phi_acc"]),
+                                  np.asarray(clean["phi_acc"]))
+    np.testing.assert_array_equal(elastic["mean_r"], clean["mean_r"])
+    # w0 left, w2 crashed: only w1 is still an active member at the end
+    assert elastic["ps_workers"] == ["w1"]
+    kinds = [e["event"] for e in elastic["elastic_log"]]
+    assert kinds.count("join") == 1 and kinds.count("leave") == 1
+    assert kinds.count("crash") == 1
+    crash = next(e for e in elastic["elastic_log"] if e["event"] == "crash")
+    assert crash["worker"] == "w2"
+
+
+# ------------------------------------------------ slab degradation
+
+def _tiny_engine(**kw):
+    from repro.core.types import LDAConfig
+    from repro.serve import SlabEngine
+
+    cfg = LDAConfig(vocab_size=32, num_topics=4, alpha=0.1, beta=0.01)
+    phi = np.abs(np.random.default_rng(0).normal(
+        size=(32, 4))).astype(np.float32) + 0.1
+    return SlabEngine(phi, cfg, slots=4, slot_len=8, sweeps_per_step=2,
+                      fold_iters=8, residual_tol=1e-9, warmup=True, **kw)
+
+
+def test_slab_sheds_typed_result_when_slo_blown():
+    from repro.serve import Shed
+
+    eng = _tiny_engine(admission_slo_s=1e-9)
+    rng = np.random.default_rng(1)
+    doc = lambda: (rng.integers(0, 32, size=6).astype(np.int32),
+                   np.ones(6, np.float32))
+    # cold engine (no measured step yet) always admits
+    assert isinstance(eng.submit(doc()), int)
+    eng.step()
+    sheds = []
+    for _ in range(12):
+        out = eng.submit(doc())
+        if isinstance(out, Shed):
+            sheds.append(out)
+        eng.step()
+    assert sheds, "an impossible SLO must shed under sustained load"
+    s = sheds[0]
+    assert s.est_wait_s > s.slo_s == pytest.approx(1e-9)
+    eng.drain()
+    st = eng.stats()
+    assert st["shed"] == len(sheds) and 0 < st["shed_frac"] < 1
+    # served results never include sheds
+    assert st["served"] + st["shed"] == 13
+
+
+def test_slab_without_slo_never_sheds():
+    eng = _tiny_engine()
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        assert isinstance(eng.submit(
+            (rng.integers(0, 32, size=6).astype(np.int32),
+             np.ones(6, np.float32))), int)
+    res = eng.drain()
+    assert len(res) == 10 and all(r.error is None for r in res)
+    assert eng.stats()["shed"] == 0
+
+
+def test_slab_quarantines_nonfinite_input():
+    eng = _tiny_engine()
+    bad = (np.arange(4, dtype=np.int32),
+           np.array([1.0, np.nan, 1.0, np.inf], np.float32))
+    rid = eng.submit(bad)
+    res = eng.poll()
+    assert len(res) == 1 and res[0].req_id == rid
+    assert res[0].error == "nonfinite_input"
+    # the quarantine theta is the finite flat prior, not garbage
+    assert np.isfinite(res[0].theta).all()
+    assert eng.stats()["quarantined"] == 1
+    # the slab stays healthy: a normal doc still serves cleanly
+    eng.submit((np.arange(4, dtype=np.int32), np.ones(4, np.float32)))
+    ok = eng.drain()
+    assert len(ok) == 1 and ok[0].error is None
+
+
+def test_slab_quarantines_nonfinite_theta_and_skips_cache():
+    from repro.core.types import LDAConfig
+    from repro.serve import SlabEngine
+
+    cfg = LDAConfig(vocab_size=16, num_topics=4, alpha=0.1, beta=0.01)
+    phi = np.full((16, 4), 0.5, np.float32)
+    phi[3] = np.nan                       # one poisoned phi row
+    eng = SlabEngine(phi, cfg, slots=2, slot_len=4, sweeps_per_step=2,
+                     fold_iters=4, residual_tol=1e-9, warmup=False,
+                     theta_cache=8)
+    doc = (np.array([3, 5], np.int32), np.ones(2, np.float32))
+    eng.submit(doc, tenant="t")
+    res = eng.drain()
+    assert len(res) == 1
+    assert res[0].error == "nonfinite_theta"
+    assert eng.stats()["quarantined"] == 1
+    # the poisoned theta never entered the cache: a repeat request is a
+    # miss, not a cached NaN serve
+    eng.submit(doc, tenant="t")
+    res2 = eng.drain()
+    assert res2[0].cached is False
+
+
+# ------------------------------------------------ prefetch shutdown
+
+def test_prefetch_worker_error_warns_when_masked_by_shutdown():
+    from repro.data.batching import prefetched
+
+    def gen_factory():
+        yield 1
+        raise RuntimeError("boom in worker")
+
+    it = prefetched(gen_factory, prefetch=2)
+    assert next(it) == 1
+    with pytest.warns(RuntimeWarning, match="masked by consumer shutdown"):
+        it.close()                        # GeneratorExit path
+
+
+def test_prefetch_worker_error_raises_when_fully_consumed():
+    from repro.data.batching import prefetched
+
+    def gen_factory():
+        yield 1
+        raise RuntimeError("boom in worker")
+
+    it = prefetched(gen_factory, prefetch=2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="boom in worker"):
+        list(it)

@@ -1,14 +1,18 @@
 """Pull-based power-slice parameter server (ISSUE 8, DESIGN.md §15):
 row sharding, per-link push/pull byte accounting, bounded-staleness
 semantics, S=0 equivalence with the allreduce backend, and PS
-crash-resume through the server-synced checkpoint manifest."""
+crash-resume through the server-synced checkpoint manifest.  Chaos
+hardening (ISSUE 10, DESIGN.md §17): sequence-number push idempotence,
+out-of-order commit monotonicity, diagnostic pull timeouts, and the
+shard crash/restart/replay state machine."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.dist.paramserver import (JaxDistributedTransport, ParamServer,
-                                    PSClient, RowShards, SimTransport,
+                                    PSClient, RowShards,
+                                    ServerUnavailableError, SimTransport,
                                     sliced_sum, touched_rows_of)
 from repro.launch.lda_train import default_args, train_loop
 
@@ -87,6 +91,96 @@ def test_bf16_wire_halves_value_bytes_and_round_trips():
     want = np.float32(np.asarray(v, jnp.bfloat16))
     np.testing.assert_array_equal(vals, np.full((1, 4), want))
     t.close()
+
+
+def test_duplicate_push_is_idempotent():
+    """A (client_id, seq) tag applies at most once per shard lifetime:
+    a duplicated delivery (ChaosTransport dup, or a retry racing its
+    original) never double-counts the delta."""
+    server = ParamServer(np.zeros((4, 2), np.float32))
+    rows = np.array([1])
+    delta = np.full((1, 2), 3.0, np.float32)
+    assert server.apply_push(0, rows, delta, client_id="w0", seq=0)
+    assert not server.apply_push(0, rows, delta, client_id="w0", seq=0)
+    server.commit(1)
+    vals, _ = server.serve_pull(0, rows, min_version=1)
+    np.testing.assert_array_equal(vals, delta)     # applied ONCE
+    assert server.duplicates_dropped == 1
+    # a different client's seq 0 is a different tag — both apply
+    assert server.apply_push(0, rows, delta, client_id="w1", seq=0)
+    # untagged pushes (legacy/positional callers) are never deduped
+    assert server.apply_push(0, rows, delta)
+    assert server.apply_push(0, rows, delta)
+
+
+def test_out_of_order_delta_commit_is_monotonic():
+    """Deltas may land out of version order (retries reorder the wire);
+    the committed watermark is monotonic and the summed statistic is
+    order-independent."""
+    server = ParamServer(np.zeros((4, 2), np.float32))
+    rows = np.array([2])
+    # version 2's delta arrives before version 1's
+    server.apply_push(0, rows, np.full((1, 2), 2.0, np.float32),
+                      client_id="w0", seq=1)
+    server.commit(2)
+    server.apply_push(0, rows, np.full((1, 2), 1.0, np.float32),
+                      client_id="w0", seq=0)
+    server.commit(1)                               # stale: must not regress
+    assert server.committed == 2
+    vals, ver = server.serve_pull(0, rows, min_version=2)
+    np.testing.assert_array_equal(vals, [[3.0, 3.0]])
+    assert ver == 2
+
+
+def test_pull_timeout_names_shard_rows_and_version():
+    """The satellite contract: a timed-out pull says WHICH shard, WHICH
+    row range and WHICH version it was waiting for — not a bare wait
+    failure."""
+    server = ParamServer(np.zeros((8, 2), np.float32), num_servers=2,
+                         pull_timeout=0.05)
+    with pytest.raises(TimeoutError, match=r"server shard 1.*rows \[4, 8\)"
+                                           r".*>= 7"):
+        server.serve_pull(1, np.array([5]), min_version=7)  # default timeout
+
+
+def test_crash_restart_replay_state_machine():
+    """crash() loses the shard's rows + dedup memory; restart() reloads
+    the last synced snapshot and fences pulls until mark_recovered()."""
+    server = ParamServer(np.zeros((4, 2), np.float32), pull_timeout=0.05)
+    rows = np.array([0])
+    server.apply_push(0, rows, np.ones((1, 2), np.float32),
+                      client_id="w0", seq=0)
+    server.commit(1)
+    server.mark_synced()                           # fence: version 1 durable
+    server.apply_push(0, rows, np.ones((1, 2), np.float32),
+                      client_id="w0", seq=1)       # post-fence delta
+    server.commit(2)
+    server.crash(0)
+    with pytest.raises(ServerUnavailableError, match="shard 0"):
+        server.apply_push(0, rows, np.ones((1, 2), np.float32))
+    # a pull against a down shard fails FAST (no timeout burn)
+    with pytest.raises(ServerUnavailableError):
+        server.serve_pull(0, rows, min_version=1)
+    server.restart(0)
+    assert server.needs_replay() == frozenset({0})
+    # fenced: the shard holds only the synced snapshot until replay
+    with pytest.raises(TimeoutError, match="replay"):
+        server.serve_pull(0, rows, min_version=2)
+    # the replay fence also rejects ORDINARY pushes (retryable): an
+    # in-flight retry landing before the replayed backlog would re-sum
+    # the rows in a different order (float add is not associative)
+    with pytest.raises(ServerUnavailableError, match="replaying"):
+        server.apply_push(0, rows, np.ones((1, 2), np.float32),
+                          client_id="w0", seq=1)
+    # client replays its retained post-fence delta — dedup memory died
+    # with the shard, so the replayed (w0, 1) tag applies exactly once
+    assert server.apply_push(0, rows, np.ones((1, 2), np.float32),
+                             client_id="w0", seq=1, replay=True)
+    server.mark_recovered(0)
+    vals, _ = server.serve_pull(0, rows, min_version=2)
+    np.testing.assert_array_equal(vals, [[2.0, 2.0]])
+    events = [e["event"] for e in server.recovery_log]
+    assert events == ["crash", "restart", "recovered"]
 
 
 def test_jax_distributed_transport_refuses_uninitialized():
